@@ -1,0 +1,51 @@
+//! Estimate all 12 Test-set-1 networks (paper Table 2) on both simulated
+//! devices with all four model families — the data behind Figs. 10/11 and
+//! Table 5.
+//!
+//! ```sh
+//! cargo run --release --example estimate_zoo
+//! ```
+
+use annette::estim::estimator::Estimator;
+use annette::hw::device::Device;
+use annette::metrics::{mae, mape};
+use annette::models::layer::ModelKind;
+use annette::repro::campaign::{fit_device, DeviceChoice};
+use annette::zoo;
+
+fn main() {
+    let out = std::path::Path::new("out");
+    for choice in [DeviceChoice::Dpu, DeviceChoice::Vpu] {
+        let fitted = fit_device(choice, 5, Some(out)).expect("campaign");
+        let est = Estimator::new(&fitted.model);
+        let nets = zoo::table2();
+        let truth: Vec<f64> = nets
+            .iter()
+            .map(|e| fitted.device.profile(&e.graph, 20, 7).total_ms())
+            .collect();
+        println!("\n=== {} ===", choice.paper_name());
+        println!(
+            "{:<14} {:>10} {:>10} {:>10} {:>10} {:>10}",
+            "network", "measured", "roofline", "refined", "stat", "mixed"
+        );
+        let mut per_kind: Vec<Vec<f64>> = vec![Vec::new(); 4];
+        for (i, e) in nets.iter().enumerate() {
+            let mut row = format!("{:<14} {:>10.2}", e.name, truth[i]);
+            for (ki, kind) in ModelKind::ALL.iter().enumerate() {
+                let t = est.estimate_with(&e.graph, *kind).total_ms();
+                per_kind[ki].push(t);
+                row.push_str(&format!(" {t:>10.2}"));
+            }
+            println!("{row}");
+        }
+        println!("\n{:<18} {:>10} {:>9}", "model", "MAE(ms)", "MAPE");
+        for (ki, kind) in ModelKind::ALL.iter().enumerate() {
+            println!(
+                "{:<18} {:>10.2} {:>8.2}%",
+                kind.as_str(),
+                mae(&per_kind[ki], &truth),
+                mape(&per_kind[ki], &truth)
+            );
+        }
+    }
+}

@@ -1,0 +1,63 @@
+//! The complete ANNETTE pipeline, end to end, exactly as Fig. 2 draws it:
+//!
+//!   benchmark phase: Benchmark Tool → layer data + mapping data
+//!                    Model Generator → platform model (persisted JSON)
+//!   estimation phase: network description graph (JSON) → Estimation Tool
+//!                    → estimated time + layer table + predicted exec graph
+//!
+//! ```sh
+//! cargo run --release --example full_pipeline
+//! ```
+
+use annette::coordinator::orchestrator::{default_threads, run_campaign};
+use annette::estim::estimator::Estimator;
+use annette::graph::serial;
+use annette::hw::device::Device;
+use annette::hw::dpu::DpuDevice;
+use annette::models::platform::PlatformModel;
+
+fn main() {
+    let dir = std::path::PathBuf::from("out/full_pipeline");
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // ---- Benchmark phase -------------------------------------------------
+    let dev = DpuDevice::zcu102();
+    println!("[1/5] benchmark campaign on {} ...", dev.spec().name);
+    let t0 = std::time::Instant::now();
+    let bench = run_campaign(&dev, 5, default_threads());
+    println!(
+        "      {} layer records, {} mapping samples ({:.1}s)",
+        bench.micro.records.len(),
+        bench.mapping.samples.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    bench.save(dir.join("bench.json")).unwrap();
+
+    println!("[2/5] fitting platform model ...");
+    let model = PlatformModel::fit(&dev.spec(), &bench);
+    model.save(dir.join("model.json")).unwrap();
+
+    // ---- Estimation phase (from persisted artifacts only) ----------------
+    println!("[3/5] reloading model from JSON ...");
+    let model = PlatformModel::load(dir.join("model.json")).unwrap();
+
+    println!("[4/5] writing + reading a network description graph ...");
+    let net = annette::zoo::resnet::resnet50(224, 1000);
+    serial::save(&net, dir.join("resnet50.json")).unwrap();
+    let net = serial::load(dir.join("resnet50.json")).unwrap();
+
+    println!("[5/5] estimating ...");
+    let est = Estimator::new(&model).estimate(&net);
+    println!("\n{}", Estimator::render_table(&est));
+    let truth = dev.profile(&net, 20, 0).total_ms();
+    println!("measured on device: {truth:.3} ms");
+    println!(
+        "mixed-model error : {:+.2}%",
+        (est.total_ms() - truth) / truth * 100.0
+    );
+    println!(
+        "\npredicted execution graph: {} units for {} layers (fusion reconstructed)",
+        est.units.len(),
+        net.len()
+    );
+}

@@ -1,0 +1,84 @@
+//! End-to-end driver: hardware-aware NAS screening — the paper's motivating
+//! workload (§7.5, conclusion).
+//!
+//! Samples hundreds of NASBench-style candidate architectures, scores them
+//! all with the stacked mixed model through the **AOT-compiled PJRT batch
+//! path** (JAX + Pallas artifact; Python never runs here), selects the
+//! fastest candidates, and then validates the screening against simulator
+//! ground truth: fidelity (Spearman ρ), accuracy (MAPE), and screening
+//! throughput.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example nas_search
+//! ```
+
+use std::time::Instant;
+
+use annette::estim::batch::BatchEstimator;
+use annette::estim::estimator::Estimator;
+use annette::hw::device::Device;
+use annette::metrics::{mape, spearman_rho};
+use annette::repro::campaign::{fit_device, DeviceChoice};
+use annette::zoo::nasbench;
+
+const CANDIDATES: usize = 300;
+
+fn main() {
+    let out = std::path::Path::new("out");
+    let fitted = fit_device(DeviceChoice::Vpu, 5, Some(out)).expect("campaign");
+
+    println!("sampling {CANDIDATES} NASBench candidates ...");
+    let nets = nasbench::sample_networks(CANDIDATES, 2024);
+
+    // Score all candidates through the PJRT batch path (falls back to the
+    // native estimator when the artifact is missing).
+    let artifact = std::path::Path::new("artifacts/mixed_batch.hlo.txt");
+    let t0 = Instant::now();
+    let scores: Vec<f64> = if artifact.exists() {
+        let batch = BatchEstimator::new(&fitted.model, artifact).expect("batch estimator");
+        batch.estimate_networks(&nets).expect("batch estimate")
+    } else {
+        eprintln!("artifact missing (run `make artifacts`) — using native path");
+        let est = Estimator::new(&fitted.model);
+        nets.iter().map(|g| est.estimate(g).total_ms()).collect()
+    };
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "scored {} candidates in {:.3}s ({:.0} networks/s)",
+        nets.len(),
+        dt,
+        nets.len() as f64 / dt
+    );
+
+    // Screening: keep the predicted-fastest decile.
+    let mut order: Vec<usize> = (0..nets.len()).collect();
+    order.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap());
+    let keep = &order[..nets.len() / 10];
+    println!("\npredicted-fastest decile:");
+    for &i in keep.iter().take(10) {
+        println!("  {:<14} predicted {:>8.2} ms", nets[i].name, scores[i]);
+    }
+
+    // Validation against ground truth (the expensive measurement NAS wants
+    // to avoid — here we can afford it for every candidate).
+    let truth: Vec<f64> = nets
+        .iter()
+        .map(|g| fitted.device.profile(g, 20, 0x7E57).total_ms())
+        .collect();
+    let rho = spearman_rho(&scores, &truth);
+    let err = mape(&scores, &truth);
+    println!("\nfidelity (Spearman rho) over all candidates: {rho:.3}");
+    println!("accuracy (MAPE): {err:.2}%");
+
+    // How many of the predicted decile are in the true decile?
+    let mut torder: Vec<usize> = (0..nets.len()).collect();
+    torder.sort_by(|&a, &b| truth[a].partial_cmp(&truth[b]).unwrap());
+    let true_decile: std::collections::HashSet<usize> =
+        torder[..nets.len() / 10].iter().copied().collect();
+    let hits = keep.iter().filter(|i| true_decile.contains(i)).count();
+    println!(
+        "screening precision: {hits}/{} of the predicted decile are truly in the fastest decile",
+        keep.len()
+    );
+    assert!(rho > 0.9, "fidelity collapsed: rho = {rho}");
+}

@@ -1,0 +1,54 @@
+//! Quickstart: benchmark a (simulated) device, fit the stacked model, and
+//! estimate a network you define with the builder API.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use annette::coordinator::orchestrator::{default_threads, run_campaign};
+use annette::hw::device::Device;
+use annette::hw::dpu::DpuDevice;
+use annette::models::layer::ModelKind;
+use annette::models::platform::PlatformModel;
+use annette::prelude::*;
+
+fn main() {
+    // 1. The target device — the simulated ZCU102 DPU.
+    let dev = DpuDevice::zcu102();
+
+    // 2. Benchmark it (micro-kernel sweeps + multi-layer fusion probes) and
+    //    fit the platform model: mapping models + per-layer-type roofline /
+    //    refined-roofline / statistical / mixed models.
+    println!("benchmarking {} ...", dev.spec().name);
+    let data = run_campaign(&dev, 42, default_threads());
+    let model = PlatformModel::fit(&dev.spec(), &data);
+
+    // 3. Define a network with the builder API.
+    let mut b = GraphBuilder::new("my_net");
+    let input = b.input(224, 224, 3);
+    let mut x = b.conv_bn_relu(input, 32, 3, 2);
+    x = b.maxpool(x, 2, 2);
+    for filters in [64, 128, 256] {
+        x = b.conv_bn_relu(x, filters, 3, 1);
+        x = b.maxpool(x, 2, 2);
+    }
+    b.classifier(x, 1000);
+    let net = b.finish().expect("valid graph");
+
+    // 4. Estimate — without compiling or executing the network.
+    let est = Estimator::new(&model).estimate(&net);
+    println!("\n{}", Estimator::render_table(&est));
+
+    // 5. Compare against the simulator's ground truth and the other models.
+    let truth = dev.profile(&net, 20, 0).total_ms();
+    println!("measured on device : {truth:.4} ms");
+    for kind in ModelKind::ALL {
+        let e = Estimator::new(&model).estimate_with(&net, kind);
+        println!(
+            "{:<18}: {:>8.4} ms ({:+.1}%)",
+            kind.as_str(),
+            e.total_ms(),
+            (e.total_ms() - truth) / truth * 100.0
+        );
+    }
+}

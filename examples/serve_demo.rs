@@ -1,0 +1,43 @@
+//! The estimation service in action: a resident model answering JSON
+//! requests — the deployment form of the Estimation Tool.
+//!
+//! ```sh
+//! cargo run --release --example serve_demo
+//! ```
+
+use annette::coordinator::orchestrator::{default_threads, run_campaign};
+use annette::coordinator::Service;
+use annette::graph::serial::graph_to_value;
+use annette::hw::device::Device;
+use annette::hw::vpu::VpuDevice;
+use annette::models::platform::PlatformModel;
+
+fn main() {
+    let dev = VpuDevice::ncs2();
+    println!("fitting model for {} ...", dev.spec().name);
+    let bench = run_campaign(&dev, 5, default_threads());
+    let model = PlatformModel::fit(&dev.spec(), &bench);
+    let svc = Service::new(model);
+
+    // Client side: line-delimited JSON requests.
+    let net = annette::zoo::mobilenet::mobilenet_v1(224, 1000);
+    let requests = vec![
+        r#"{"op":"models"}"#.to_string(),
+        format!(
+            r#"{{"op":"estimate","kind":"mixed","network":{}}}"#,
+            graph_to_value(&net).to_string()
+        ),
+        format!(
+            r#"{{"op":"estimate","kind":"roofline","network":{}}}"#,
+            graph_to_value(&net).to_string()
+        ),
+        r#"{"op":"estimate"}"#.to_string(), // malformed: error is in-band
+    ];
+    for req in requests {
+        let preview: String = req.chars().take(72).collect();
+        println!("\n→ {preview}...");
+        let resp = svc.handle(&req);
+        let short: String = resp.chars().take(240).collect();
+        println!("← {short}");
+    }
+}
