@@ -1,0 +1,34 @@
+# Convenience targets for the annette reproduction.
+
+.PHONY: build test examples artifacts clean
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+# Run every example end to end (the tier-1 demo flow).
+examples: build
+	cargo run --release --example quickstart
+	cargo run --release --example full_pipeline
+	cargo run --release --example estimate_zoo
+	cargo run --release --example serve_demo
+	cargo run --release --example nas_search
+
+# The PJRT batch artifact (artifacts/mixed_batch.hlo.txt) is produced by an
+# offline JAX + Pallas toolchain that is intentionally NOT bundled with this
+# crate: it AOT-compiles the batched mixed-model evaluation to an HLO program
+# for PJRT execution. When the artifact is absent, every consumer degrades
+# gracefully to the native estimator (see examples/nas_search.rs and
+# src/estim/batch.rs) — same scores, scalar execution.
+artifacts:
+	@echo "PJRT batch artifact generation requires the external JAX + Pallas"
+	@echo "toolchain, which is not bundled with this repository."
+	@echo
+	@echo "Nothing to do: consumers fall back to the native estimator"
+	@echo "automatically (nas_search prints 'using native path')."
+
+clean:
+	cargo clean
+	rm -rf out artifacts

@@ -25,11 +25,11 @@ fn main() {
         r#"{"op":"models"}"#.to_string(),
         format!(
             r#"{{"op":"estimate","kind":"mixed","network":{}}}"#,
-            graph_to_value(&net).to_string()
+            graph_to_value(&net)
         ),
         format!(
             r#"{{"op":"estimate","kind":"roofline","network":{}}}"#,
-            graph_to_value(&net).to_string()
+            graph_to_value(&net)
         ),
         r#"{"op":"estimate"}"#.to_string(), // malformed: error is in-band
     ];

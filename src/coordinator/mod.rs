@@ -1,0 +1,7 @@
+//! Benchmark orchestration and the resident estimation service.
+
+pub mod orchestrator;
+pub mod service;
+
+pub use orchestrator::{default_threads, run_campaign, BenchData};
+pub use service::Service;

@@ -1,0 +1,581 @@
+//! Benchmark campaign orchestrator — ANNETTE's benchmark phase.
+//!
+//! [`run_campaign`] sweeps micro-kernel configurations (single-layer graphs
+//! covering the channel / input-channel / spatial axes per layer class) across
+//! a pool of worker threads, then runs multi-layer fusion probes serially.
+//! The result is a [`BenchData`] document: the layer data + mapping data that
+//! the model generator fits platform models from. Results are deterministic
+//! regardless of thread count: every configuration derives its measurement
+//! seed from its index, not from scheduling order.
+
+use std::fs;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::graph::{Graph, GraphBuilder};
+use crate::hw::device::Device;
+use crate::json::Value;
+use crate::rng::PHI;
+
+pub const FORMAT: &str = "annette-bench.v1";
+
+/// One micro-kernel measurement.
+#[derive(Clone, Debug)]
+pub struct MicroRecord {
+    /// Layer class the record belongs to ("conv", "dwconv", ...).
+    pub class: String,
+    pub cout: usize,
+    pub cin: usize,
+    pub wout: usize,
+    /// Operation count of the benchmarked layer.
+    pub flops: f64,
+    /// Bytes moved by the benchmarked layer.
+    pub bytes: f64,
+    /// Mean measured latency in microseconds.
+    pub us: f64,
+}
+
+/// One fusion probe: does `producer → consumer` execute as one unit?
+#[derive(Clone, Debug)]
+pub struct FusionProbe {
+    pub producer: String,
+    pub consumer: String,
+    pub t_producer_ms: f64,
+    pub t_consumer_ms: f64,
+    pub t_chain_ms: f64,
+    pub fused: bool,
+}
+
+/// Micro-kernel sweep results (per-layer data).
+#[derive(Clone, Debug, Default)]
+pub struct MicroData {
+    pub records: Vec<MicroRecord>,
+}
+
+/// Fusion probe results (mapping data).
+#[derive(Clone, Debug, Default)]
+pub struct MappingData {
+    pub samples: Vec<FusionProbe>,
+}
+
+/// Everything a benchmark campaign produced.
+#[derive(Clone, Debug)]
+pub struct BenchData {
+    pub device: String,
+    pub micro: MicroData,
+    pub mapping: MappingData,
+}
+
+/// Worker-thread count: the available parallelism, capped at 8.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get().min(8))
+        .unwrap_or(4)
+}
+
+/// A single micro-kernel configuration.
+#[derive(Clone, Copy, Debug)]
+enum MicroConfig {
+    Conv { hw: usize, cin: usize, cout: usize, k: usize, s: usize },
+    Dw { hw: usize, c: usize, k: usize, s: usize },
+    Pool { hw: usize, c: usize, k: usize, s: usize },
+    Gap { hw: usize, c: usize },
+    Fc { cin: usize, units: usize },
+    ActE { hw: usize, c: usize },
+    BnE { hw: usize, c: usize },
+    AddE { hw: usize, c: usize },
+    SoftmaxE { c: usize },
+    ConcatE { hw: usize, c: usize, c2: usize },
+}
+
+fn micro_configs() -> Vec<MicroConfig> {
+    use MicroConfig::*;
+    let mut cfgs = Vec::new();
+    // conv: output-channel sweep (alignment detection on cout)
+    for cout in [1, 2, 3, 4, 6, 8, 12, 16, 20, 24, 32, 40, 48, 64, 96, 128] {
+        cfgs.push(Conv { hw: 28, cin: 32, cout, k: 3, s: 1 });
+    }
+    // conv: input-channel sweep
+    for cin in [1, 2, 3, 4, 8, 12, 16, 24, 32, 48, 64] {
+        cfgs.push(Conv { hw: 28, cin, cout: 32, k: 3, s: 1 });
+    }
+    // conv: spatial sweep
+    for hw in [4, 6, 7, 8, 12, 14, 16, 28, 56, 112] {
+        cfgs.push(Conv { hw, cin: 32, cout: 32, k: 3, s: 1 });
+    }
+    // conv: size grid spanning real-network magnitudes
+    for (hw, cin, cout, k, s) in [
+        (112, 16, 32, 3, 1),
+        (112, 32, 64, 3, 1),
+        (56, 64, 128, 3, 1),
+        (56, 128, 128, 3, 1),
+        (28, 128, 256, 3, 1),
+        (28, 256, 256, 3, 1),
+        (14, 256, 512, 3, 1),
+        (14, 512, 512, 3, 1),
+        (7, 512, 512, 3, 1),
+        (112, 3, 32, 3, 1),
+        (224, 3, 32, 3, 2),
+        (56, 256, 64, 1, 1),
+        (56, 64, 256, 1, 1),
+        (28, 512, 128, 1, 1),
+        (14, 1024, 256, 1, 1),
+        (28, 96, 96, 5, 1),
+    ] {
+        cfgs.push(Conv { hw, cin, cout, k, s });
+    }
+    // dwconv: channel and spatial sweeps
+    for c in [4, 8, 12, 16, 24, 32, 48, 64, 96, 128, 192, 256, 384, 512] {
+        cfgs.push(Dw { hw: 28, c, k: 3, s: 1 });
+    }
+    for hw in [7, 14, 28, 56, 112] {
+        cfgs.push(Dw { hw, c: 64, k: 3, s: 1 });
+    }
+    for (hw, c, k, s) in [
+        (112, 32, 3, 1),
+        (56, 128, 3, 2),
+        (14, 512, 3, 1),
+        (7, 1024, 3, 1),
+        (28, 64, 5, 1),
+    ] {
+        cfgs.push(Dw { hw, c, k, s });
+    }
+    // pool
+    for (hw, c) in [
+        (56, 32),
+        (56, 64),
+        (28, 64),
+        (28, 128),
+        (14, 128),
+        (14, 256),
+        (7, 256),
+        (7, 512),
+        (28, 32),
+        (56, 16),
+        (112, 64),
+        (4, 64),
+        (28, 20),
+        (14, 100),
+    ] {
+        cfgs.push(Pool { hw, c, k: 2, s: 2 });
+    }
+    for (hw, c) in [(56, 64), (28, 128), (14, 256)] {
+        cfgs.push(Pool { hw, c, k: 3, s: 2 });
+    }
+    for (hw, c) in [(7, 512), (7, 1024), (14, 256), (7, 2048)] {
+        cfgs.push(Gap { hw, c });
+    }
+    // fully connected
+    for (cin, units) in [
+        (256, 128),
+        (512, 256),
+        (1024, 512),
+        (2048, 1000),
+        (4096, 1000),
+        (1024, 1000),
+        (512, 10),
+        (2048, 512),
+        (1280, 1000),
+        (4096, 4096),
+        (9216, 4096),
+        (100, 50),
+        (64, 32),
+        (576, 10),
+    ] {
+        cfgs.push(Fc { cin, units });
+    }
+    // elementwise: activation, batchnorm, add, softmax
+    for (hw, c) in [
+        (7, 512),
+        (7, 256),
+        (14, 256),
+        (14, 128),
+        (28, 128),
+        (28, 64),
+        (56, 64),
+        (56, 32),
+        (28, 100),
+        (14, 333),
+    ] {
+        cfgs.push(ActE { hw, c });
+    }
+    for (hw, c) in [(7, 512), (14, 256), (28, 128), (56, 64), (28, 60)] {
+        cfgs.push(BnE { hw, c });
+    }
+    for (hw, c) in [(7, 512), (14, 256), (28, 128), (56, 64), (14, 200)] {
+        cfgs.push(AddE { hw, c });
+    }
+    for c in [10, 100, 1000] {
+        cfgs.push(SoftmaxE { c });
+    }
+    // memory ops: concat
+    for (hw, c, c2) in [(28, 64, 64), (14, 128, 128), (56, 32, 96), (7, 256, 256)] {
+        cfgs.push(ConcatE { hw, c, c2 });
+    }
+    cfgs
+}
+
+fn build_micro_graph(cfg: &MicroConfig) -> Graph {
+    use MicroConfig::*;
+    let mut b = GraphBuilder::new("micro");
+    match *cfg {
+        Conv { hw, cin, cout, k, s } => {
+            let i = b.input(hw, hw, cin);
+            b.conv(i, cout, k, s);
+        }
+        Dw { hw, c, k, s } => {
+            let i = b.input(hw, hw, c);
+            b.dwconv(i, k, s);
+        }
+        Pool { hw, c, k, s } => {
+            let i = b.input(hw, hw, c);
+            b.maxpool(i, k, s);
+        }
+        Gap { hw, c } => {
+            let i = b.input(hw, hw, c);
+            b.global_pool(i);
+        }
+        Fc { cin, units } => {
+            let i = b.input(1, 1, cin);
+            b.fc(i, units);
+        }
+        ActE { hw, c } => {
+            let i = b.input(hw, hw, c);
+            b.relu(i);
+        }
+        BnE { hw, c } => {
+            let i = b.input(hw, hw, c);
+            b.batchnorm(i);
+        }
+        AddE { hw, c } => {
+            let i = b.input(hw, hw, c);
+            b.add(i, i);
+        }
+        SoftmaxE { c } => {
+            let i = b.input(1, 1, c);
+            b.softmax(i);
+        }
+        ConcatE { hw, c, c2 } => {
+            let i = b.input(hw, hw, c);
+            let j = b.input(hw, hw, c2);
+            b.concat(&[i, j]);
+        }
+    }
+    b.finish().expect("micro graph is valid")
+}
+
+fn measure_micro<D: Device + ?Sized>(
+    dev: &D,
+    cfg: &MicroConfig,
+    runs: usize,
+    idx: usize,
+) -> MicroRecord {
+    let g = build_micro_graph(cfg);
+    let seed = 0xC0_FFEEu64 ^ (idx as u64).wrapping_mul(PHI);
+    let total_ms = dev.profile(&g, runs, seed).total_ms();
+    let lay = g.layers.last().expect("micro graph has a benchmark layer");
+    let spec = dev.spec();
+    let (cout, cin, wout) = lay.mapping_features();
+    MicroRecord {
+        class: lay.class().as_str().to_string(),
+        cout,
+        cin,
+        wout,
+        flops: lay.flops(),
+        bytes: spec.layer_bytes(lay),
+        us: total_ms * 1000.0,
+    }
+}
+
+const PROBE_PRODUCERS: [&str; 5] = ["conv", "dwconv", "fc", "pool", "add"];
+const PROBE_CONSUMERS: [&str; 2] = ["batchnorm", "act"];
+
+fn build_probe_graph(producer: &str, consumer: Option<&str>) -> Graph {
+    let mut b = GraphBuilder::new("probe");
+    let x = match producer {
+        "conv" => {
+            let i = b.input(28, 28, 32);
+            b.conv(i, 32, 3, 1)
+        }
+        "dwconv" => {
+            let i = b.input(28, 28, 64);
+            b.dwconv(i, 3, 1)
+        }
+        "fc" => {
+            let i = b.input(1, 1, 1024);
+            b.fc(i, 512)
+        }
+        "pool" => {
+            let i = b.input(28, 28, 64);
+            b.maxpool(i, 2, 2)
+        }
+        "add" => {
+            let i = b.input(28, 28, 64);
+            b.add(i, i)
+        }
+        other => panic!("unknown probe producer `{other}`"),
+    };
+    match consumer {
+        Some("batchnorm") => {
+            b.batchnorm(x);
+        }
+        Some("act") => {
+            b.relu(x);
+        }
+        Some(other) => panic!("unknown probe consumer `{other}`"),
+        None => {}
+    }
+    b.finish().expect("probe graph is valid")
+}
+
+fn build_consumer_solo(consumer: &str, producer: &str) -> Graph {
+    // The consumer standalone, on the producer's output shape.
+    let (hw, c) = match producer {
+        "conv" => (28, 32),
+        "dwconv" => (28, 64),
+        "fc" => (1, 512),
+        "pool" => (14, 64),
+        "add" => (28, 64),
+        other => panic!("unknown probe producer `{other}`"),
+    };
+    let mut b = GraphBuilder::new("probe-solo");
+    let i = b.input(hw, hw, c);
+    if consumer == "batchnorm" {
+        b.batchnorm(i);
+    } else {
+        b.relu(i);
+    }
+    b.finish().expect("probe graph is valid")
+}
+
+fn run_fusion_probes<D: Device + ?Sized>(dev: &D, runs: usize) -> Vec<FusionProbe> {
+    let mut samples = Vec::new();
+    for producer in PROBE_PRODUCERS {
+        let gp = build_probe_graph(producer, None);
+        let tp = dev.profile(&gp, runs, 0xFACE).total_ms();
+        let pclass = gp
+            .layers
+            .last()
+            .expect("probe graph has layers")
+            .class()
+            .as_str()
+            .to_string();
+        for consumer in PROBE_CONSUMERS {
+            let gc = build_probe_graph(producer, Some(consumer));
+            let tc = dev.profile(&gc, runs, 0xFACE ^ 7).total_ms();
+            let gs = build_consumer_solo(consumer, producer);
+            let ts = dev.profile(&gs, runs, 0xFACE ^ 13).total_ms();
+            // Fused iff the chain costs clearly less than running both ops:
+            // the consumer must have (mostly) disappeared.
+            let fused = tc < tp + 0.5 * ts;
+            samples.push(FusionProbe {
+                producer: pclass.clone(),
+                consumer: consumer.to_string(),
+                t_producer_ms: tp,
+                t_consumer_ms: ts,
+                t_chain_ms: tc,
+                fused,
+            });
+        }
+    }
+    samples
+}
+
+/// Run the full benchmark campaign: micro-kernel sweeps (multi-threaded) plus
+/// fusion probes. `runs` is the repetition count per measurement.
+pub fn run_campaign<D: Device + ?Sized>(dev: &D, runs: usize, threads: usize) -> BenchData {
+    let configs = micro_configs();
+    let runs = runs.max(1);
+    let threads = threads.clamp(1, configs.len());
+    let chunk = (configs.len() + threads - 1) / threads;
+    let mut slots: Vec<Option<MicroRecord>> = Vec::new();
+    slots.resize_with(configs.len(), || None);
+    std::thread::scope(|scope| {
+        for (ti, out) in slots.chunks_mut(chunk).enumerate() {
+            let start = ti * chunk;
+            let cfgs = &configs[start..start + out.len()];
+            scope.spawn(move || {
+                for (off, cfg) in cfgs.iter().enumerate() {
+                    out[off] = Some(measure_micro(dev, cfg, runs, start + off));
+                }
+            });
+        }
+    });
+    let records: Vec<MicroRecord> = slots
+        .into_iter()
+        .map(|s| s.expect("worker filled every slot"))
+        .collect();
+    let samples = run_fusion_probes(dev, runs);
+    BenchData {
+        device: dev.spec().name,
+        micro: MicroData { records },
+        mapping: MappingData { samples },
+    }
+}
+
+// ---------------------------------------------------------------- persistence
+
+impl MicroRecord {
+    fn to_value(&self) -> Value {
+        Value::Obj(vec![
+            ("class".to_string(), Value::str(self.class.clone())),
+            ("cout".to_string(), Value::int(self.cout)),
+            ("cin".to_string(), Value::int(self.cin)),
+            ("wout".to_string(), Value::int(self.wout)),
+            ("flops".to_string(), Value::num(self.flops)),
+            ("bytes".to_string(), Value::num(self.bytes)),
+            ("us".to_string(), Value::num(self.us)),
+        ])
+    }
+
+    fn from_value(v: &Value) -> Result<MicroRecord> {
+        Ok(MicroRecord {
+            class: v.req_str("class")?.to_string(),
+            cout: v.req_usize("cout")?,
+            cin: v.req_usize("cin")?,
+            wout: v.req_usize("wout")?,
+            flops: v.req_f64("flops")?,
+            bytes: v.req_f64("bytes")?,
+            us: v.req_f64("us")?,
+        })
+    }
+}
+
+impl FusionProbe {
+    fn to_value(&self) -> Value {
+        Value::Obj(vec![
+            ("producer".to_string(), Value::str(self.producer.clone())),
+            ("consumer".to_string(), Value::str(self.consumer.clone())),
+            ("t_producer_ms".to_string(), Value::num(self.t_producer_ms)),
+            ("t_consumer_ms".to_string(), Value::num(self.t_consumer_ms)),
+            ("t_chain_ms".to_string(), Value::num(self.t_chain_ms)),
+            ("fused".to_string(), Value::Bool(self.fused)),
+        ])
+    }
+
+    fn from_value(v: &Value) -> Result<FusionProbe> {
+        Ok(FusionProbe {
+            producer: v.req_str("producer")?.to_string(),
+            consumer: v.req_str("consumer")?.to_string(),
+            t_producer_ms: v.req_f64("t_producer_ms")?,
+            t_consumer_ms: v.req_f64("t_consumer_ms")?,
+            t_chain_ms: v.req_f64("t_chain_ms")?,
+            fused: v
+                .req("fused")?
+                .as_bool()
+                .ok_or_else(|| Error::Json("field `fused` is not a bool".to_string()))?,
+        })
+    }
+}
+
+impl BenchData {
+    pub fn to_value(&self) -> Value {
+        Value::Obj(vec![
+            ("format".to_string(), Value::str(FORMAT)),
+            ("device".to_string(), Value::str(self.device.clone())),
+            (
+                "micro".to_string(),
+                Value::Arr(self.micro.records.iter().map(|r| r.to_value()).collect()),
+            ),
+            (
+                "mapping".to_string(),
+                Value::Arr(self.mapping.samples.iter().map(|p| p.to_value()).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_value(v: &Value) -> Result<BenchData> {
+        let format = v.req_str("format")?;
+        if format != FORMAT {
+            return Err(Error::Json(format!(
+                "unsupported bench format `{format}` (expected `{FORMAT}`)"
+            )));
+        }
+        Ok(BenchData {
+            device: v.req_str("device")?.to_string(),
+            micro: MicroData {
+                records: v
+                    .req_arr("micro")?
+                    .iter()
+                    .map(MicroRecord::from_value)
+                    .collect::<Result<_>>()?,
+            },
+            mapping: MappingData {
+                samples: v
+                    .req_arr("mapping")?
+                    .iter()
+                    .map(FusionProbe::from_value)
+                    .collect::<Result<_>>()?,
+            },
+        })
+    }
+
+    pub fn save<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        fs::write(path, self.to_value().to_string())?;
+        Ok(())
+    }
+
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<BenchData> {
+        let text = fs::read_to_string(path)?;
+        BenchData::from_value(&Value::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::dpu::DpuDevice;
+
+    #[test]
+    fn campaign_is_deterministic_across_thread_counts() {
+        let dev = DpuDevice::zcu102();
+        let a = run_campaign(&dev, 2, 1);
+        let b = run_campaign(&dev, 2, 7);
+        assert_eq!(a.micro.records.len(), b.micro.records.len());
+        for (ra, rb) in a.micro.records.iter().zip(&b.micro.records) {
+            assert_eq!(ra.class, rb.class);
+            assert_eq!(ra.us, rb.us);
+        }
+    }
+
+    #[test]
+    fn campaign_covers_all_classes() {
+        let dev = DpuDevice::zcu102();
+        let data = run_campaign(&dev, 1, default_threads());
+        for class in ["conv", "dwconv", "pool", "fc", "elem", "mem"] {
+            assert!(
+                data.micro.records.iter().any(|r| r.class == class),
+                "no records for class {class}"
+            );
+        }
+        assert_eq!(data.mapping.samples.len(), 10);
+    }
+
+    #[test]
+    fn dpu_probes_detect_conv_fusion() {
+        let dev = DpuDevice::zcu102();
+        let data = run_campaign(&dev, 3, default_threads());
+        let fused: Vec<(&str, &str)> = data
+            .mapping
+            .samples
+            .iter()
+            .filter(|p| p.fused)
+            .map(|p| (p.producer.as_str(), p.consumer.as_str()))
+            .collect();
+        assert!(fused.contains(&("conv", "batchnorm")));
+        assert!(fused.contains(&("conv", "act")));
+        assert!(!fused.contains(&("pool", "act")));
+    }
+
+    #[test]
+    fn bench_data_roundtrips_through_json() {
+        let dev = DpuDevice::zcu102();
+        let data = run_campaign(&dev, 1, 2);
+        let v = data.to_value();
+        let back = BenchData::from_value(&v).unwrap();
+        assert_eq!(back.device, data.device);
+        assert_eq!(back.micro.records.len(), data.micro.records.len());
+        assert_eq!(back.micro.records[0].us, data.micro.records[0].us);
+        assert_eq!(back.mapping.samples.len(), data.mapping.samples.len());
+    }
+}

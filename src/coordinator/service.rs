@@ -1,0 +1,159 @@
+//! Line-delimited JSON estimation service — the deployment form of the
+//! estimation tool. One request per line in, one response per line out;
+//! errors are always in-band (`{"ok":false,"error":...}`), never panics.
+//!
+//! Request ops:
+//!
+//! * `{"op":"models"}` — list available model families and the device.
+//! * `{"op":"estimate","network":<graph>,"kind":"mixed"}` — estimate a
+//!   network description graph; `kind` is optional and defaults to mixed.
+
+use crate::error::{Error, Result};
+use crate::estim::estimator::Estimator;
+use crate::graph::serial;
+use crate::json::Value;
+use crate::models::layer::ModelKind;
+use crate::models::platform::PlatformModel;
+
+/// A resident platform model answering estimation requests.
+pub struct Service {
+    model: PlatformModel,
+}
+
+impl Service {
+    pub fn new(model: PlatformModel) -> Self {
+        Service { model }
+    }
+
+    /// Handle one request line; the response is always a single JSON line.
+    pub fn handle(&self, request: &str) -> String {
+        match self.dispatch(request) {
+            Ok(v) => v.to_string(),
+            Err(e) => Value::Obj(vec![
+                ("ok".to_string(), Value::Bool(false)),
+                ("error".to_string(), Value::str(e.to_string())),
+            ])
+            .to_string(),
+        }
+    }
+
+    fn dispatch(&self, request: &str) -> Result<Value> {
+        let req = Value::parse(request)?;
+        let op = req.req_str("op")?;
+        match op {
+            "models" => Ok(Value::Obj(vec![
+                ("ok".to_string(), Value::Bool(true)),
+                ("device".to_string(), Value::str(self.model.spec.name.clone())),
+                (
+                    "models".to_string(),
+                    Value::Arr(
+                        ModelKind::ALL
+                            .iter()
+                            .map(|k| Value::str(k.as_str()))
+                            .collect(),
+                    ),
+                ),
+            ])),
+            "estimate" => self.estimate(&req),
+            other => Err(Error::Invalid(format!("unknown op `{other}`"))),
+        }
+    }
+
+    fn estimate(&self, req: &Value) -> Result<Value> {
+        let kind = match req.get("kind") {
+            Some(v) => {
+                let s = v
+                    .as_str()
+                    .ok_or_else(|| Error::Invalid("`kind` must be a string".to_string()))?;
+                ModelKind::parse(s)
+                    .ok_or_else(|| Error::Invalid(format!("unknown model kind `{s}`")))?
+            }
+            None => ModelKind::Mixed,
+        };
+        let network = req
+            .get("network")
+            .ok_or_else(|| Error::Invalid("`estimate` requires a `network` graph".to_string()))?;
+        let graph = serial::graph_from_value(network)?;
+        let est = Estimator::new(&self.model).estimate_with(&graph, kind);
+        let units: Vec<Value> = est
+            .units
+            .iter()
+            .map(|u| {
+                Value::Obj(vec![
+                    ("name".to_string(), Value::str(u.name.clone())),
+                    ("class".to_string(), Value::str(u.class.clone())),
+                    ("ms".to_string(), Value::num(u.ms)),
+                    ("fused".to_string(), Value::int(u.members.len())),
+                ])
+            })
+            .collect();
+        Ok(Value::Obj(vec![
+            ("ok".to_string(), Value::Bool(true)),
+            ("network".to_string(), Value::str(est.network.clone())),
+            ("kind".to_string(), Value::str(kind.as_str())),
+            ("total_ms".to_string(), Value::num(est.total_ms())),
+            ("units".to_string(), Value::Arr(units)),
+        ]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::orchestrator::run_campaign;
+    use crate::graph::serial::graph_to_value;
+    use crate::graph::GraphBuilder;
+    use crate::hw::device::Device;
+    use crate::hw::dpu::DpuDevice;
+
+    fn service() -> Service {
+        let dev = DpuDevice::zcu102();
+        let data = run_campaign(&dev, 1, 4);
+        Service::new(PlatformModel::fit(&dev.spec(), &data))
+    }
+
+    fn net_json() -> String {
+        let mut b = GraphBuilder::new("svc-net");
+        let i = b.input(28, 28, 3);
+        let x = b.conv_bn_relu(i, 16, 3, 1);
+        b.classifier(x, 10);
+        graph_to_value(&b.finish().unwrap()).to_string()
+    }
+
+    #[test]
+    fn models_op_lists_all_families() {
+        let svc = service();
+        let resp = Value::parse(&svc.handle(r#"{"op":"models"}"#)).unwrap();
+        assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(true));
+        assert_eq!(resp.req_arr("models").unwrap().len(), 4);
+    }
+
+    #[test]
+    fn estimate_op_returns_total_and_units() {
+        let svc = service();
+        let req = format!(r#"{{"op":"estimate","kind":"mixed","network":{}}}"#, net_json());
+        let resp = Value::parse(&svc.handle(&req)).unwrap();
+        assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(true));
+        assert!(resp.req_f64("total_ms").unwrap() > 0.0);
+        assert!(!resp.req_arr("units").unwrap().is_empty());
+    }
+
+    #[test]
+    fn errors_are_in_band() {
+        let svc = service();
+        for bad in [
+            "not json at all",
+            r#"{"op":"estimate"}"#,
+            r#"{"op":"teleport"}"#,
+            r#"{"op":"estimate","kind":"warp","network":{}}"#,
+        ] {
+            let resp = Value::parse(&svc.handle(bad)).unwrap();
+            assert_eq!(
+                resp.get("ok").and_then(|v| v.as_bool()),
+                Some(false),
+                "request {bad} must fail in-band"
+            );
+            assert!(resp.get("error").is_some());
+        }
+    }
+}

@@ -1,0 +1,46 @@
+//! Crate-wide error type. The crate is dependency-free, so this is a plain
+//! enum rather than a `thiserror` derive.
+
+use std::fmt;
+
+/// Convenient alias used across the crate.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// All the ways `annette` operations can fail.
+#[derive(Debug)]
+pub enum Error {
+    /// Underlying I/O failure (file read/write).
+    Io(std::io::Error),
+    /// Malformed JSON or a JSON document with an unexpected schema.
+    Json(String),
+    /// A structurally invalid network graph or model.
+    Invalid(String),
+    /// A required artifact or resource is absent.
+    Missing(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Json(m) => write!(f, "json error: {m}"),
+            Error::Invalid(m) => write!(f, "invalid: {m}"),
+            Error::Missing(m) => write!(f, "missing: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}

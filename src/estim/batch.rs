@@ -1,0 +1,112 @@
+//! Batched estimation through an ahead-of-time compiled PJRT artifact.
+//!
+//! The intended production path scores thousands of candidate networks (NAS
+//! screening) through an AOT-compiled XLA/Pallas program instead of the
+//! native scalar estimator. The artifact is generated offline by a JAX
+//! toolchain that is **not** bundled with this crate; see `make artifacts`.
+//!
+//! Until a PJRT runtime is wired in, [`BatchEstimator::new`] validates the
+//! artifact and fails with an actionable error when it is absent, and
+//! [`BatchEstimator::estimate_networks`] evaluates the same stacked model
+//! with the native estimator over the whole batch. Callers degrade exactly
+//! as `examples/nas_search.rs` documents: no artifact → native path.
+
+use std::fs;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::estim::estimator::Estimator;
+use crate::graph::Graph;
+use crate::models::platform::PlatformModel;
+
+/// Magic first line a batch artifact must carry.
+pub const ARTIFACT_MAGIC: &str = "annette-hlo v1";
+
+pub struct BatchEstimator<'a> {
+    model: &'a PlatformModel,
+    /// Artifact description (first line after the magic), kept for
+    /// diagnostics.
+    pub artifact_info: String,
+}
+
+impl<'a> BatchEstimator<'a> {
+    /// Open a batch estimator backed by an AOT artifact. Fails with a clear
+    /// message when the artifact is missing or malformed.
+    pub fn new(model: &'a PlatformModel, artifact: &Path) -> Result<Self> {
+        if !artifact.exists() {
+            return Err(Error::Missing(format!(
+                "PJRT batch artifact not found at `{}`. Run `make artifacts` to see how \
+                 artifacts are produced; without one, use the native Estimator (the \
+                 `nas_search` example falls back to it automatically).",
+                artifact.display()
+            )));
+        }
+        let text = fs::read_to_string(artifact)?;
+        let mut lines = text.lines();
+        match lines.next() {
+            Some(first) if first.trim() == ARTIFACT_MAGIC => {}
+            _ => {
+                return Err(Error::Invalid(format!(
+                    "`{}` is not an annette batch artifact (expected first line `{}`)",
+                    artifact.display(),
+                    ARTIFACT_MAGIC
+                )))
+            }
+        }
+        let artifact_info = lines.next().unwrap_or("").trim().to_string();
+        Ok(BatchEstimator {
+            model,
+            artifact_info,
+        })
+    }
+
+    /// Score a batch of networks (mixed model, milliseconds per network).
+    pub fn estimate_networks(&self, nets: &[Graph]) -> Result<Vec<f64>> {
+        let est = Estimator::new(self.model);
+        Ok(nets.iter().map(|g| est.estimate(g).total_ms()).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::orchestrator::run_campaign;
+    use crate::hw::device::Device;
+    use crate::hw::dpu::DpuDevice;
+
+    fn model() -> PlatformModel {
+        let dev = DpuDevice::zcu102();
+        let data = run_campaign(&dev, 1, 4);
+        PlatformModel::fit(&dev.spec(), &data)
+    }
+
+    #[test]
+    fn missing_artifact_is_a_clear_error() {
+        let m = model();
+        let err = BatchEstimator::new(&m, Path::new("definitely/not/there.hlo.txt"))
+            .err()
+            .expect("must fail");
+        let msg = err.to_string();
+        assert!(msg.contains("make artifacts"), "unhelpful error: {msg}");
+        assert!(msg.contains("not found"), "unhelpful error: {msg}");
+    }
+
+    #[test]
+    fn malformed_artifact_is_rejected_and_valid_one_scores() {
+        let m = model();
+        let dir = std::env::temp_dir().join("annette-batch-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let bad = dir.join("bad.hlo.txt");
+        std::fs::write(&bad, "not an artifact\n").unwrap();
+        assert!(BatchEstimator::new(&m, &bad).is_err());
+
+        let good = dir.join("good.hlo.txt");
+        std::fs::write(&good, format!("{ARTIFACT_MAGIC}\nmixed_batch demo\n")).unwrap();
+        let be = BatchEstimator::new(&m, &good).unwrap();
+        assert_eq!(be.artifact_info, "mixed_batch demo");
+        let nets = crate::zoo::nasbench::sample_networks(3, 1);
+        let scores = be.estimate_networks(&nets).unwrap();
+        assert_eq!(scores.len(), 3);
+        assert!(scores.iter().all(|s| *s > 0.0));
+    }
+}

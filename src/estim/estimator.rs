@@ -1,0 +1,231 @@
+//! The estimation tool: layer-wise latency prediction from a fitted platform
+//! model, with the predicted execution-unit graph (fusion reconstructed by
+//! the learned mapping model).
+
+use crate::graph::{assign_units, Graph, LayerClass};
+use crate::hw::device::class_utils;
+use crate::models::layer::ModelKind;
+use crate::models::platform::PlatformModel;
+
+/// One predicted execution unit: a root layer plus the consumers the mapping
+/// model folds into it.
+#[derive(Clone, Debug)]
+pub struct UnitEstimate {
+    /// Root layer id.
+    pub root: usize,
+    pub name: String,
+    /// Layer class of the root ("conv", "pool", ...).
+    pub class: String,
+    /// Ids of layers fused into this unit (excluding the root).
+    pub members: Vec<usize>,
+    /// Operation count of the root layer.
+    pub flops: f64,
+    /// Predicted unit latency in milliseconds.
+    pub ms: f64,
+}
+
+/// A layer-wise latency estimate for one network.
+#[derive(Clone, Debug)]
+pub struct Estimate {
+    pub network: String,
+    pub kind: ModelKind,
+    pub units: Vec<UnitEstimate>,
+}
+
+impl Estimate {
+    /// Predicted end-to-end latency in milliseconds.
+    pub fn total_ms(&self) -> f64 {
+        self.units.iter().map(|u| u.ms).sum()
+    }
+}
+
+/// Estimates network latency from a fitted [`PlatformModel`] without
+/// compiling or executing the network.
+pub struct Estimator<'a> {
+    model: &'a PlatformModel,
+}
+
+impl<'a> Estimator<'a> {
+    pub fn new(model: &'a PlatformModel) -> Self {
+        Estimator { model }
+    }
+
+    /// Estimate with the mixed model (ANNETTE's default).
+    pub fn estimate(&self, graph: &Graph) -> Estimate {
+        self.estimate_with(graph, ModelKind::Mixed)
+    }
+
+    /// Estimate with a specific model family.
+    pub fn estimate_with(&self, graph: &Graph, kind: ModelKind) -> Estimate {
+        let spec = &self.model.spec;
+        // The analytical baselines have no mapping model: every layer is its
+        // own unit. The fitted families reconstruct fusion.
+        let roots = match kind {
+            ModelKind::Roofline | ModelKind::RefinedRoofline => {
+                (0..graph.layers.len()).collect::<Vec<usize>>()
+            }
+            ModelKind::Statistical | ModelKind::Mixed => {
+                assign_units(graph, |p, k| self.model.fusable(p, k))
+            }
+        };
+        let mut units: Vec<UnitEstimate> = Vec::new();
+        for lay in &graph.layers {
+            if roots[lay.id] != lay.id || lay.class() == LayerClass::None {
+                continue;
+            }
+            let class = lay.class();
+            let (cout, cin, wout) = lay.mapping_features();
+            let compute = spec.ideal_compute_us(lay.flops());
+            let mem = spec.ideal_mem_us(spec.layer_bytes(lay));
+            let us = match kind {
+                ModelKind::Roofline => compute.max(mem),
+                ModelKind::RefinedRoofline => {
+                    let u = class_utils(
+                        class,
+                        cout,
+                        cin,
+                        wout,
+                        spec.channel_align,
+                        spec.input_align,
+                        spec.spatial_align,
+                    );
+                    (compute / u).max(mem)
+                }
+                ModelKind::Statistical => match self.model.class_model(class) {
+                    Some(cm) => (cm.stat[0] * compute + cm.stat[1] * mem + cm.stat[2]).max(0.0),
+                    None => compute.max(mem),
+                },
+                ModelKind::Mixed => match self.model.class_model(class) {
+                    Some(cm) => {
+                        let u = class_utils(
+                            class,
+                            cout,
+                            cin,
+                            wout,
+                            cm.align_out,
+                            cm.align_in,
+                            cm.align_w,
+                        );
+                        (cm.mixed[0] * compute / u + cm.mixed[1] * mem + cm.mixed[2]).max(0.0)
+                    }
+                    None => compute.max(mem),
+                },
+            };
+            units.push(UnitEstimate {
+                root: lay.id,
+                name: lay.name.clone(),
+                class: class.as_str().to_string(),
+                members: Vec::new(),
+                flops: lay.flops(),
+                ms: us / 1000.0,
+            });
+        }
+        // Attach fused members to their units.
+        for lay in &graph.layers {
+            let root = roots[lay.id];
+            if root != lay.id {
+                if let Some(unit) = units.iter_mut().find(|u| u.root == root) {
+                    unit.members.push(lay.id);
+                }
+            }
+        }
+        Estimate {
+            network: graph.name.clone(),
+            kind,
+            units,
+        }
+    }
+
+    /// Human-readable per-unit breakdown of an estimate.
+    pub fn render_table(est: &Estimate) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{} · {} model · {} execution units\n",
+            est.network,
+            est.kind.as_str(),
+            est.units.len()
+        ));
+        out.push_str(&format!(
+            "{:<22} {:>8} {:>10} {:>9} {:>7}\n",
+            "unit", "class", "MFLOP", "ms", "fused"
+        ));
+        for u in &est.units {
+            out.push_str(&format!(
+                "{:<22} {:>8} {:>10.2} {:>9.4} {:>7}\n",
+                u.name,
+                u.class,
+                u.flops / 1e6,
+                u.ms,
+                if u.members.is_empty() {
+                    "-".to_string()
+                } else {
+                    format!("+{}", u.members.len())
+                }
+            ));
+        }
+        out.push_str(&format!("{:<22} {:>8} {:>10} {:>9.4}\n", "total", "", "", est.total_ms()));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::orchestrator::run_campaign;
+    use crate::graph::GraphBuilder;
+    use crate::hw::device::Device;
+    use crate::hw::dpu::DpuDevice;
+
+    fn fitted() -> PlatformModel {
+        let dev = DpuDevice::zcu102();
+        let data = run_campaign(&dev, 3, 4);
+        PlatformModel::fit(&dev.spec(), &data)
+    }
+
+    fn net() -> Graph {
+        let mut b = GraphBuilder::new("t");
+        let i = b.input(56, 56, 16);
+        let x = b.conv_bn_relu(i, 32, 3, 1);
+        let x = b.maxpool(x, 2, 2);
+        let x = b.conv_bn_relu(x, 64, 3, 1);
+        b.classifier(x, 10);
+        b.finish().unwrap()
+    }
+
+    #[test]
+    fn mixed_estimate_tracks_simulator_truth() {
+        let model = fitted();
+        let dev = DpuDevice::zcu102();
+        let g = net();
+        let est = Estimator::new(&model).estimate(&g);
+        let truth = dev.profile(&g, 20, 0).total_ms();
+        let err = (est.total_ms() - truth).abs() / truth;
+        assert!(err < 0.05, "mixed model error {err:.3} vs truth {truth:.3}");
+    }
+
+    #[test]
+    fn units_reconstruct_fusion() {
+        let model = fitted();
+        let g = net();
+        let est = Estimator::new(&model).estimate(&g);
+        // conv+bn+relu collapse: fewer units than layers
+        assert!(est.units.len() < g.len());
+        let conv_unit = est.units.iter().find(|u| u.class == "conv").unwrap();
+        assert_eq!(conv_unit.members.len(), 2);
+        // Analytical roofline has no mapping model: one unit per costed layer.
+        let roof = Estimator::new(&model).estimate_with(&g, ModelKind::Roofline);
+        assert!(roof.units.len() > est.units.len());
+    }
+
+    #[test]
+    fn render_table_mentions_every_unit() {
+        let model = fitted();
+        let g = net();
+        let est = Estimator::new(&model).estimate(&g);
+        let table = Estimator::render_table(&est);
+        for u in &est.units {
+            assert!(table.contains(&u.name));
+        }
+        assert!(table.contains("total"));
+    }
+}

@@ -1,0 +1,8 @@
+//! The estimation phase: native per-network estimator and the batched
+//! artifact-backed path.
+
+pub mod batch;
+pub mod estimator;
+
+pub use batch::BatchEstimator;
+pub use estimator::{Estimate, Estimator, UnitEstimate};

@@ -1,0 +1,230 @@
+//! Fluent builder for network description graphs.
+//!
+//! Mirrors how the zoo networks and the examples define architectures:
+//!
+//! ```
+//! use annette::graph::GraphBuilder;
+//! let mut b = GraphBuilder::new("demo");
+//! let i = b.input(32, 32, 3);
+//! let x = b.conv_bn_relu(i, 16, 3, 1);
+//! let x = b.maxpool(x, 2, 2);
+//! b.classifier(x, 10);
+//! let g = b.finish().unwrap();
+//! assert_eq!(g.name, "demo");
+//! ```
+
+use super::{ceil_div, Act, Graph, Layer, LayerKind, PoolOp, Shape};
+use crate::error::Result;
+
+pub struct GraphBuilder {
+    graph: Graph,
+}
+
+impl GraphBuilder {
+    pub fn new(name: &str) -> Self {
+        GraphBuilder {
+            graph: Graph {
+                name: name.to_string(),
+                layers: Vec::new(),
+            },
+        }
+    }
+
+    /// Output shape of an already-added layer.
+    pub fn shape(&self, id: usize) -> Shape {
+        self.graph.layers[id].out
+    }
+
+    fn push(&mut self, name: String, kind: LayerKind, inputs: Vec<usize>, out: Shape) -> usize {
+        let inp = match inputs.first() {
+            Some(&src) => self.graph.layers[src].out,
+            None => out,
+        };
+        let id = self.graph.layers.len();
+        self.graph.layers.push(Layer {
+            id,
+            name,
+            kind,
+            inputs,
+            inp,
+            out,
+        });
+        id
+    }
+
+    pub fn input(&mut self, h: usize, w: usize, c: usize) -> usize {
+        self.push("input".to_string(), LayerKind::Input, Vec::new(), Shape::new(h, w, c))
+    }
+
+    /// 2-D convolution, 'same' padding: output spatial dims are `ceil(x / stride)`.
+    pub fn conv(&mut self, from: usize, filters: usize, kernel: usize, stride: usize) -> usize {
+        let s = self.shape(from);
+        let out = Shape::new(ceil_div(s.h, stride.max(1)), ceil_div(s.w, stride.max(1)), filters);
+        let name = format!("conv{}", self.graph.layers.len());
+        self.push(name, LayerKind::Conv { filters, kernel, stride }, vec![from], out)
+    }
+
+    /// Depthwise convolution, 'same' padding.
+    pub fn dwconv(&mut self, from: usize, kernel: usize, stride: usize) -> usize {
+        let s = self.shape(from);
+        let out = Shape::new(ceil_div(s.h, stride.max(1)), ceil_div(s.w, stride.max(1)), s.c);
+        let name = format!("dwconv{}", self.graph.layers.len());
+        self.push(name, LayerKind::DwConv { kernel, stride }, vec![from], out)
+    }
+
+    pub fn batchnorm(&mut self, from: usize) -> usize {
+        let s = self.shape(from);
+        let name = format!("bn{}", self.graph.layers.len());
+        self.push(name, LayerKind::BatchNorm, vec![from], s)
+    }
+
+    pub fn activation(&mut self, from: usize, act: Act) -> usize {
+        let s = self.shape(from);
+        let name = format!("{}{}", act.as_str(), self.graph.layers.len());
+        self.push(name, LayerKind::Activation { act }, vec![from], s)
+    }
+
+    pub fn relu(&mut self, from: usize) -> usize {
+        self.activation(from, Act::Relu)
+    }
+
+    /// Conv → BatchNorm → ReLU, the ubiquitous fused triple.
+    pub fn conv_bn_relu(
+        &mut self,
+        from: usize,
+        filters: usize,
+        kernel: usize,
+        stride: usize,
+    ) -> usize {
+        let x = self.conv(from, filters, kernel, stride);
+        let x = self.batchnorm(x);
+        self.relu(x)
+    }
+
+    /// DwConv → BatchNorm → ReLU.
+    pub fn dw_bn_relu(&mut self, from: usize, kernel: usize, stride: usize) -> usize {
+        let x = self.dwconv(from, kernel, stride);
+        let x = self.batchnorm(x);
+        self.relu(x)
+    }
+
+    fn pool(&mut self, from: usize, op: PoolOp, kernel: usize, stride: usize) -> usize {
+        let s = self.shape(from);
+        let st = stride.max(1);
+        let out = Shape::new((s.h / st).max(1), (s.w / st).max(1), s.c);
+        let name = format!(
+            "{}pool{}",
+            match op {
+                PoolOp::Max => "max",
+                PoolOp::Avg => "avg",
+            },
+            self.graph.layers.len()
+        );
+        self.push(name, LayerKind::Pool { op, kernel, stride }, vec![from], out)
+    }
+
+    pub fn maxpool(&mut self, from: usize, kernel: usize, stride: usize) -> usize {
+        self.pool(from, PoolOp::Max, kernel, stride)
+    }
+
+    pub fn avgpool(&mut self, from: usize, kernel: usize, stride: usize) -> usize {
+        self.pool(from, PoolOp::Avg, kernel, stride)
+    }
+
+    /// Global average pooling to `(1, 1, c)`.
+    pub fn global_pool(&mut self, from: usize) -> usize {
+        let s = self.shape(from);
+        let name = format!("gap{}", self.graph.layers.len());
+        self.push(name, LayerKind::GlobalPool, vec![from], Shape::new(1, 1, s.c))
+    }
+
+    pub fn add(&mut self, a: usize, b: usize) -> usize {
+        let s = self.shape(a);
+        let name = format!("add{}", self.graph.layers.len());
+        self.push(name, LayerKind::Add, vec![a, b], s)
+    }
+
+    /// # Panics
+    /// Panics when `srcs` has fewer than two entries (a concat of one tensor
+    /// is not a concat; validation would reject it anyway, but failing here
+    /// points at the call site).
+    pub fn concat(&mut self, srcs: &[usize]) -> usize {
+        assert!(srcs.len() >= 2, "concat needs at least two sources");
+        let c: usize = srcs.iter().map(|&s| self.shape(s).c).sum();
+        let s0 = self.shape(srcs[0]);
+        let name = format!("concat{}", self.graph.layers.len());
+        self.push(name, LayerKind::Concat, srcs.to_vec(), Shape::new(s0.h, s0.w, c))
+    }
+
+    pub fn flatten(&mut self, from: usize) -> usize {
+        let s = self.shape(from);
+        let name = format!("flatten{}", self.graph.layers.len());
+        self.push(name, LayerKind::Flatten, vec![from], Shape::new(1, 1, s.elems()))
+    }
+
+    pub fn fc(&mut self, from: usize, units: usize) -> usize {
+        let name = format!("fc{}", self.graph.layers.len());
+        self.push(name, LayerKind::Fc { units }, vec![from], Shape::new(1, 1, units))
+    }
+
+    pub fn softmax(&mut self, from: usize) -> usize {
+        let s = self.shape(from);
+        let name = format!("softmax{}", self.graph.layers.len());
+        self.push(name, LayerKind::Softmax, vec![from], s)
+    }
+
+    /// GlobalPool → Fc → Softmax classification head.
+    pub fn classifier(&mut self, from: usize, classes: usize) -> usize {
+        let x = self.global_pool(from);
+        let x = self.fc(x, classes);
+        self.softmax(x)
+    }
+
+    /// Validate and return the graph.
+    pub fn finish(self) -> Result<Graph> {
+        self.graph.validate()?;
+        Ok(self.graph)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_propagate() {
+        let mut b = GraphBuilder::new("s");
+        let i = b.input(224, 224, 3);
+        let c = b.conv(i, 32, 3, 2);
+        assert_eq!(b.shape(c), Shape::new(112, 112, 32));
+        let p = b.maxpool(c, 2, 2);
+        assert_eq!(b.shape(p), Shape::new(56, 56, 32));
+        let d = b.dwconv(p, 3, 2);
+        assert_eq!(b.shape(d), Shape::new(28, 28, 32));
+        let g = b.global_pool(d);
+        assert_eq!(b.shape(g), Shape::new(1, 1, 32));
+        let f = b.fc(g, 10);
+        assert_eq!(b.shape(f), Shape::new(1, 1, 10));
+    }
+
+    #[test]
+    fn concat_sums_channels() {
+        let mut b = GraphBuilder::new("c");
+        let i = b.input(8, 8, 4);
+        let a = b.conv(i, 16, 1, 1);
+        let c = b.conv(i, 8, 3, 1);
+        let cc = b.concat(&[a, c]);
+        assert_eq!(b.shape(cc).c, 24);
+        assert!(b.finish().is_ok());
+    }
+
+    #[test]
+    fn add_shape_mismatch_fails_validation() {
+        let mut b = GraphBuilder::new("bad");
+        let i = b.input(8, 8, 4);
+        let a = b.conv(i, 16, 1, 1);
+        let c = b.conv(i, 8, 3, 1);
+        b.add(a, c);
+        assert!(b.finish().is_err());
+    }
+}

@@ -1,0 +1,553 @@
+//! Typed layer IR for network description graphs.
+//!
+//! A [`Graph`] is a topologically ordered list of [`Layer`]s referencing their
+//! producers by index — the same "network description" ANNETTE consumes in its
+//! estimation phase. Shapes are `(h, w, c)` feature maps; fully connected
+//! tensors are `(1, 1, n)`.
+
+pub mod builder;
+pub mod serial;
+
+pub use builder::GraphBuilder;
+
+use crate::error::{Error, Result};
+
+pub(crate) fn ceil_div(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+/// Largest allowed value for any single shape dimension, kernel, or stride.
+/// Keeps all downstream `usize` arithmetic (elems, flops, weights) far from
+/// overflow even for adversarial service input.
+const MAX_DIM: usize = 1 << 20;
+/// Largest allowed element count per tensor.
+const MAX_ELEMS: usize = 1 << 40;
+/// Largest allowed kernel size / stride (keeps `k²·cin·cout` weight counts
+/// below 2^60).
+const MAX_KERNEL: usize = 1 << 10;
+
+/// Feature-map shape.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Shape {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+}
+
+impl Shape {
+    pub fn new(h: usize, w: usize, c: usize) -> Self {
+        Shape { h, w, c }
+    }
+
+    pub fn elems(&self) -> usize {
+        self.h * self.w * self.c
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PoolOp {
+    Max,
+    Avg,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Act {
+    Relu,
+    Relu6,
+    Sigmoid,
+    Swish,
+}
+
+impl Act {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Act::Relu => "relu",
+            Act::Relu6 => "relu6",
+            Act::Sigmoid => "sigmoid",
+            Act::Swish => "swish",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Act> {
+        match s {
+            "relu" => Some(Act::Relu),
+            "relu6" => Some(Act::Relu6),
+            "sigmoid" => Some(Act::Sigmoid),
+            "swish" => Some(Act::Swish),
+            _ => None,
+        }
+    }
+}
+
+/// The operator an IR node performs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerKind {
+    Input,
+    Conv { filters: usize, kernel: usize, stride: usize },
+    DwConv { kernel: usize, stride: usize },
+    Pool { op: PoolOp, kernel: usize, stride: usize },
+    GlobalPool,
+    Fc { units: usize },
+    Add,
+    Concat,
+    Activation { act: Act },
+    BatchNorm,
+    Softmax,
+    Flatten,
+}
+
+impl LayerKind {
+    /// Stable operator name used by the JSON serialization and fusion keys.
+    pub fn op_name(&self) -> &'static str {
+        match self {
+            LayerKind::Input => "input",
+            LayerKind::Conv { .. } => "conv",
+            LayerKind::DwConv { .. } => "dwconv",
+            LayerKind::Pool { .. } => "pool",
+            LayerKind::GlobalPool => "globalpool",
+            LayerKind::Fc { .. } => "fc",
+            LayerKind::Add => "add",
+            LayerKind::Concat => "concat",
+            LayerKind::Activation { .. } => "act",
+            LayerKind::BatchNorm => "batchnorm",
+            LayerKind::Softmax => "softmax",
+            LayerKind::Flatten => "flatten",
+        }
+    }
+
+    /// The fusion-rule key of a foldable consumer op, or `None` when this
+    /// operator can never be folded into a producer's unit. The simulator and
+    /// the learned mapping model both key their fusion tables on this.
+    pub fn fusion_key(&self) -> Option<&'static str> {
+        match self {
+            LayerKind::BatchNorm => Some("batchnorm"),
+            LayerKind::Activation { .. } => Some("act"),
+            _ => None,
+        }
+    }
+}
+
+/// Modeling class a layer belongs to. Mapping and layer models are fitted per
+/// class, not per operator: all elementwise ops share one cost structure, and
+/// so on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerClass {
+    Conv,
+    DwConv,
+    Pool,
+    Fc,
+    Elem,
+    Mem,
+    None,
+}
+
+impl LayerClass {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            LayerClass::Conv => "conv",
+            LayerClass::DwConv => "dwconv",
+            LayerClass::Pool => "pool",
+            LayerClass::Fc => "fc",
+            LayerClass::Elem => "elem",
+            LayerClass::Mem => "mem",
+            LayerClass::None => "none",
+        }
+    }
+
+    /// Dense index for per-class parameter tables (None excluded).
+    pub fn index(&self) -> usize {
+        match self {
+            LayerClass::Conv => 0,
+            LayerClass::DwConv => 1,
+            LayerClass::Pool => 2,
+            LayerClass::Fc => 3,
+            LayerClass::Elem => 4,
+            LayerClass::Mem => 5,
+            LayerClass::None => usize::MAX,
+        }
+    }
+}
+
+/// One IR node.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Layer {
+    pub id: usize,
+    pub name: String,
+    pub kind: LayerKind,
+    /// Producer layer ids (topological: always `< id`).
+    pub inputs: Vec<usize>,
+    /// Shape of the primary (first) input; equal to `out` for `Input`.
+    pub inp: Shape,
+    pub out: Shape,
+}
+
+impl Layer {
+    pub fn class(&self) -> LayerClass {
+        match self.kind {
+            LayerKind::Input | LayerKind::Flatten => LayerClass::None,
+            LayerKind::Conv { .. } => LayerClass::Conv,
+            LayerKind::DwConv { .. } => LayerClass::DwConv,
+            LayerKind::Pool { .. } | LayerKind::GlobalPool => LayerClass::Pool,
+            LayerKind::Fc { .. } => LayerClass::Fc,
+            LayerKind::Add
+            | LayerKind::Activation { .. }
+            | LayerKind::BatchNorm
+            | LayerKind::Softmax => LayerClass::Elem,
+            LayerKind::Concat => LayerClass::Mem,
+        }
+    }
+
+    /// Operation count (2·MACs for conv/fc, elementwise op count otherwise).
+    pub fn flops(&self) -> f64 {
+        match self.kind {
+            LayerKind::Conv { kernel, .. } => {
+                self.out.elems() as f64 * 2.0 * (kernel * kernel * self.inp.c) as f64
+            }
+            LayerKind::DwConv { kernel, .. } => {
+                self.out.elems() as f64 * 2.0 * (kernel * kernel) as f64
+            }
+            LayerKind::Pool { kernel, .. } => {
+                self.out.elems() as f64 * (kernel * kernel) as f64
+            }
+            LayerKind::GlobalPool => self.inp.elems() as f64,
+            LayerKind::Fc { units } => 2.0 * self.inp.elems() as f64 * units as f64,
+            LayerKind::Add => self.out.elems() as f64,
+            LayerKind::Activation { .. } => self.out.elems() as f64,
+            LayerKind::BatchNorm => 2.0 * self.out.elems() as f64,
+            LayerKind::Softmax => 5.0 * self.out.c as f64,
+            LayerKind::Input | LayerKind::Concat | LayerKind::Flatten => 0.0,
+        }
+    }
+
+    /// Parameter tensor size in elements.
+    pub fn weight_elems(&self) -> f64 {
+        match self.kind {
+            LayerKind::Conv { filters, kernel, .. } => {
+                (kernel * kernel * self.inp.c * filters + filters) as f64
+            }
+            LayerKind::DwConv { kernel, .. } => {
+                (kernel * kernel * self.inp.c + self.inp.c) as f64
+            }
+            LayerKind::Fc { units } => (self.inp.elems() * units + units) as f64,
+            LayerKind::BatchNorm => 2.0 * self.out.c as f64,
+            _ => 0.0,
+        }
+    }
+
+    /// Activations moved: all inputs plus the output. Add reads two
+    /// equal-shape inputs; concat's total input traffic equals its output
+    /// size (channel concatenation), so it needs no per-input shapes.
+    pub fn data_elems(&self) -> f64 {
+        match self.kind {
+            LayerKind::Add => (self.inp.elems() * self.inputs.len() + self.out.elems()) as f64,
+            LayerKind::Concat => (2 * self.out.elems()) as f64,
+            _ => (self.inp.elems() + self.out.elems()) as f64,
+        }
+    }
+
+    /// Feature tuple the mapping models key on: `(cout, cin, wout)`.
+    pub fn mapping_features(&self) -> (usize, usize, usize) {
+        let cout = self.out.c;
+        let cin = match self.kind {
+            LayerKind::Fc { .. } => self.inp.elems(),
+            _ => self.inp.c,
+        };
+        (cout, cin, self.out.w)
+    }
+}
+
+/// A network description graph.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Graph {
+    pub name: String,
+    pub layers: Vec<Layer>,
+}
+
+impl Graph {
+    /// Number of layers (including inputs).
+    pub fn len(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.layers.is_empty()
+    }
+
+    /// Structural validation: ids dense and topological, shapes consistent.
+    pub fn validate(&self) -> Result<()> {
+        if self.layers.is_empty() {
+            return Err(Error::Invalid("graph has no layers".to_string()));
+        }
+        for (i, lay) in self.layers.iter().enumerate() {
+            if lay.id != i {
+                return Err(Error::Invalid(format!(
+                    "layer `{}` has id {} at position {i}",
+                    lay.name, lay.id
+                )));
+            }
+            for shape in [&lay.inp, &lay.out] {
+                if shape.h == 0 || shape.w == 0 || shape.c == 0 {
+                    return Err(Error::Invalid(format!(
+                        "layer `{}` has a zero shape dimension",
+                        lay.name
+                    )));
+                }
+                if shape.h > MAX_DIM || shape.w > MAX_DIM || shape.c > MAX_DIM {
+                    return Err(Error::Invalid(format!(
+                        "layer `{}` has a shape dimension beyond {MAX_DIM}",
+                        lay.name
+                    )));
+                }
+                match shape.h.checked_mul(shape.w).and_then(|x| x.checked_mul(shape.c)) {
+                    Some(e) if e <= MAX_ELEMS => {}
+                    _ => {
+                        return Err(Error::Invalid(format!(
+                            "layer `{}` has a tensor larger than {MAX_ELEMS} elements",
+                            lay.name
+                        )))
+                    }
+                }
+            }
+            match lay.kind {
+                LayerKind::Input => {
+                    if !lay.inputs.is_empty() {
+                        return Err(Error::Invalid(format!(
+                            "input layer `{}` must not have producers",
+                            lay.name
+                        )));
+                    }
+                    continue;
+                }
+                LayerKind::Conv { filters, kernel, stride } => {
+                    if filters == 0 || kernel == 0 || stride == 0 {
+                        return Err(Error::Invalid(format!(
+                            "conv `{}` has a zero parameter",
+                            lay.name
+                        )));
+                    }
+                }
+                LayerKind::DwConv { kernel, stride } | LayerKind::Pool { kernel, stride, .. } => {
+                    if kernel == 0 || stride == 0 {
+                        return Err(Error::Invalid(format!(
+                            "layer `{}` has a zero parameter",
+                            lay.name
+                        )));
+                    }
+                }
+                LayerKind::Fc { units } => {
+                    if units == 0 {
+                        return Err(Error::Invalid(format!("fc `{}` has zero units", lay.name)));
+                    }
+                }
+                _ => {}
+            }
+            if let LayerKind::Conv { kernel, stride, .. }
+            | LayerKind::DwConv { kernel, stride }
+            | LayerKind::Pool { kernel, stride, .. } = lay.kind
+            {
+                if kernel > MAX_KERNEL || stride > MAX_KERNEL {
+                    return Err(Error::Invalid(format!(
+                        "layer `{}` has a kernel or stride beyond {MAX_KERNEL}",
+                        lay.name
+                    )));
+                }
+            }
+            if lay.inputs.is_empty() {
+                return Err(Error::Invalid(format!(
+                    "layer `{}` has no producers",
+                    lay.name
+                )));
+            }
+            for &src in &lay.inputs {
+                if src >= i {
+                    return Err(Error::Invalid(format!(
+                        "layer `{}` references non-topological producer {src}",
+                        lay.name
+                    )));
+                }
+            }
+            let primary = &self.layers[lay.inputs[0]];
+            if primary.out != lay.inp {
+                return Err(Error::Invalid(format!(
+                    "layer `{}` records a primary input shape that disagrees with its producer",
+                    lay.name
+                )));
+            }
+            match lay.kind {
+                LayerKind::Add => {
+                    if lay.inputs.len() != 2 {
+                        return Err(Error::Invalid(format!(
+                            "add `{}` needs exactly two producers",
+                            lay.name
+                        )));
+                    }
+                    let a = &self.layers[lay.inputs[0]].out;
+                    let b = &self.layers[lay.inputs[1]].out;
+                    if a != b {
+                        return Err(Error::Invalid(format!(
+                            "add `{}` has mismatched input shapes",
+                            lay.name
+                        )));
+                    }
+                }
+                LayerKind::Concat => {
+                    if lay.inputs.len() < 2 {
+                        return Err(Error::Invalid(format!(
+                            "concat `{}` needs at least two producers",
+                            lay.name
+                        )));
+                    }
+                    let s0 = &self.layers[lay.inputs[0]].out;
+                    for &src in &lay.inputs[1..] {
+                        let s = &self.layers[src].out;
+                        if s.h != s0.h || s.w != s0.w {
+                            return Err(Error::Invalid(format!(
+                                "concat `{}` has mismatched spatial dims",
+                                lay.name
+                            )));
+                        }
+                    }
+                }
+                _ => {
+                    if lay.inputs.len() != 1 {
+                        return Err(Error::Invalid(format!(
+                            "layer `{}` needs exactly one producer",
+                            lay.name
+                        )));
+                    }
+                }
+            }
+            // Operator semantics: the declared output shape must be the one
+            // the operator actually produces (matches GraphBuilder's rules),
+            // so documents from untrusted sources can't smuggle in shapes
+            // that silently corrupt flops/bytes features.
+            let inp = lay.inp;
+            let expect = match lay.kind {
+                LayerKind::Input => None,
+                LayerKind::Conv { filters, stride, .. } => Some(Shape::new(
+                    ceil_div(inp.h, stride),
+                    ceil_div(inp.w, stride),
+                    filters,
+                )),
+                LayerKind::DwConv { stride, .. } => Some(Shape::new(
+                    ceil_div(inp.h, stride),
+                    ceil_div(inp.w, stride),
+                    inp.c,
+                )),
+                LayerKind::Pool { stride, .. } => Some(Shape::new(
+                    (inp.h / stride).max(1),
+                    (inp.w / stride).max(1),
+                    inp.c,
+                )),
+                LayerKind::GlobalPool => Some(Shape::new(1, 1, inp.c)),
+                LayerKind::Fc { units } => Some(Shape::new(1, 1, units)),
+                LayerKind::Flatten => Some(Shape::new(1, 1, inp.elems())),
+                LayerKind::Add
+                | LayerKind::Activation { .. }
+                | LayerKind::BatchNorm
+                | LayerKind::Softmax => Some(inp),
+                LayerKind::Concat => {
+                    let c = lay.inputs.iter().map(|&s| self.layers[s].out.c).sum();
+                    Some(Shape::new(inp.h, inp.w, c))
+                }
+            };
+            if let Some(expect) = expect {
+                if lay.out != expect {
+                    return Err(Error::Invalid(format!(
+                        "layer `{}` declares output {:?} but its operator produces {:?}",
+                        lay.name, lay.out, expect
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Assign every layer to an execution unit under a fusion predicate.
+///
+/// Returns, per layer, the id of the unit root it executes in. A layer joins
+/// its producer's unit when it is a single-input foldable op and
+/// `fusable(root_class, consumer_kind)` holds; the mapping model supplies the
+/// predicate at estimation time, the simulator at profile time.
+pub fn assign_units<F>(g: &Graph, fusable: F) -> Vec<usize>
+where
+    F: Fn(LayerClass, &LayerKind) -> bool,
+{
+    let mut roots = vec![0usize; g.layers.len()];
+    for lay in &g.layers {
+        roots[lay.id] = lay.id;
+        if lay.inputs.len() == 1 {
+            let root = roots[lay.inputs[0]];
+            let producer = &g.layers[root];
+            if producer.class() != LayerClass::None && fusable(producer.class(), &lay.kind) {
+                roots[lay.id] = root;
+            }
+        }
+    }
+    roots
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_graph() -> Graph {
+        let mut b = GraphBuilder::new("t");
+        let i = b.input(8, 8, 3);
+        let x = b.conv_bn_relu(i, 16, 3, 1);
+        b.classifier(x, 10);
+        b.finish().unwrap()
+    }
+
+    #[test]
+    fn conv_flops_match_formula() {
+        let g = small_graph();
+        let conv = &g.layers[1];
+        assert_eq!(conv.kind.op_name(), "conv");
+        // 8x8x16 output, 3x3x3 kernel, 2 ops per MAC
+        assert_eq!(conv.flops(), (8 * 8 * 16 * 2 * 3 * 3 * 3) as f64);
+        assert_eq!(conv.weight_elems(), (3 * 3 * 3 * 16 + 16) as f64);
+    }
+
+    #[test]
+    fn validation_catches_shape_mismatch() {
+        let mut g = small_graph();
+        g.layers[2].inp = Shape::new(4, 4, 16);
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn validation_catches_operator_shape_lies() {
+        // A conv claiming a tiny output would zero its flops feature.
+        let mut g = small_graph();
+        g.layers[1].out = Shape::new(1, 1, 16);
+        assert!(g.validate().is_err());
+        // Oversized dimensions are rejected before any arithmetic can wrap.
+        let mut g = small_graph();
+        g.layers[0].inp = Shape::new(1 << 30, 1 << 30, 1);
+        g.layers[0].out = Shape::new(1 << 30, 1 << 30, 1);
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn validation_catches_bad_ids() {
+        let mut g = small_graph();
+        g.layers[1].id = 5;
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn fusion_assigns_bn_relu_to_conv_unit() {
+        let g = small_graph();
+        let roots = assign_units(&g, |pc, kind| {
+            pc == LayerClass::Conv
+                && matches!(kind, LayerKind::BatchNorm | LayerKind::Activation { .. })
+        });
+        // input, conv, bn, relu, gap, fc, softmax
+        assert_eq!(roots[1], 1);
+        assert_eq!(roots[2], 1);
+        assert_eq!(roots[3], 1);
+        assert_eq!(roots[4], 4);
+    }
+}

@@ -1,0 +1,240 @@
+//! JSON (de)serialization of network description graphs.
+//!
+//! The on-disk format is versioned (`annette-graph.v1`) and intentionally
+//! explicit: every layer stores its operator, producers, and both shapes, so
+//! documents can be produced by external tooling and validated on load.
+
+use std::fs;
+use std::path::Path;
+
+use super::{Act, Graph, Layer, LayerKind, PoolOp, Shape};
+use crate::error::{Error, Result};
+use crate::json::Value;
+
+pub const FORMAT: &str = "annette-graph.v1";
+
+fn shape_to_value(s: &Shape) -> Value {
+    Value::Arr(vec![Value::int(s.h), Value::int(s.w), Value::int(s.c)])
+}
+
+fn shape_from_value(v: &Value) -> Result<Shape> {
+    let xs = v
+        .as_arr()
+        .ok_or_else(|| Error::Json("shape is not an array".to_string()))?;
+    if xs.len() != 3 {
+        return Err(Error::Json("shape must have three entries".to_string()));
+    }
+    let dim = |i: usize| {
+        xs[i]
+            .as_usize()
+            .ok_or_else(|| Error::Json("shape entry is not a non-negative integer".to_string()))
+    };
+    Ok(Shape::new(dim(0)?, dim(1)?, dim(2)?))
+}
+
+fn kind_to_value(kind: &LayerKind) -> Value {
+    let mut fields = vec![("op".to_string(), Value::str(kind.op_name()))];
+    match *kind {
+        LayerKind::Conv { filters, kernel, stride } => {
+            fields.push(("filters".to_string(), Value::int(filters)));
+            fields.push(("kernel".to_string(), Value::int(kernel)));
+            fields.push(("stride".to_string(), Value::int(stride)));
+        }
+        LayerKind::DwConv { kernel, stride } => {
+            fields.push(("kernel".to_string(), Value::int(kernel)));
+            fields.push(("stride".to_string(), Value::int(stride)));
+        }
+        LayerKind::Pool { op, kernel, stride } => {
+            fields.push((
+                "pool".to_string(),
+                Value::str(match op {
+                    PoolOp::Max => "max",
+                    PoolOp::Avg => "avg",
+                }),
+            ));
+            fields.push(("kernel".to_string(), Value::int(kernel)));
+            fields.push(("stride".to_string(), Value::int(stride)));
+        }
+        LayerKind::Fc { units } => {
+            fields.push(("units".to_string(), Value::int(units)));
+        }
+        LayerKind::Activation { act } => {
+            fields.push(("fn".to_string(), Value::str(act.as_str())));
+        }
+        _ => {}
+    }
+    Value::Obj(fields)
+}
+
+fn kind_from_value(v: &Value) -> Result<LayerKind> {
+    let op = v.req_str("op")?;
+    match op {
+        "input" => Ok(LayerKind::Input),
+        "conv" => Ok(LayerKind::Conv {
+            filters: v.req_usize("filters")?,
+            kernel: v.req_usize("kernel")?,
+            stride: v.req_usize("stride")?,
+        }),
+        "dwconv" => Ok(LayerKind::DwConv {
+            kernel: v.req_usize("kernel")?,
+            stride: v.req_usize("stride")?,
+        }),
+        "pool" => {
+            let pool = v.req_str("pool")?;
+            let op = match pool {
+                "max" => PoolOp::Max,
+                "avg" => PoolOp::Avg,
+                other => return Err(Error::Json(format!("unknown pool op `{other}`"))),
+            };
+            Ok(LayerKind::Pool {
+                op,
+                kernel: v.req_usize("kernel")?,
+                stride: v.req_usize("stride")?,
+            })
+        }
+        "globalpool" => Ok(LayerKind::GlobalPool),
+        "fc" => Ok(LayerKind::Fc {
+            units: v.req_usize("units")?,
+        }),
+        "add" => Ok(LayerKind::Add),
+        "concat" => Ok(LayerKind::Concat),
+        "act" => {
+            let f = v.req_str("fn")?;
+            let act = Act::parse(f)
+                .ok_or_else(|| Error::Json(format!("unknown activation `{f}`")))?;
+            Ok(LayerKind::Activation { act })
+        }
+        "batchnorm" => Ok(LayerKind::BatchNorm),
+        "softmax" => Ok(LayerKind::Softmax),
+        "flatten" => Ok(LayerKind::Flatten),
+        other => Err(Error::Json(format!("unknown op `{other}`"))),
+    }
+}
+
+/// Convert a graph to its JSON document.
+pub fn graph_to_value(g: &Graph) -> Value {
+    let layers: Vec<Value> = g
+        .layers
+        .iter()
+        .map(|lay| {
+            Value::Obj(vec![
+                ("id".to_string(), Value::int(lay.id)),
+                ("name".to_string(), Value::str(lay.name.clone())),
+                ("kind".to_string(), kind_to_value(&lay.kind)),
+                (
+                    "inputs".to_string(),
+                    Value::Arr(lay.inputs.iter().map(|&i| Value::int(i)).collect()),
+                ),
+                ("in".to_string(), shape_to_value(&lay.inp)),
+                ("out".to_string(), shape_to_value(&lay.out)),
+            ])
+        })
+        .collect();
+    Value::Obj(vec![
+        ("format".to_string(), Value::str(FORMAT)),
+        ("name".to_string(), Value::str(g.name.clone())),
+        ("layers".to_string(), Value::Arr(layers)),
+    ])
+}
+
+/// Rebuild a graph from its JSON document (validates structure).
+pub fn graph_from_value(v: &Value) -> Result<Graph> {
+    let format = v.req_str("format")?;
+    if format != FORMAT {
+        return Err(Error::Json(format!(
+            "unsupported graph format `{format}` (expected `{FORMAT}`)"
+        )));
+    }
+    let name = v.req_str("name")?.to_string();
+    let mut layers = Vec::new();
+    for lv in v.req_arr("layers")? {
+        let inputs: Vec<usize> = lv
+            .req_arr("inputs")?
+            .iter()
+            .map(|x| {
+                x.as_usize()
+                    .ok_or_else(|| Error::Json("layer input is not an id".to_string()))
+            })
+            .collect::<Result<_>>()?;
+        layers.push(Layer {
+            id: lv.req_usize("id")?,
+            name: lv.req_str("name")?.to_string(),
+            kind: kind_from_value(lv.req("kind")?)?,
+            inputs,
+            inp: shape_from_value(lv.req("in")?)?,
+            out: shape_from_value(lv.req("out")?)?,
+        });
+    }
+    let g = Graph { name, layers };
+    g.validate()?;
+    Ok(g)
+}
+
+/// Persist a graph as JSON.
+pub fn save<P: AsRef<Path>>(g: &Graph, path: P) -> Result<()> {
+    fs::write(path, graph_to_value(g).to_string())?;
+    Ok(())
+}
+
+/// Load a graph from a JSON file.
+pub fn load<P: AsRef<Path>>(path: P) -> Result<Graph> {
+    let text = fs::read_to_string(path)?;
+    graph_from_value(&Value::parse(&text)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    fn demo() -> Graph {
+        let mut b = GraphBuilder::new("demo");
+        let i = b.input(16, 16, 3);
+        let a = b.conv_bn_relu(i, 8, 3, 1);
+        let c = b.dwconv(a, 3, 1);
+        let d = b.add(a, c);
+        let e = b.maxpool(d, 2, 2);
+        let f = b.conv(e, 12, 1, 1);
+        let cc = b.concat(&[e, f]);
+        b.classifier(cc, 10);
+        b.finish().unwrap()
+    }
+
+    #[test]
+    fn value_roundtrip_is_identity() {
+        let g = demo();
+        let v = graph_to_value(&g);
+        let back = graph_from_value(&v).unwrap();
+        assert_eq!(g, back);
+    }
+
+    #[test]
+    fn text_roundtrip_is_identity() {
+        let g = demo();
+        let text = graph_to_value(&g).to_string();
+        let back = graph_from_value(&Value::parse(&text).unwrap()).unwrap();
+        assert_eq!(g, back);
+    }
+
+    #[test]
+    fn wrong_format_is_rejected() {
+        let g = demo();
+        let mut v = graph_to_value(&g);
+        if let Value::Obj(fields) = &mut v {
+            fields[0].1 = Value::str("other.v9");
+        }
+        assert!(graph_from_value(&v).is_err());
+    }
+
+    #[test]
+    fn corrupt_layer_is_rejected() {
+        let g = demo();
+        let mut v = graph_to_value(&g);
+        if let Value::Obj(fields) = &mut v {
+            if let Value::Arr(layers) = &mut fields[2].1 {
+                layers.remove(1); // drop the conv: downstream ids now dangle
+            }
+        }
+        assert!(graph_from_value(&v).is_err());
+    }
+}

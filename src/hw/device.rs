@@ -1,0 +1,155 @@
+//! The `Device` abstraction: anything that can be benchmarked produces
+//! per-layer latency profiles for a network description graph.
+
+use crate::error::Result;
+use crate::graph::{Graph, LayerClass};
+use crate::json::Value;
+
+/// Public datasheet of a target. This is the only hardware information the
+/// analytical models (roofline, refined roofline) may use; everything else
+/// must be learned from benchmarks.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeviceSpec {
+    pub name: String,
+    /// Peak arithmetic throughput in 10^9 ops/s.
+    pub peak_gops: f64,
+    /// DRAM bandwidth in GB/s.
+    pub bandwidth_gbs: f64,
+    /// Bytes per tensor element (1 for int8 targets, 2 for fp16).
+    pub bytes_per_elem: f64,
+    /// Output-channel parallelism of the PE array.
+    pub channel_align: usize,
+    /// Input-channel vector width.
+    pub input_align: usize,
+    /// Pixel (width) parallelism.
+    pub spatial_align: usize,
+}
+
+impl DeviceSpec {
+    /// Ideal compute time in microseconds at full efficiency.
+    pub fn ideal_compute_us(&self, flops: f64) -> f64 {
+        flops / (self.peak_gops * 1e3)
+    }
+
+    /// Ideal memory time in microseconds at full bandwidth.
+    pub fn ideal_mem_us(&self, bytes: f64) -> f64 {
+        bytes / (self.bandwidth_gbs * 1e3)
+    }
+
+    /// Total bytes a layer moves on this device.
+    pub fn layer_bytes(&self, lay: &crate::graph::Layer) -> f64 {
+        self.bytes_per_elem * (lay.data_elems() + lay.weight_elems())
+    }
+
+    pub fn to_value(&self) -> Value {
+        Value::Obj(vec![
+            ("name".to_string(), Value::str(self.name.clone())),
+            ("peak_gops".to_string(), Value::num(self.peak_gops)),
+            ("bandwidth_gbs".to_string(), Value::num(self.bandwidth_gbs)),
+            ("bytes_per_elem".to_string(), Value::num(self.bytes_per_elem)),
+            ("channel_align".to_string(), Value::int(self.channel_align)),
+            ("input_align".to_string(), Value::int(self.input_align)),
+            ("spatial_align".to_string(), Value::int(self.spatial_align)),
+        ])
+    }
+
+    pub fn from_value(v: &Value) -> Result<DeviceSpec> {
+        Ok(DeviceSpec {
+            name: v.req_str("name")?.to_string(),
+            peak_gops: v.req_f64("peak_gops")?,
+            bandwidth_gbs: v.req_f64("bandwidth_gbs")?,
+            bytes_per_elem: v.req_f64("bytes_per_elem")?,
+            channel_align: v.req_usize("channel_align")?,
+            input_align: v.req_usize("input_align")?,
+            spatial_align: v.req_usize("spatial_align")?,
+        })
+    }
+}
+
+/// PE-array utilization of a dimension of size `n` tiled at alignment `a`:
+/// `n / (ceil(n / a) * a)`, i.e. 1.0 when `n` is a multiple of `a`.
+pub fn util(n: usize, a: usize) -> f64 {
+    if n == 0 || a == 0 {
+        return 1.0;
+    }
+    let tiles = (n + a - 1) / a;
+    n as f64 / (tiles * a) as f64
+}
+
+/// Combined utilization of a layer class given the three alignment factors.
+/// Which dimensions participate depends on how the class maps to the array.
+pub fn class_utils(
+    class: LayerClass,
+    cout: usize,
+    cin: usize,
+    wout: usize,
+    align_out: usize,
+    align_in: usize,
+    align_w: usize,
+) -> f64 {
+    match class {
+        LayerClass::Conv => util(cout, align_out) * util(cin, align_in) * util(wout, align_w),
+        LayerClass::DwConv => util(cout, align_out) * util(wout, align_w),
+        LayerClass::Fc => util(cout, align_out) * util(cin, align_in),
+        LayerClass::Pool | LayerClass::Elem => util(cout, align_out),
+        LayerClass::Mem | LayerClass::None => 1.0,
+    }
+}
+
+/// Measured (or simulated) time of one layer within a profile.
+#[derive(Clone, Debug)]
+pub struct LayerTiming {
+    pub layer_id: usize,
+    pub name: String,
+    /// Milliseconds; zero when the layer was fused away.
+    pub ms: f64,
+    /// When fused, the unit root this layer executes in.
+    pub fused_into: Option<usize>,
+}
+
+/// Result of profiling a graph on a device.
+#[derive(Clone, Debug)]
+pub struct Profile {
+    pub layers: Vec<LayerTiming>,
+}
+
+impl Profile {
+    pub fn total_ms(&self) -> f64 {
+        self.layers.iter().map(|l| l.ms).sum()
+    }
+}
+
+/// A benchmarkable target. Implementations must be `Send + Sync` so the
+/// benchmark orchestrator can drive them from multiple worker threads.
+pub trait Device: Send + Sync {
+    /// The public datasheet.
+    fn spec(&self) -> DeviceSpec;
+
+    /// Execute `graph` `runs` times and return mean per-layer timings.
+    /// Deterministic for a fixed `(graph, runs, seed)` triple.
+    fn profile(&self, graph: &Graph, runs: usize, seed: u64) -> Profile;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn util_is_one_at_alignment() {
+        assert_eq!(util(16, 16), 1.0);
+        assert_eq!(util(32, 16), 1.0);
+        assert_eq!(util(17, 16), 17.0 / 32.0);
+        assert_eq!(util(1, 16), 1.0 / 16.0);
+        assert_eq!(util(0, 16), 1.0);
+    }
+
+    #[test]
+    fn class_utils_dimensions() {
+        // conv uses all three, pool only channels
+        let u_conv = class_utils(LayerClass::Conv, 17, 3, 9, 16, 16, 8);
+        assert!((u_conv - (17.0 / 32.0) * (3.0 / 16.0) * (9.0 / 16.0)).abs() < 1e-12);
+        let u_pool = class_utils(LayerClass::Pool, 17, 3, 9, 16, 16, 8);
+        assert!((u_pool - 17.0 / 32.0).abs() < 1e-12);
+        assert_eq!(class_utils(LayerClass::Mem, 5, 5, 5, 16, 16, 8), 1.0);
+    }
+}

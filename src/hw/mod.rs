@@ -1,0 +1,11 @@
+//! Hardware targets: the [`device::Device`] abstraction and the simulated
+//! accelerators benchmarks run against.
+
+pub mod device;
+pub mod dpu;
+pub mod sim;
+pub mod vpu;
+
+pub use device::{Device, DeviceSpec, Profile};
+pub use dpu::DpuDevice;
+pub use vpu::VpuDevice;

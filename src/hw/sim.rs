@@ -1,0 +1,166 @@
+//! Deterministic latency simulator backing the virtual devices.
+//!
+//! The simulator plays the role of real silicon: it has *hidden* per-class
+//! efficiencies, overheads, and fusion behavior that the estimation models
+//! never see directly — they can only learn them through benchmarks, exactly
+//! as ANNETTE's benchmark phase does on physical hardware. Only the
+//! [`DeviceSpec`] datasheet is public.
+//!
+//! Per execution-unit latency model (microseconds):
+//!
+//! ```text
+//! t = overhead[class]
+//!   + compute_ideal / (base_eff[class] * util_cout * util_cin * util_w)
+//!   + mem_ideal / mem_eff[class]
+//! ```
+//!
+//! with multiplicative Gaussian measurement noise per run, and foldable
+//! consumers (BatchNorm / Activation) fused into their producer's unit at
+//! zero cost when the device supports that fusion.
+
+use crate::graph::{assign_units, Graph, LayerClass, LayerKind};
+use crate::hw::device::{class_utils, Device, DeviceSpec, LayerTiming, Profile};
+use crate::rng::{Rng, PHI};
+
+/// Hidden (non-datasheet) characteristics, indexed by `LayerClass::index()`:
+/// `[conv, dwconv, pool, fc, elem, mem]`.
+#[derive(Clone, Debug)]
+pub struct SimParams {
+    pub base_eff: [f64; 6],
+    pub mem_eff: [f64; 6],
+    pub overhead_us: [f64; 6],
+    pub noise_sigma: f64,
+}
+
+/// Fusion capability: (producer class, foldable consumer op name).
+pub type FusedPair = (LayerClass, &'static str);
+
+/// A simulated accelerator.
+pub struct SimDevice {
+    pub spec: DeviceSpec,
+    pub params: SimParams,
+    pub fused: Vec<FusedPair>,
+}
+
+impl SimDevice {
+    fn fusable(&self, producer: LayerClass, consumer: &LayerKind) -> bool {
+        match consumer.fusion_key() {
+            Some(key) => self.fused.iter().any(|(p, c)| *p == producer && *c == key),
+            None => false,
+        }
+    }
+
+    /// Noise-free unit latency in microseconds.
+    fn unit_time_us(&self, lay: &crate::graph::Layer) -> f64 {
+        let class = lay.class();
+        if class == LayerClass::None {
+            return 0.0;
+        }
+        let ci = class.index();
+        let (cout, cin, wout) = lay.mapping_features();
+        let u = class_utils(
+            class,
+            cout,
+            cin,
+            wout,
+            self.spec.channel_align,
+            self.spec.input_align,
+            self.spec.spatial_align,
+        );
+        let compute = self.spec.ideal_compute_us(lay.flops());
+        let mem = self.spec.ideal_mem_us(self.spec.layer_bytes(lay));
+        self.params.overhead_us[ci]
+            + compute / (self.params.base_eff[ci] * u)
+            + mem / self.params.mem_eff[ci]
+    }
+}
+
+impl Device for SimDevice {
+    fn spec(&self) -> DeviceSpec {
+        self.spec.clone()
+    }
+
+    fn profile(&self, graph: &Graph, runs: usize, seed: u64) -> Profile {
+        let runs = runs.max(1);
+        let roots = assign_units(graph, |p, k| self.fusable(p, k));
+        let mut layers = Vec::with_capacity(graph.layers.len());
+        for lay in &graph.layers {
+            let fused = roots[lay.id] != lay.id;
+            if fused || lay.class() == LayerClass::None {
+                layers.push(LayerTiming {
+                    layer_id: lay.id,
+                    name: lay.name.clone(),
+                    ms: 0.0,
+                    fused_into: if fused { Some(roots[lay.id]) } else { None },
+                });
+                continue;
+            }
+            let t = self.unit_time_us(lay);
+            let mut rng = Rng::new(seed.wrapping_add((lay.id as u64).wrapping_mul(PHI)));
+            let mut acc = 0.0;
+            for _ in 0..runs {
+                let m = t * (1.0 + self.params.noise_sigma * rng.normal());
+                acc += m.max(0.2 * t);
+            }
+            layers.push(LayerTiming {
+                layer_id: lay.id,
+                name: lay.name.clone(),
+                ms: acc / runs as f64 / 1000.0,
+                fused_into: None,
+            });
+        }
+        Profile { layers }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+    use crate::hw::dpu::DpuDevice;
+
+    fn net() -> Graph {
+        let mut b = GraphBuilder::new("t");
+        let i = b.input(28, 28, 16);
+        let x = b.conv_bn_relu(i, 32, 3, 1);
+        b.classifier(x, 10);
+        b.finish().unwrap()
+    }
+
+    #[test]
+    fn profile_is_deterministic() {
+        let dev = DpuDevice::zcu102();
+        let a = dev.profile(&net(), 5, 99).total_ms();
+        let b = dev.profile(&net(), 5, 99).total_ms();
+        assert_eq!(a, b);
+        let c = dev.profile(&net(), 5, 100).total_ms();
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn fused_layers_cost_nothing() {
+        let dev = DpuDevice::zcu102();
+        let p = dev.profile(&net(), 3, 0);
+        // bn (2) and relu (3) fold into the conv (1)
+        assert_eq!(p.layers[2].ms, 0.0);
+        assert_eq!(p.layers[2].fused_into, Some(1));
+        assert_eq!(p.layers[3].fused_into, Some(1));
+        assert!(p.layers[1].ms > 0.0);
+    }
+
+    #[test]
+    fn more_runs_reduce_noise() {
+        let dev = DpuDevice::zcu102();
+        let few: Vec<f64> = (0..20)
+            .map(|s| dev.profile(&net(), 1, s).total_ms())
+            .collect();
+        let many: Vec<f64> = (0..20)
+            .map(|s| dev.profile(&net(), 50, s).total_ms())
+            .collect();
+        let spread = |xs: &[f64]| {
+            let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+            xs.iter().map(|x| (x - mean).abs()).sum::<f64>() / xs.len() as f64
+        };
+        assert!(spread(&many) < spread(&few));
+    }
+}

@@ -1,0 +1,54 @@
+//! Simulated Intel Neural Compute Stick 2 (Myriad X VPU, fp16).
+
+use crate::graph::{Graph, LayerClass};
+use crate::hw::device::{Device, DeviceSpec, Profile};
+use crate::hw::sim::{SimDevice, SimParams};
+
+/// An NCS2-class VPU: narrower fp16 SHAVE vector units, high per-layer
+/// dispatch overhead (USB-attached runtime), conv-centric fusion only.
+pub struct VpuDevice {
+    sim: SimDevice,
+}
+
+impl VpuDevice {
+    pub fn ncs2() -> Self {
+        VpuDevice {
+            sim: SimDevice {
+                spec: DeviceSpec {
+                    name: "NCS2-VPU-sim".to_string(),
+                    peak_gops: 1000.0,
+                    bandwidth_gbs: 10.0,
+                    bytes_per_elem: 2.0,
+                    channel_align: 8,
+                    input_align: 1,
+                    spatial_align: 4,
+                },
+                // Hidden silicon behavior — learnable only through benchmarks.
+                // Order: [conv, dwconv, pool, fc, elem, mem]
+                params: SimParams {
+                    base_eff: [0.65, 0.50, 0.50, 0.55, 0.40, 0.85],
+                    mem_eff: [0.70, 0.55, 0.80, 0.85, 0.80, 0.90],
+                    overhead_us: [150.0, 140.0, 90.0, 110.0, 60.0, 40.0],
+                    noise_sigma: 0.015,
+                },
+                fused: vec![
+                    (LayerClass::Conv, "batchnorm"),
+                    (LayerClass::Conv, "act"),
+                    (LayerClass::DwConv, "batchnorm"),
+                    (LayerClass::DwConv, "act"),
+                    (LayerClass::Fc, "act"),
+                ],
+            },
+        }
+    }
+}
+
+impl Device for VpuDevice {
+    fn spec(&self) -> DeviceSpec {
+        self.sim.spec()
+    }
+
+    fn profile(&self, graph: &Graph, runs: usize, seed: u64) -> Profile {
+        self.sim.profile(graph, runs, seed)
+    }
+}

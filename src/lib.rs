@@ -1,0 +1,50 @@
+//! # annette
+//!
+//! A reproduction of **ANNETTE: Accurate Neural Network Execution Time
+//! Estimation with Stacked Models** (arXiv 2105.03176) as a self-contained
+//! Rust crate.
+//!
+//! The pipeline has two phases, mirroring the paper's Fig. 2:
+//!
+//! 1. **Benchmark phase** — [`coordinator::orchestrator::run_campaign`]
+//!    sweeps micro-kernel and multi-layer benchmarks on a [`hw::Device`]
+//!    (simulated ZCU102 DPU / NCS2 VPU), and
+//!    [`models::PlatformModel::fit`] generates the stacked platform model:
+//!    mapping models (fusion rules, PE-alignment) plus per-layer-class
+//!    roofline / refined-roofline / statistical / mixed latency models.
+//! 2. **Estimation phase** — [`estim::Estimator`] predicts layer-wise
+//!    latency for a network description [`graph::Graph`] without compiling
+//!    or executing it, reconstructing the execution-unit graph from the
+//!    learned fusion rules.
+//!
+//! The crate is dependency-free by design (hand-rolled JSON in [`json`]) so
+//! it builds in hermetic environments.
+
+pub mod coordinator;
+pub mod error;
+pub mod estim;
+pub mod graph;
+pub mod hw;
+pub mod json;
+pub mod metrics;
+pub mod models;
+pub mod repro;
+pub mod rng;
+pub mod zoo;
+
+pub use error::{Error, Result};
+
+/// Commonly used types, glob-importable: `use annette::prelude::*;`.
+pub mod prelude {
+    pub use crate::coordinator::orchestrator::{default_threads, run_campaign, BenchData};
+    pub use crate::coordinator::Service;
+    pub use crate::error::{Error, Result};
+    pub use crate::estim::estimator::{Estimate, Estimator};
+    pub use crate::graph::{Graph, GraphBuilder, Layer, LayerClass, LayerKind, Shape};
+    pub use crate::hw::device::{Device, DeviceSpec, Profile};
+    pub use crate::hw::dpu::DpuDevice;
+    pub use crate::hw::vpu::VpuDevice;
+    pub use crate::metrics::{mae, mape, spearman_rho};
+    pub use crate::models::layer::ModelKind;
+    pub use crate::models::platform::PlatformModel;
+}

@@ -1,0 +1,87 @@
+//! Accuracy and fidelity metrics used throughout the paper's evaluation:
+//! MAE, MAPE, and Spearman's rank correlation coefficient.
+
+/// Mean absolute error. Empty input yields 0.
+///
+/// # Panics
+/// Panics when the slices have different lengths.
+pub fn mae(pred: &[f64], truth: &[f64]) -> f64 {
+    assert_eq!(pred.len(), truth.len(), "mae: length mismatch");
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let total: f64 = pred.iter().zip(truth).map(|(p, t)| (p - t).abs()).sum();
+    total / pred.len() as f64
+}
+
+/// Mean absolute percentage error, in percent. Entries whose ground truth is
+/// exactly zero are skipped; empty (or all-skipped) input yields 0.
+///
+/// # Panics
+/// Panics when the slices have different lengths.
+pub fn mape(pred: &[f64], truth: &[f64]) -> f64 {
+    assert_eq!(pred.len(), truth.len(), "mape: length mismatch");
+    let mut acc = 0.0;
+    let mut n = 0usize;
+    for (p, t) in pred.iter().zip(truth) {
+        if *t != 0.0 {
+            acc += (p - t).abs() / t.abs();
+            n += 1;
+        }
+    }
+    if n == 0 {
+        0.0
+    } else {
+        100.0 * acc / n as f64
+    }
+}
+
+/// Average ranks (1-based); ties receive the mean of their rank range.
+fn ranks(xs: &[f64]) -> Vec<f64> {
+    let mut order: Vec<usize> = (0..xs.len()).collect();
+    order.sort_by(|&a, &b| xs[a].partial_cmp(&xs[b]).unwrap_or(std::cmp::Ordering::Equal));
+    let mut out = vec![0.0; xs.len()];
+    let mut i = 0;
+    while i < order.len() {
+        let mut j = i;
+        while j + 1 < order.len() && xs[order[j + 1]] == xs[order[i]] {
+            j += 1;
+        }
+        let avg = (i + j) as f64 / 2.0 + 1.0;
+        for &k in &order[i..=j] {
+            out[k] = avg;
+        }
+        i = j + 1;
+    }
+    out
+}
+
+/// Spearman's rank correlation coefficient (tie-aware: Pearson correlation of
+/// average ranks). Returns 0 for inputs shorter than two entries or with zero
+/// rank variance.
+///
+/// # Panics
+/// Panics when the slices have different lengths.
+pub fn spearman_rho(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len(), "spearman_rho: length mismatch");
+    if a.len() < 2 {
+        return 0.0;
+    }
+    let ra = ranks(a);
+    let rb = ranks(b);
+    let n = ra.len() as f64;
+    let ma = ra.iter().sum::<f64>() / n;
+    let mb = rb.iter().sum::<f64>() / n;
+    let mut num = 0.0;
+    let mut da = 0.0;
+    let mut db = 0.0;
+    for (x, y) in ra.iter().zip(&rb) {
+        num += (x - ma) * (y - mb);
+        da += (x - ma) * (x - ma);
+        db += (y - mb) * (y - mb);
+    }
+    if da == 0.0 || db == 0.0 {
+        return 0.0;
+    }
+    num / (da.sqrt() * db.sqrt())
+}

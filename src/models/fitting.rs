@@ -1,0 +1,246 @@
+//! Model generation: least-squares fits and PE-alignment detection.
+//!
+//! Per layer class the generator fits
+//!
+//! ```text
+//! t_us = θ0 · (compute_ideal / util(aligns)) + θ1 · mem_ideal + θ2
+//! ```
+//!
+//! where `θ0 = 1/base_eff`, `θ1 = 1/mem_eff`, `θ2 = overhead`, and the
+//! alignment triple is detected by grid search: the candidate whose
+//! utilization correction best linearizes the measurements wins. The
+//! statistical model is the same regression *without* the utilization
+//! correction — exactly the paper's distinction between the statistical and
+//! mixed families.
+
+use crate::graph::LayerClass;
+use crate::hw::device::{class_utils, DeviceSpec};
+
+use crate::coordinator::orchestrator::MicroRecord;
+
+const RIDGE: f64 = 1e-9;
+const ALIGN_CANDIDATES: [usize; 6] = [1, 2, 4, 8, 16, 32];
+const ALIGN_CANDIDATES_W: [usize; 5] = [1, 2, 4, 8, 16];
+
+/// Solve `argmin_θ Σ (rows·θ - ys)²` for three features via ridge-stabilized
+/// normal equations (Gauss–Jordan with partial pivoting).
+pub fn lstsq3(rows: &[[f64; 3]], ys: &[f64]) -> [f64; 3] {
+    let mut ata = [[0.0f64; 3]; 3];
+    let mut aty = [0.0f64; 3];
+    for i in 0..3 {
+        ata[i][i] = RIDGE;
+    }
+    for (r, &y) in rows.iter().zip(ys.iter()) {
+        for i in 0..3 {
+            aty[i] += r[i] * y;
+            for j in 0..3 {
+                ata[i][j] += r[i] * r[j];
+            }
+        }
+    }
+    // Augmented matrix [ata | aty]
+    let mut m = [[0.0f64; 4]; 3];
+    for i in 0..3 {
+        m[i][..3].copy_from_slice(&ata[i]);
+        m[i][3] = aty[i];
+    }
+    for col in 0..3 {
+        let mut piv = col;
+        for r in (col + 1)..3 {
+            if m[r][col].abs() > m[piv][col].abs() {
+                piv = r;
+            }
+        }
+        if m[piv][col].abs() < 1e-18 {
+            continue;
+        }
+        m.swap(col, piv);
+        for r in 0..3 {
+            if r != col && m[r][col] != 0.0 {
+                let f = m[r][col] / m[col][col];
+                for k in col..4 {
+                    m[r][k] -= f * m[col][k];
+                }
+            }
+        }
+    }
+    let mut th = [0.0f64; 3];
+    for i in 0..3 {
+        th[i] = if m[i][i].abs() > 1e-18 {
+            m[i][3] / m[i][i]
+        } else {
+            0.0
+        };
+    }
+    th
+}
+
+/// LSQ with a non-negativity cascade: physical coefficients (inverse
+/// efficiencies, overhead) cannot be negative. When collinear features (e.g.
+/// FC flops vs. weight bytes) drive a coefficient negative, refit without the
+/// offending feature.
+pub fn lstsq3_nonneg(rows: &[[f64; 3]], ys: &[f64]) -> [f64; 3] {
+    let mut th = lstsq3(rows, ys);
+    if th[0] < 0.0 {
+        let zeroed: Vec<[f64; 3]> = rows.iter().map(|r| [0.0, r[1], r[2]]).collect();
+        th = lstsq3(&zeroed, ys);
+        th[0] = 0.0;
+    }
+    if th[1] < 0.0 {
+        let zeroed: Vec<[f64; 3]> = rows.iter().map(|r| [r[0], 0.0, r[2]]).collect();
+        th = lstsq3(&zeroed, ys);
+        th[1] = 0.0;
+        if th[0] < 0.0 {
+            let ones: Vec<[f64; 3]> = rows.iter().map(|r| [0.0, 0.0, r[2]]).collect();
+            th = lstsq3(&ones, ys);
+            th[0] = 0.0;
+        }
+    }
+    th[2] = th[2].max(0.0);
+    th
+}
+
+/// A fitted per-class model: detected alignments plus the mixed and
+/// statistical regression coefficients.
+#[derive(Clone, Debug)]
+pub struct ClassModel {
+    pub class: String,
+    pub align_out: usize,
+    pub align_in: usize,
+    pub align_w: usize,
+    /// `[1/base_eff, 1/mem_eff, overhead_us]` with utilization correction.
+    pub mixed: [f64; 3],
+    /// Same regression without the mapping (utilization) model.
+    pub stat: [f64; 3],
+}
+
+fn class_of(name: &str) -> LayerClass {
+    match name {
+        "conv" => LayerClass::Conv,
+        "dwconv" => LayerClass::DwConv,
+        "pool" => LayerClass::Pool,
+        "fc" => LayerClass::Fc,
+        "elem" => LayerClass::Elem,
+        "mem" => LayerClass::Mem,
+        _ => LayerClass::None,
+    }
+}
+
+fn align_grid(class: LayerClass) -> Vec<(usize, usize, usize)> {
+    let mut grid = Vec::new();
+    match class {
+        LayerClass::Conv => {
+            for ao in ALIGN_CANDIDATES {
+                for ai in ALIGN_CANDIDATES {
+                    for aw in ALIGN_CANDIDATES_W {
+                        grid.push((ao, ai, aw));
+                    }
+                }
+            }
+        }
+        LayerClass::DwConv => {
+            for ao in ALIGN_CANDIDATES {
+                for aw in ALIGN_CANDIDATES_W {
+                    grid.push((ao, 1, aw));
+                }
+            }
+        }
+        LayerClass::Fc => {
+            for ao in ALIGN_CANDIDATES {
+                for ai in ALIGN_CANDIDATES {
+                    grid.push((ao, ai, 1));
+                }
+            }
+        }
+        LayerClass::Pool | LayerClass::Elem => {
+            for ao in ALIGN_CANDIDATES {
+                grid.push((ao, 1, 1));
+            }
+        }
+        _ => grid.push((1, 1, 1)),
+    }
+    grid
+}
+
+/// Fit one layer class from its micro-kernel records.
+pub fn fit_class(spec: &DeviceSpec, records: &[&MicroRecord], class_name: &str) -> ClassModel {
+    let class = class_of(class_name);
+    let ys: Vec<f64> = records.iter().map(|r| r.us).collect();
+    let raw: Vec<[f64; 3]> = records
+        .iter()
+        .map(|r| [spec.ideal_compute_us(r.flops), spec.ideal_mem_us(r.bytes), 1.0])
+        .collect();
+    let stat = lstsq3_nonneg(&raw, &ys);
+
+    let mut best_sse = f64::INFINITY;
+    let mut best_aligns = (1, 1, 1);
+    let mut best_th = [0.0f64; 3];
+    for (ao, ai, aw) in align_grid(class) {
+        let rows: Vec<[f64; 3]> = records
+            .iter()
+            .map(|r| {
+                let u = class_utils(class, r.cout, r.cin, r.wout, ao, ai, aw);
+                [
+                    spec.ideal_compute_us(r.flops) / u,
+                    spec.ideal_mem_us(r.bytes),
+                    1.0,
+                ]
+            })
+            .collect();
+        let th = lstsq3_nonneg(&rows, &ys);
+        let mut sse = 0.0;
+        for (row, &y) in rows.iter().zip(ys.iter()) {
+            let p = th[0] * row[0] + th[1] * row[1] + th[2] * row[2];
+            sse += (p - y) * (p - y);
+        }
+        if sse < best_sse {
+            best_sse = sse;
+            best_aligns = (ao, ai, aw);
+            best_th = th;
+        }
+    }
+    ClassModel {
+        class: class_name.to_string(),
+        align_out: best_aligns.0,
+        align_in: best_aligns.1,
+        align_w: best_aligns.2,
+        mixed: best_th,
+        stat,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lstsq_recovers_exact_linear_data() {
+        let rows: Vec<[f64; 3]> = vec![
+            [1.0, 2.0, 1.0],
+            [2.0, 1.0, 1.0],
+            [3.0, 5.0, 1.0],
+            [4.0, 0.5, 1.0],
+            [0.5, 4.0, 1.0],
+        ];
+        let truth = [2.0, 3.0, 7.0];
+        let ys: Vec<f64> = rows
+            .iter()
+            .map(|r| truth[0] * r[0] + truth[1] * r[1] + truth[2] * r[2])
+            .collect();
+        let th = lstsq3(&rows, &ys);
+        for i in 0..3 {
+            assert!((th[i] - truth[i]).abs() < 1e-6, "θ{i} = {}", th[i]);
+        }
+    }
+
+    #[test]
+    fn nonneg_cascade_never_returns_negative_coefficients() {
+        // Strongly collinear columns with a decreasing trend baked in.
+        let rows: Vec<[f64; 3]> = (1..20)
+            .map(|i| [i as f64, 2.0 * i as f64 + 0.001 * (i % 3) as f64, 1.0])
+            .collect();
+        let ys: Vec<f64> = (1..20).map(|i| 5.0 * i as f64 + 3.0).collect();
+        let th = lstsq3_nonneg(&rows, &ys);
+        assert!(th[0] >= 0.0 && th[1] >= 0.0 && th[2] >= 0.0, "{th:?}");
+    }
+}

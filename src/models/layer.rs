@@ -1,0 +1,61 @@
+//! The four per-layer model families ANNETTE compares (paper §5): the
+//! analytical roofline and refined roofline baselines, the statistical model,
+//! and the mixed model that stacks the learned mapping models with fitted
+//! efficiency curves.
+
+/// Which per-layer estimation model family to use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelKind {
+    /// `max(compute/peak, bytes/bandwidth)` from the datasheet alone.
+    Roofline,
+    /// Roofline with the datasheet PE-array utilization derating compute.
+    RefinedRoofline,
+    /// Per-class least-squares fit on raw compute/memory features (no
+    /// mapping model).
+    Statistical,
+    /// Mapping models (alignment + fusion) stacked with fitted per-class
+    /// efficiency and overhead — ANNETTE's headline model.
+    Mixed,
+}
+
+impl ModelKind {
+    pub const ALL: [ModelKind; 4] = [
+        ModelKind::Roofline,
+        ModelKind::RefinedRoofline,
+        ModelKind::Statistical,
+        ModelKind::Mixed,
+    ];
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ModelKind::Roofline => "roofline",
+            ModelKind::RefinedRoofline => "refined_roofline",
+            ModelKind::Statistical => "statistical",
+            ModelKind::Mixed => "mixed",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ModelKind> {
+        match s {
+            "roofline" => Some(ModelKind::Roofline),
+            "refined_roofline" | "refined" => Some(ModelKind::RefinedRoofline),
+            "statistical" | "stat" => Some(ModelKind::Statistical),
+            "mixed" => Some(ModelKind::Mixed),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrips_all_kinds() {
+        for kind in ModelKind::ALL {
+            assert_eq!(ModelKind::parse(kind.as_str()), Some(kind));
+        }
+        assert_eq!(ModelKind::parse("refined"), Some(ModelKind::RefinedRoofline));
+        assert_eq!(ModelKind::parse("nope"), None);
+    }
+}

@@ -1,0 +1,10 @@
+//! Model generation and the fitted platform model: mapping models (fusion,
+//! PE alignment) stacked with per-layer-class latency models.
+
+pub mod fitting;
+pub mod layer;
+pub mod platform;
+
+pub use fitting::ClassModel;
+pub use layer::ModelKind;
+pub use platform::PlatformModel;

@@ -1,0 +1,222 @@
+//! The stacked platform model: learned mapping models (fusion rules +
+//! PE-alignment) and per-class layer models, fitted from one benchmark
+//! campaign and persisted as a versioned JSON document.
+
+use std::fs;
+use std::path::Path;
+
+use crate::coordinator::orchestrator::BenchData;
+use crate::error::{Error, Result};
+use crate::graph::{LayerClass, LayerKind};
+use crate::hw::device::DeviceSpec;
+use crate::json::Value;
+use crate::models::fitting::{fit_class, ClassModel};
+
+pub const FORMAT: &str = "annette-model.v1";
+
+/// A fitted platform model for one device.
+#[derive(Clone, Debug)]
+pub struct PlatformModel {
+    pub spec: DeviceSpec,
+    /// Learned fusion rules: (producer class name, consumer op name).
+    pub fusion: Vec<(String, String)>,
+    /// Per-class layer models.
+    pub classes: Vec<ClassModel>,
+}
+
+impl PlatformModel {
+    /// Generate the platform model from benchmark data (ANNETTE's model
+    /// generator): group micro records per class, fit mapping + layer models,
+    /// and adopt the fusion rules the probes discovered.
+    pub fn fit(spec: &DeviceSpec, data: &BenchData) -> PlatformModel {
+        let mut class_names: Vec<&str> = Vec::new();
+        for r in &data.micro.records {
+            if !class_names.contains(&r.class.as_str()) {
+                class_names.push(r.class.as_str());
+            }
+        }
+        let classes = class_names
+            .iter()
+            .map(|&name| {
+                let records: Vec<&crate::coordinator::orchestrator::MicroRecord> = data
+                    .micro
+                    .records
+                    .iter()
+                    .filter(|r| r.class == name)
+                    .collect();
+                fit_class(spec, &records, name)
+            })
+            .collect();
+        let fusion = data
+            .mapping
+            .samples
+            .iter()
+            .filter(|p| p.fused)
+            .map(|p| (p.producer.clone(), p.consumer.clone()))
+            .collect();
+        PlatformModel {
+            spec: spec.clone(),
+            fusion,
+            classes,
+        }
+    }
+
+    /// Per-class model lookup.
+    pub fn class_model(&self, class: LayerClass) -> Option<&ClassModel> {
+        let name = class.as_str();
+        self.classes.iter().find(|c| c.class == name)
+    }
+
+    /// The learned fusion predicate: can `consumer` fold into a unit rooted
+    /// at a layer of `producer` class?
+    pub fn fusable(&self, producer: LayerClass, consumer: &LayerKind) -> bool {
+        match consumer.fusion_key() {
+            Some(key) => {
+                let pname = producer.as_str();
+                self.fusion.iter().any(|(p, c)| p == pname && c == key)
+            }
+            None => false,
+        }
+    }
+
+    pub fn to_value(&self) -> Value {
+        let classes: Vec<Value> = self
+            .classes
+            .iter()
+            .map(|c| {
+                Value::Obj(vec![
+                    ("class".to_string(), Value::str(c.class.clone())),
+                    ("align_out".to_string(), Value::int(c.align_out)),
+                    ("align_in".to_string(), Value::int(c.align_in)),
+                    ("align_w".to_string(), Value::int(c.align_w)),
+                    (
+                        "mixed".to_string(),
+                        Value::Arr(c.mixed.iter().map(|&x| Value::num(x)).collect()),
+                    ),
+                    (
+                        "stat".to_string(),
+                        Value::Arr(c.stat.iter().map(|&x| Value::num(x)).collect()),
+                    ),
+                ])
+            })
+            .collect();
+        let fusion: Vec<Value> = self
+            .fusion
+            .iter()
+            .map(|(p, c)| Value::Arr(vec![Value::str(p.clone()), Value::str(c.clone())]))
+            .collect();
+        Value::Obj(vec![
+            ("format".to_string(), Value::str(FORMAT)),
+            ("spec".to_string(), self.spec.to_value()),
+            ("fusion".to_string(), Value::Arr(fusion)),
+            ("classes".to_string(), Value::Arr(classes)),
+        ])
+    }
+
+    pub fn from_value(v: &Value) -> Result<PlatformModel> {
+        let format = v.req_str("format")?;
+        if format != FORMAT {
+            return Err(Error::Json(format!(
+                "unsupported model format `{format}` (expected `{FORMAT}`)"
+            )));
+        }
+        let spec = DeviceSpec::from_value(v.req("spec")?)?;
+        let mut fusion = Vec::new();
+        for pair in v.req_arr("fusion")? {
+            let xs = pair
+                .as_arr()
+                .ok_or_else(|| Error::Json("fusion entry is not a pair".to_string()))?;
+            if xs.len() != 2 {
+                return Err(Error::Json("fusion entry is not a pair".to_string()));
+            }
+            let p = xs[0]
+                .as_str()
+                .ok_or_else(|| Error::Json("fusion producer is not a string".to_string()))?;
+            let c = xs[1]
+                .as_str()
+                .ok_or_else(|| Error::Json("fusion consumer is not a string".to_string()))?;
+            fusion.push((p.to_string(), c.to_string()));
+        }
+        let mut classes = Vec::new();
+        for cv in v.req_arr("classes")? {
+            let coeffs = |key: &str| -> Result<[f64; 3]> {
+                let xs = cv.req_arr(key)?;
+                if xs.len() != 3 {
+                    return Err(Error::Json(format!("`{key}` must have three entries")));
+                }
+                let mut out = [0.0f64; 3];
+                for (i, x) in xs.iter().enumerate() {
+                    out[i] = x
+                        .as_f64()
+                        .ok_or_else(|| Error::Json(format!("`{key}` entry is not a number")))?;
+                }
+                Ok(out)
+            };
+            classes.push(ClassModel {
+                class: cv.req_str("class")?.to_string(),
+                align_out: cv.req_usize("align_out")?,
+                align_in: cv.req_usize("align_in")?,
+                align_w: cv.req_usize("align_w")?,
+                mixed: coeffs("mixed")?,
+                stat: coeffs("stat")?,
+            });
+        }
+        Ok(PlatformModel {
+            spec,
+            fusion,
+            classes,
+        })
+    }
+
+    pub fn save<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        fs::write(path, self.to_value().to_string())?;
+        Ok(())
+    }
+
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<PlatformModel> {
+        let text = fs::read_to_string(path)?;
+        PlatformModel::from_value(&Value::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::orchestrator::run_campaign;
+    use crate::hw::device::Device;
+    use crate::hw::dpu::DpuDevice;
+
+    #[test]
+    fn fit_detects_dpu_alignment_and_fusion() {
+        let dev = DpuDevice::zcu102();
+        let data = run_campaign(&dev, 3, 4);
+        let model = PlatformModel::fit(&dev.spec(), &data);
+        let conv = model.class_model(LayerClass::Conv).expect("conv model");
+        // The DPU's 16x16x8 array should be discovered from the sweeps.
+        assert_eq!(conv.align_out, 16);
+        assert_eq!(conv.align_in, 16);
+        assert_eq!(conv.align_w, 8);
+        assert!(model.fusable(LayerClass::Conv, &LayerKind::BatchNorm));
+        assert!(!model.fusable(LayerClass::Pool, &LayerKind::BatchNorm));
+        // Fitted inverse efficiency must be physical.
+        assert!(conv.mixed[0] > 0.0);
+        assert!(conv.mixed[2] > 0.0);
+    }
+
+    #[test]
+    fn model_json_roundtrip_preserves_coefficients() {
+        let dev = DpuDevice::zcu102();
+        let data = run_campaign(&dev, 2, 4);
+        let model = PlatformModel::fit(&dev.spec(), &data);
+        let back = PlatformModel::from_value(&model.to_value()).unwrap();
+        assert_eq!(back.spec, model.spec);
+        assert_eq!(back.fusion, model.fusion);
+        assert_eq!(back.classes.len(), model.classes.len());
+        for (a, b) in back.classes.iter().zip(&model.classes) {
+            assert_eq!(a.class, b.class);
+            assert_eq!(a.align_out, b.align_out);
+            assert_eq!(a.mixed, b.mixed);
+            assert_eq!(a.stat, b.stat);
+        }
+    }
+}

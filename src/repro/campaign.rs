@@ -1,0 +1,96 @@
+//! Benchmark-then-fit convenience flow: pick a paper device, run a campaign,
+//! fit the platform model, and optionally persist both artifacts.
+
+use std::fs;
+use std::path::Path;
+
+use crate::coordinator::orchestrator::{default_threads, run_campaign, BenchData};
+use crate::error::Result;
+use crate::hw::device::Device;
+use crate::hw::dpu::DpuDevice;
+use crate::hw::vpu::VpuDevice;
+use crate::models::platform::PlatformModel;
+
+/// The paper's two evaluation targets.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DeviceChoice {
+    Dpu,
+    Vpu,
+}
+
+impl DeviceChoice {
+    /// The name the paper uses for this target.
+    pub fn paper_name(&self) -> &'static str {
+        match self {
+            DeviceChoice::Dpu => "ZCU102 DPU (DNNDK)",
+            DeviceChoice::Vpu => "Intel NCS2 (Myriad X VPU)",
+        }
+    }
+
+    /// Filesystem-friendly identifier for artifact directories.
+    pub fn slug(&self) -> &'static str {
+        match self {
+            DeviceChoice::Dpu => "dpu-zcu102",
+            DeviceChoice::Vpu => "vpu-ncs2",
+        }
+    }
+
+    /// Instantiate the simulated device.
+    pub fn device(&self) -> Box<dyn Device> {
+        match self {
+            DeviceChoice::Dpu => Box::new(DpuDevice::zcu102()),
+            DeviceChoice::Vpu => Box::new(VpuDevice::ncs2()),
+        }
+    }
+}
+
+/// A device together with the benchmark data and platform model fitted on it.
+pub struct FittedDevice {
+    pub choice: DeviceChoice,
+    pub device: Box<dyn Device>,
+    pub bench: BenchData,
+    pub model: PlatformModel,
+}
+
+/// Benchmark `choice` (with `runs` repetitions per measurement) and fit its
+/// platform model. When `out_dir` is given, the benchmark data and model are
+/// persisted under `<out_dir>/<slug>/`.
+pub fn fit_device(
+    choice: DeviceChoice,
+    runs: usize,
+    out_dir: Option<&Path>,
+) -> Result<FittedDevice> {
+    let device = choice.device();
+    let bench = run_campaign(device.as_ref(), runs, default_threads());
+    let model = PlatformModel::fit(&device.spec(), &bench);
+    if let Some(dir) = out_dir {
+        let sub = dir.join(choice.slug());
+        fs::create_dir_all(&sub)?;
+        bench.save(sub.join("bench.json"))?;
+        model.save(sub.join("model.json"))?;
+    }
+    Ok(FittedDevice {
+        choice,
+        device,
+        bench,
+        model,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fit_device_persists_artifacts() {
+        let dir = std::env::temp_dir().join("annette-repro-test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let fitted = fit_device(DeviceChoice::Dpu, 1, Some(&dir)).unwrap();
+        assert_eq!(fitted.choice, DeviceChoice::Dpu);
+        assert!(dir.join("dpu-zcu102/bench.json").exists());
+        assert!(dir.join("dpu-zcu102/model.json").exists());
+        // The persisted model reloads to the same coefficients.
+        let loaded = PlatformModel::load(dir.join("dpu-zcu102/model.json")).unwrap();
+        assert_eq!(loaded.classes.len(), fitted.model.classes.len());
+    }
+}

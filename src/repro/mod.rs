@@ -1,0 +1,6 @@
+//! Reproduction drivers: canned benchmark-and-fit flows for the paper's two
+//! evaluation targets.
+
+pub mod campaign;
+
+pub use campaign::{fit_device, DeviceChoice, FittedDevice};

@@ -1,0 +1,95 @@
+//! Small deterministic PRNG (xorshift64*) used by the device simulators and
+//! the NASBench sampler. Determinism across platforms and thread counts is a
+//! hard requirement: campaigns, profiles, and sampled architectures must be
+//! reproducible from their seeds alone.
+
+pub const PHI: u64 = 0x9E37_79B9_7F4A_7C15;
+
+#[derive(Clone, Debug)]
+pub struct Rng(u64);
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        let s = seed.wrapping_mul(PHI).wrapping_add(0x1234_5678_9ABC_DEF1);
+        Rng(if s == 0 { 0xDEAD_BEEF } else { s })
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.0 = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    /// Uniform sample in `[0, 1)`.
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Approximately standard-normal sample (Irwin–Hall with n = 12).
+    pub fn normal(&mut self) -> f64 {
+        let mut acc = 0.0;
+        for _ in 0..12 {
+            acc += self.uniform();
+        }
+        acc - 6.0
+    }
+
+    /// Uniform integer in `[lo, hi)`.
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo < hi);
+        lo + (self.next_u64() % (hi - lo) as u64) as usize
+    }
+
+    /// Uniform pick from a non-empty slice.
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[(self.next_u64() % xs.len() as u64) as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Rng::new(8);
+        assert_ne!(Rng::new(7).next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn uniform_in_range_and_centered() {
+        let mut rng = Rng::new(42);
+        let mut acc = 0.0;
+        for _ in 0..10_000 {
+            let u = rng.uniform();
+            assert!((0.0..1.0).contains(&u));
+            acc += u;
+        }
+        let mean = acc / 10_000.0;
+        assert!((mean - 0.5).abs() < 0.02, "mean = {mean}");
+    }
+
+    #[test]
+    fn normal_is_roughly_standard() {
+        let mut rng = Rng::new(1);
+        let mut sum = 0.0;
+        let mut sq = 0.0;
+        for _ in 0..10_000 {
+            let z = rng.normal();
+            sum += z;
+            sq += z * z;
+        }
+        let mean = sum / 10_000.0;
+        let var = sq / 10_000.0 - mean * mean;
+        assert!(mean.abs() < 0.05, "mean = {mean}");
+        assert!((var - 1.0).abs() < 0.1, "var = {var}");
+    }
+}

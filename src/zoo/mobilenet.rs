@@ -1,0 +1,126 @@
+//! MobileNet family (depthwise-separable convolutions) and an SSD-style
+//! detection variant.
+
+use crate::graph::{Graph, GraphBuilder};
+
+const V1_CFG: [(usize, usize); 13] = [
+    (64, 1),
+    (128, 2),
+    (128, 1),
+    (256, 2),
+    (256, 1),
+    (512, 2),
+    (512, 1),
+    (512, 1),
+    (512, 1),
+    (512, 1),
+    (512, 1),
+    (1024, 2),
+    (1024, 1),
+];
+
+pub fn mobilenet_v1(res: usize, classes: usize) -> Graph {
+    let mut b = GraphBuilder::new("mobilenet_v1");
+    let mut x = b.input(res, res, 3);
+    x = b.conv_bn_relu(x, 32, 3, 2);
+    for (c, s) in V1_CFG {
+        x = b.dw_bn_relu(x, 3, s);
+        x = b.conv_bn_relu(x, c, 1, 1);
+    }
+    b.classifier(x, classes);
+    b.finish().expect("mobilenet_v1 is valid")
+}
+
+/// One inverted-residual (MBConv) block: optional 1×1 expansion, depthwise
+/// conv, linear 1×1 projection, and a residual add when stride and channel
+/// count allow. Shared by MobileNet-v2 and EfficientNet-style networks.
+pub fn inverted_residual(
+    b: &mut GraphBuilder,
+    x: usize,
+    expand: usize,
+    cout: usize,
+    stride: usize,
+    kernel: usize,
+) -> usize {
+    let cin = b.shape(x).c;
+    let mut y = x;
+    if expand != 1 {
+        y = b.conv_bn_relu(y, cin * expand, 1, 1);
+    }
+    y = b.dw_bn_relu(y, kernel, stride);
+    let cv = b.conv(y, cout, 1, 1);
+    y = b.batchnorm(cv);
+    if stride == 1 && cin == cout {
+        y = b.add(x, y);
+    }
+    y
+}
+
+pub fn mobilenet_v2(res: usize, classes: usize) -> Graph {
+    let mut b = GraphBuilder::new("mobilenet_v2");
+    let mut x = b.input(res, res, 3);
+    x = b.conv_bn_relu(x, 32, 3, 2);
+    // (expansion, cout, repeats, first stride)
+    let cfg: [(usize, usize, usize, usize); 7] = [
+        (1, 16, 1, 1),
+        (6, 24, 2, 2),
+        (6, 32, 3, 2),
+        (6, 64, 4, 2),
+        (6, 96, 3, 1),
+        (6, 160, 3, 2),
+        (6, 320, 1, 1),
+    ];
+    for (expand, cout, n, s) in cfg {
+        for i in 0..n {
+            let stride = if i == 0 { s } else { 1 };
+            x = inverted_residual(&mut b, x, expand, cout, stride, 3);
+        }
+    }
+    x = b.conv_bn_relu(x, 1280, 1, 1);
+    b.classifier(x, classes);
+    b.finish().expect("mobilenet_v2 is valid")
+}
+
+/// SSD-style detector on a MobileNet-v1 backbone (extra feature pyramid plus
+/// a conv detection head; NMS/postprocessing is out of scope for latency
+/// modeling on these targets).
+pub fn ssd_mobilenet_lite(res: usize, classes: usize) -> Graph {
+    let mut b = GraphBuilder::new("ssd_mobilenet");
+    let mut x = b.input(res, res, 3);
+    x = b.conv_bn_relu(x, 32, 3, 2);
+    for (c, s) in V1_CFG {
+        x = b.dw_bn_relu(x, 3, s);
+        x = b.conv_bn_relu(x, c, 1, 1);
+    }
+    for c in [512, 256, 256, 128] {
+        x = b.conv_bn_relu(x, c / 2, 1, 1);
+        x = b.conv_bn_relu(x, c, 3, 2);
+    }
+    b.conv(x, 6 * (classes + 4), 3, 1);
+    b.finish().expect("ssd_mobilenet is valid")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn v1_and_v2_are_valid_and_dwconv_heavy() {
+        for g in [mobilenet_v1(224, 1000), mobilenet_v2(224, 1000), ssd_mobilenet_lite(300, 21)] {
+            assert!(g.validate().is_ok());
+            let dw = g
+                .layers
+                .iter()
+                .filter(|l| l.kind.op_name() == "dwconv")
+                .count();
+            assert!(dw >= 13, "{}: {dw} dwconvs", g.name);
+        }
+    }
+
+    #[test]
+    fn v2_has_residual_adds() {
+        let g = mobilenet_v2(224, 1000);
+        let adds = g.layers.iter().filter(|l| l.kind.op_name() == "add").count();
+        assert_eq!(adds, 10);
+    }
+}

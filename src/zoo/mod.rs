@@ -1,0 +1,243 @@
+//! Network zoo: the paper's Test set 1 (Table 2) plus NASBench-style
+//! samples. All architectures are built with [`GraphBuilder`]; stem/head
+//! simplifications keep them buildable from the IR's operator set while
+//! preserving the layer statistics that matter for latency modeling.
+
+pub mod mobilenet;
+pub mod nasbench;
+pub mod resnet;
+
+use crate::graph::{Graph, GraphBuilder};
+
+/// A named zoo network.
+pub struct ZooEntry {
+    pub name: &'static str,
+    pub graph: Graph,
+}
+
+pub fn alexnet(res: usize, classes: usize) -> Graph {
+    let mut b = GraphBuilder::new("alexnet");
+    let mut x = b.input(res, res, 3);
+    let c = b.conv(x, 64, 11, 4);
+    x = b.relu(c);
+    x = b.maxpool(x, 3, 2);
+    let c = b.conv(x, 192, 5, 1);
+    x = b.relu(c);
+    x = b.maxpool(x, 3, 2);
+    for f in [384, 256, 256] {
+        let c = b.conv(x, f, 3, 1);
+        x = b.relu(c);
+    }
+    x = b.maxpool(x, 3, 2);
+    x = b.flatten(x);
+    for units in [4096, 4096] {
+        let f = b.fc(x, units);
+        x = b.relu(f);
+    }
+    let f = b.fc(x, classes);
+    b.softmax(f);
+    b.finish().expect("alexnet is valid")
+}
+
+pub fn vgg16(res: usize, classes: usize) -> Graph {
+    let mut b = GraphBuilder::new("vgg16");
+    let mut x = b.input(res, res, 3);
+    for (n, f) in [(2, 64), (2, 128), (3, 256), (3, 512), (3, 512)] {
+        for _ in 0..n {
+            let c = b.conv(x, f, 3, 1);
+            x = b.relu(c);
+        }
+        x = b.maxpool(x, 2, 2);
+    }
+    x = b.flatten(x);
+    for units in [4096, 4096] {
+        let f = b.fc(x, units);
+        x = b.relu(f);
+    }
+    let f = b.fc(x, classes);
+    b.softmax(f);
+    b.finish().expect("vgg16 is valid")
+}
+
+pub fn squeezenet(res: usize, classes: usize) -> Graph {
+    let mut b = GraphBuilder::new("squeezenet");
+    let mut x = b.input(res, res, 3);
+    let c = b.conv(x, 96, 7, 2);
+    x = b.relu(c);
+    x = b.maxpool(x, 3, 2);
+
+    fn fire(b: &mut GraphBuilder, x: usize, squeeze: usize, expand: usize) -> usize {
+        let s = b.conv(x, squeeze, 1, 1);
+        let s = b.relu(s);
+        let e1 = b.conv(s, expand, 1, 1);
+        let e1 = b.relu(e1);
+        let e3 = b.conv(s, expand, 3, 1);
+        let e3 = b.relu(e3);
+        b.concat(&[e1, e3])
+    }
+
+    x = fire(&mut b, x, 16, 64);
+    x = fire(&mut b, x, 16, 64);
+    x = fire(&mut b, x, 32, 128);
+    x = b.maxpool(x, 3, 2);
+    x = fire(&mut b, x, 32, 128);
+    x = fire(&mut b, x, 48, 192);
+    x = fire(&mut b, x, 48, 192);
+    x = fire(&mut b, x, 64, 256);
+    x = b.maxpool(x, 3, 2);
+    x = fire(&mut b, x, 64, 256);
+    let c = b.conv(x, classes, 1, 1);
+    x = b.relu(c);
+    x = b.global_pool(x);
+    b.softmax(x);
+    b.finish().expect("squeezenet is valid")
+}
+
+pub fn googlenet_lite(res: usize, classes: usize) -> Graph {
+    let mut b = GraphBuilder::new("googlenet");
+    let mut x = b.input(res, res, 3);
+    x = b.conv_bn_relu(x, 64, 7, 2);
+    x = b.maxpool(x, 3, 2);
+    x = b.conv_bn_relu(x, 192, 3, 1);
+    x = b.maxpool(x, 3, 2);
+
+    #[allow(clippy::too_many_arguments)]
+    fn inception(
+        b: &mut GraphBuilder,
+        x: usize,
+        c1: usize,
+        c3r: usize,
+        c3: usize,
+        c5r: usize,
+        c5: usize,
+        pp: usize,
+    ) -> usize {
+        let b1 = b.conv_bn_relu(x, c1, 1, 1);
+        let b2 = b.conv_bn_relu(x, c3r, 1, 1);
+        let b2 = b.conv_bn_relu(b2, c3, 3, 1);
+        let b3 = b.conv_bn_relu(x, c5r, 1, 1);
+        let b3 = b.conv_bn_relu(b3, c5, 5, 1);
+        let b4 = b.maxpool(x, 3, 1);
+        let b4 = b.conv_bn_relu(b4, pp, 1, 1);
+        b.concat(&[b1, b2, b3, b4])
+    }
+
+    x = inception(&mut b, x, 64, 96, 128, 16, 32, 32);
+    x = inception(&mut b, x, 128, 128, 192, 32, 96, 64);
+    x = b.maxpool(x, 3, 2);
+    x = inception(&mut b, x, 192, 96, 208, 16, 48, 64);
+    x = inception(&mut b, x, 160, 112, 224, 24, 64, 64);
+    x = inception(&mut b, x, 128, 128, 256, 24, 64, 64);
+    x = b.maxpool(x, 3, 2);
+    x = inception(&mut b, x, 256, 160, 320, 32, 128, 128);
+    x = inception(&mut b, x, 384, 192, 384, 48, 128, 128);
+    b.classifier(x, classes);
+    b.finish().expect("googlenet is valid")
+}
+
+pub fn densenet_lite(res: usize, classes: usize) -> Graph {
+    let mut b = GraphBuilder::new("densenet_lite");
+    let mut x = b.input(res, res, 3);
+    x = b.conv_bn_relu(x, 64, 7, 2);
+    x = b.maxpool(x, 3, 2);
+    let growth = 32;
+    let stages = [4usize, 8, 12, 8];
+    for (stage, &n) in stages.iter().enumerate() {
+        for _ in 0..n {
+            let y = b.conv_bn_relu(x, 4 * growth, 1, 1);
+            let y = b.conv_bn_relu(y, growth, 3, 1);
+            x = b.concat(&[x, y]);
+        }
+        if stage < stages.len() - 1 {
+            let c = b.shape(x).c;
+            x = b.conv_bn_relu(x, c / 2, 1, 1);
+            x = b.avgpool(x, 2, 2);
+        }
+    }
+    b.classifier(x, classes);
+    b.finish().expect("densenet is valid")
+}
+
+pub fn efficientnet_b0_lite(res: usize, classes: usize) -> Graph {
+    let mut b = GraphBuilder::new("efficientnet_b0");
+    let mut x = b.input(res, res, 3);
+    x = b.conv_bn_relu(x, 32, 3, 2);
+    let cfg: [(usize, usize, usize, usize, usize); 7] = [
+        (1, 16, 1, 1, 3),
+        (6, 24, 2, 2, 3),
+        (6, 40, 2, 2, 5),
+        (6, 80, 3, 2, 3),
+        (6, 112, 3, 1, 5),
+        (6, 192, 4, 2, 5),
+        (6, 320, 1, 1, 3),
+    ];
+    for (expand, cout, n, s, k) in cfg {
+        for i in 0..n {
+            let stride = if i == 0 { s } else { 1 };
+            x = mobilenet::inverted_residual(&mut b, x, expand, cout, stride, k);
+        }
+    }
+    x = b.conv_bn_relu(x, 1280, 1, 1);
+    b.classifier(x, classes);
+    b.finish().expect("efficientnet is valid")
+}
+
+pub fn tiny_yolo_v3(res: usize, classes: usize) -> Graph {
+    let mut b = GraphBuilder::new("tiny_yolo_v3");
+    let mut x = b.input(res, res, 3);
+    let mut f = 16;
+    for _ in 0..5 {
+        x = b.conv_bn_relu(x, f, 3, 1);
+        x = b.maxpool(x, 2, 2);
+        f *= 2;
+    }
+    x = b.conv_bn_relu(x, 512, 3, 1);
+    x = b.conv_bn_relu(x, 1024, 3, 1);
+    x = b.conv_bn_relu(x, 256, 1, 1);
+    x = b.conv_bn_relu(x, 512, 3, 1);
+    b.conv(x, 3 * (classes + 5), 1, 1);
+    b.finish().expect("tiny yolo is valid")
+}
+
+/// The 12 networks of the paper's Test set 1 (Table 2).
+pub fn table2() -> Vec<ZooEntry> {
+    vec![
+        ZooEntry { name: "alexnet", graph: alexnet(224, 1000) },
+        ZooEntry { name: "vgg16", graph: vgg16(224, 1000) },
+        ZooEntry { name: "googlenet", graph: googlenet_lite(224, 1000) },
+        ZooEntry { name: "resnet18", graph: resnet::resnet18(224, 1000) },
+        ZooEntry { name: "resnet34", graph: resnet::resnet34(224, 1000) },
+        ZooEntry { name: "resnet50", graph: resnet::resnet50(224, 1000) },
+        ZooEntry { name: "squeezenet", graph: squeezenet(224, 1000) },
+        ZooEntry { name: "mobilenet_v1", graph: mobilenet::mobilenet_v1(224, 1000) },
+        ZooEntry { name: "mobilenet_v2", graph: mobilenet::mobilenet_v2(224, 1000) },
+        ZooEntry { name: "densenet", graph: densenet_lite(224, 1000) },
+        ZooEntry { name: "efficientnet_b0", graph: efficientnet_b0_lite(224, 1000) },
+        ZooEntry { name: "tiny_yolo_v3", graph: tiny_yolo_v3(416, 80) },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_has_twelve_valid_networks() {
+        let nets = table2();
+        assert_eq!(nets.len(), 12);
+        for e in &nets {
+            assert!(e.graph.validate().is_ok(), "{} invalid", e.name);
+            assert!(e.graph.len() > 5, "{} suspiciously small", e.name);
+        }
+    }
+
+    #[test]
+    fn zoo_names_are_unique() {
+        let nets = table2();
+        for (i, a) in nets.iter().enumerate() {
+            for b in &nets[i + 1..] {
+                assert_ne!(a.name, b.name);
+            }
+        }
+    }
+}

@@ -1,0 +1,74 @@
+//! ResNet family (basic and bottleneck residual blocks).
+
+use crate::graph::{Graph, GraphBuilder};
+
+fn block(b: &mut GraphBuilder, x: usize, filters: usize, stride: usize, bottleneck: bool) -> usize {
+    let (y, out_c) = if bottleneck {
+        let y = b.conv_bn_relu(x, filters, 1, 1);
+        let y = b.conv_bn_relu(y, filters, 3, stride);
+        let c = b.conv(y, filters * 4, 1, 1);
+        (b.batchnorm(c), filters * 4)
+    } else {
+        let y = b.conv_bn_relu(x, filters, 3, stride);
+        let c = b.conv(y, filters, 3, 1);
+        (b.batchnorm(c), filters)
+    };
+    let shortcut = if stride != 1 || b.shape(x).c != out_c {
+        let s = b.conv(x, out_c, 1, stride);
+        b.batchnorm(s)
+    } else {
+        x
+    };
+    let a = b.add(shortcut, y);
+    b.relu(a)
+}
+
+fn resnet(name: &str, res: usize, classes: usize, cfg: [usize; 4], bottleneck: bool) -> Graph {
+    let mut b = GraphBuilder::new(name);
+    let mut x = b.input(res, res, 3);
+    x = b.conv_bn_relu(x, 64, 7, 2);
+    x = b.maxpool(x, 3, 2);
+    let mut filters = 64;
+    for (si, &blocks) in cfg.iter().enumerate() {
+        for bi in 0..blocks {
+            let stride = if si > 0 && bi == 0 { 2 } else { 1 };
+            x = block(&mut b, x, filters, stride, bottleneck);
+        }
+        filters *= 2;
+    }
+    b.classifier(x, classes);
+    b.finish().expect("resnet is valid")
+}
+
+pub fn resnet18(res: usize, classes: usize) -> Graph {
+    resnet("resnet18", res, classes, [2, 2, 2, 2], false)
+}
+
+pub fn resnet34(res: usize, classes: usize) -> Graph {
+    resnet("resnet34", res, classes, [3, 4, 6, 3], false)
+}
+
+pub fn resnet50(res: usize, classes: usize) -> Graph {
+    resnet("resnet50", res, classes, [3, 4, 6, 3], true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet50_structure() {
+        let g = resnet50(224, 1000);
+        assert_eq!(g.name, "resnet50");
+        // 3+4+6+3 bottleneck blocks with conv triples plus stem & head
+        assert!(g.len() > 100, "len = {}", g.len());
+        // final feature map feeds a 1000-way classifier
+        let fc = g
+            .layers
+            .iter()
+            .find(|l| l.kind.op_name() == "fc")
+            .expect("classifier fc");
+        assert_eq!(fc.out.c, 1000);
+        assert_eq!(fc.inp.c, 2048);
+    }
+}

@@ -1,0 +1,60 @@
+//! Property test: `serial::save` → `serial::load` is the identity for graphs
+//! — structurally, and in the estimate each graph produces.
+
+use annette::coordinator::orchestrator::run_campaign;
+use annette::estim::estimator::Estimator;
+use annette::graph::serial;
+use annette::hw::device::Device;
+use annette::hw::dpu::DpuDevice;
+use annette::models::layer::ModelKind;
+use annette::models::platform::PlatformModel;
+use annette::zoo;
+
+#[test]
+fn random_graphs_roundtrip_bit_identically() {
+    let dev = DpuDevice::zcu102();
+    let data = run_campaign(&dev, 1, 4);
+    let model = PlatformModel::fit(&dev.spec(), &data);
+    let est = Estimator::new(&model);
+
+    let dir = std::env::temp_dir().join("annette-roundtrip-test");
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // A spread of randomly sampled architectures plus the hand-built zoo
+    // nets with every operator kind.
+    let mut graphs = zoo::nasbench::sample_networks(10, 0xA11CE);
+    graphs.push(zoo::mobilenet::mobilenet_v2(224, 1000));
+    graphs.push(zoo::squeezenet(224, 1000));
+    graphs.push(zoo::resnet::resnet18(224, 1000));
+
+    for (i, g) in graphs.iter().enumerate() {
+        let path = dir.join(format!("g{i}.json"));
+        serial::save(g, &path).unwrap();
+        let back = serial::load(&path).unwrap();
+        assert_eq!(*g, back, "graph {} not preserved", g.name);
+
+        // The reloaded graph must estimate *identically* (same f64 bits) for
+        // every model family.
+        for kind in ModelKind::ALL {
+            let a = est.estimate_with(g, kind).total_ms();
+            let b = est.estimate_with(&back, kind).total_ms();
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "estimate drifted through JSON for {} / {}",
+                g.name,
+                kind.as_str()
+            );
+        }
+    }
+}
+
+#[test]
+fn double_roundtrip_is_stable() {
+    // save(load(save(g))) == save(g): serialization is canonical.
+    let g = zoo::nasbench::sample_network(3, 99);
+    let v1 = serial::graph_to_value(&g).to_string();
+    let back = serial::graph_from_value(&annette::json::Value::parse(&v1).unwrap()).unwrap();
+    let v2 = serial::graph_to_value(&back).to_string();
+    assert_eq!(v1, v2);
+}

@@ -1,0 +1,97 @@
+//! Unit tests for the evaluation metrics: known rankings for Spearman's rho,
+//! edge cases (empty, tied, zero-truth) for MAPE/MAE.
+
+use annette::metrics::{mae, mape, spearman_rho};
+
+#[test]
+fn mae_known_values() {
+    assert_eq!(mae(&[1.0, 2.0, 3.0], &[1.0, 2.0, 3.0]), 0.0);
+    assert_eq!(mae(&[2.0, 4.0], &[1.0, 2.0]), 1.5);
+    // symmetric in sign of the error
+    assert_eq!(mae(&[0.0, 0.0], &[1.0, -1.0]), 1.0);
+}
+
+#[test]
+fn mae_empty_is_zero() {
+    assert_eq!(mae(&[], &[]), 0.0);
+}
+
+#[test]
+#[should_panic]
+fn mae_length_mismatch_panics() {
+    mae(&[1.0], &[1.0, 2.0]);
+}
+
+#[test]
+fn mape_known_values() {
+    // +10% and -20% absolute percentage errors
+    let m = mape(&[110.0, 80.0], &[100.0, 100.0]);
+    assert!((m - 15.0).abs() < 1e-12, "mape = {m}");
+    assert_eq!(mape(&[5.0, 5.0], &[5.0, 5.0]), 0.0);
+}
+
+#[test]
+fn mape_skips_zero_truth_entries() {
+    // Only the second entry contributes: |8-10|/10 = 20%
+    let m = mape(&[3.0, 8.0], &[0.0, 10.0]);
+    assert!((m - 20.0).abs() < 1e-12, "mape = {m}");
+    // All-zero truth degenerates to 0, not NaN/inf
+    assert_eq!(mape(&[1.0, 2.0], &[0.0, 0.0]), 0.0);
+}
+
+#[test]
+fn mape_empty_is_zero() {
+    assert_eq!(mape(&[], &[]), 0.0);
+}
+
+#[test]
+fn spearman_perfect_monotonic_is_one() {
+    let a = [1.0, 2.0, 3.0, 4.0, 5.0];
+    // any strictly increasing transform preserves rho = 1
+    let b = [10.0, 100.0, 101.0, 5000.0, 5001.0];
+    assert!((spearman_rho(&a, &b) - 1.0).abs() < 1e-12);
+}
+
+#[test]
+fn spearman_reversed_is_minus_one() {
+    let a = [1.0, 2.0, 3.0, 4.0];
+    let b = [9.0, 7.0, 5.0, 3.0];
+    assert!((spearman_rho(&a, &b) + 1.0).abs() < 1e-12);
+}
+
+#[test]
+fn spearman_known_partial_ranking() {
+    // ranks a: [1,2,3,4,5]; ranks b: [2,1,4,3,5] -> d^2 sum = 4
+    // rho = 1 - 6*4 / (5*24) = 0.8
+    let a = [1.0, 2.0, 3.0, 4.0, 5.0];
+    let b = [20.0, 10.0, 40.0, 30.0, 50.0];
+    assert!((spearman_rho(&a, &b) - 0.8).abs() < 1e-12);
+}
+
+#[test]
+fn spearman_handles_ties_with_average_ranks() {
+    // b has a two-way tie; tie-aware rho must still be well-defined and
+    // symmetric.
+    let a = [1.0, 2.0, 3.0, 4.0];
+    let b = [1.0, 2.0, 2.0, 3.0];
+    let r1 = spearman_rho(&a, &b);
+    let r2 = spearman_rho(&b, &a);
+    assert!((r1 - r2).abs() < 1e-12);
+    assert!(r1 > 0.9, "tied-but-monotonic data should stay near 1, got {r1}");
+    assert!(r1 < 1.0, "ties must reduce rho below exactly 1, got {r1}");
+}
+
+#[test]
+fn spearman_degenerate_inputs_are_zero() {
+    assert_eq!(spearman_rho(&[], &[]), 0.0);
+    assert_eq!(spearman_rho(&[1.0], &[2.0]), 0.0);
+    // zero variance on one side
+    assert_eq!(spearman_rho(&[5.0, 5.0, 5.0], &[1.0, 2.0, 3.0]), 0.0);
+}
+
+#[test]
+fn spearman_is_scale_invariant_on_ranks() {
+    let a = [3.0, 1.0, 4.0, 1.5, 9.0, 2.6];
+    let b = [30.0, 10.0, 40.0, 15.0, 90.0, 26.0];
+    assert!((spearman_rho(&a, &b) - 1.0).abs() < 1e-12);
+}

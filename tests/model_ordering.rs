@@ -1,0 +1,103 @@
+//! Integration test for the paper's headline result, on the simulated
+//! devices: the stacked mixed model beats the statistical model, which beats
+//! the roofline baseline (MAPE over the Table-2 zoo), and the mixed model's
+//! fidelity over NASBench samples exceeds rho = 0.9.
+//!
+//! Uses a fast-mode campaign (few repetitions) so the whole test stays quick.
+
+use annette::estim::estimator::Estimator;
+use annette::hw::device::Device;
+use annette::metrics::{mape, spearman_rho};
+use annette::models::layer::ModelKind;
+use annette::repro::campaign::{fit_device, DeviceChoice};
+use annette::zoo;
+
+#[test]
+fn model_families_order_by_accuracy_on_dpu() {
+    let fitted = fit_device(DeviceChoice::Dpu, 3, None).expect("campaign");
+    let est = Estimator::new(&fitted.model);
+    let nets = zoo::table2();
+    let truth: Vec<f64> = nets
+        .iter()
+        .map(|e| fitted.device.profile(&e.graph, 20, 7).total_ms())
+        .collect();
+    let mape_of = |kind: ModelKind| -> f64 {
+        let pred: Vec<f64> = nets
+            .iter()
+            .map(|e| est.estimate_with(&e.graph, kind).total_ms())
+            .collect();
+        mape(&pred, &truth)
+    };
+    let roofline = mape_of(ModelKind::Roofline);
+    let refined = mape_of(ModelKind::RefinedRoofline);
+    let statistical = mape_of(ModelKind::Statistical);
+    let mixed = mape_of(ModelKind::Mixed);
+
+    // The paper's ordering: stacked mixed <= statistical <= roofline.
+    assert!(
+        mixed <= statistical,
+        "mixed ({mixed:.2}%) must beat statistical ({statistical:.2}%)"
+    );
+    assert!(
+        statistical <= roofline,
+        "statistical ({statistical:.2}%) must beat roofline ({roofline:.2}%)"
+    );
+    // The refined roofline improves on the plain roofline baseline.
+    assert!(
+        refined <= roofline,
+        "refined roofline ({refined:.2}%) must not be worse than roofline ({roofline:.2}%)"
+    );
+    // And the fitted models are not just relatively better — they are good.
+    assert!(mixed < 5.0, "mixed MAPE {mixed:.2}% unexpectedly high");
+    assert!(roofline > 10.0, "roofline MAPE {roofline:.2}% suspiciously low");
+}
+
+#[test]
+fn mixed_model_fidelity_on_nasbench_exceeds_0_9() {
+    let fitted = fit_device(DeviceChoice::Dpu, 3, None).expect("campaign");
+    let est = Estimator::new(&fitted.model);
+    let nets = zoo::nasbench::sample_networks(50, 2024);
+    let truth: Vec<f64> = nets
+        .iter()
+        .map(|g| fitted.device.profile(g, 20, 0x7E57).total_ms())
+        .collect();
+    let pred: Vec<f64> = nets.iter().map(|g| est.estimate(g).total_ms()).collect();
+    let rho = spearman_rho(&pred, &truth);
+    assert!(rho > 0.9, "fidelity collapsed: rho = {rho:.4}");
+    let err = mape(&pred, &truth);
+    assert!(err < 10.0, "NASBench MAPE {err:.2}% unexpectedly high");
+}
+
+#[test]
+fn vpu_ordering_holds_too() {
+    let fitted = fit_device(DeviceChoice::Vpu, 3, None).expect("campaign");
+    let est = Estimator::new(&fitted.model);
+    let nets = zoo::table2();
+    let truth: Vec<f64> = nets
+        .iter()
+        .map(|e| fitted.device.profile(&e.graph, 20, 7).total_ms())
+        .collect();
+    let mape_of = |kind: ModelKind| -> f64 {
+        let pred: Vec<f64> = nets
+            .iter()
+            .map(|e| est.estimate_with(&e.graph, kind).total_ms())
+            .collect();
+        mape(&pred, &truth)
+    };
+    let mixed = mape_of(ModelKind::Mixed);
+    let statistical = mape_of(ModelKind::Statistical);
+    let roofline = mape_of(ModelKind::Roofline);
+    // On the VPU both fitted families are within noise of each other
+    // (prototype margins: mixed 0.3%, statistical 0.6%), so the hard
+    // assertion allows a small epsilon while still enforcing the ordering
+    // against the analytical baseline.
+    assert!(
+        mixed <= statistical + 0.5,
+        "mixed ({mixed:.2}%) must not lose to statistical ({statistical:.2}%)"
+    );
+    assert!(
+        statistical <= roofline,
+        "statistical ({statistical:.2}%) must beat roofline ({roofline:.2}%)"
+    );
+    assert!(mixed < 5.0, "mixed MAPE {mixed:.2}% unexpectedly high");
+}
