@@ -1,6 +1,6 @@
 # Convenience targets for the annette reproduction.
 
-.PHONY: build test examples artifacts clean
+.PHONY: build test examples bench bench-smoke artifacts clean
 
 build:
 	cargo build --release
@@ -15,6 +15,16 @@ examples: build
 	cargo run --release --example estimate_zoo
 	cargo run --release --example serve_demo
 	cargo run --release --example nas_search
+
+# Estimation-engine throughput/latency benchmark (std-only, no criterion).
+# Writes BENCH_estimator.json at the repo root: baseline vs compiled
+# estimates/sec, p50/p99 latency, and parallel service scaling.
+bench:
+	cargo bench --bench estimator_bench
+
+# Short-iteration run for CI: same measurements, seconds not minutes.
+bench-smoke:
+	cargo bench --bench estimator_bench -- --smoke
 
 # The PJRT batch artifact (artifacts/mixed_batch.hlo.txt) is produced by an
 # offline JAX + Pallas toolchain that is intentionally NOT bundled with this

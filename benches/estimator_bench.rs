@@ -1,0 +1,282 @@
+//! Std-only benchmark harness for the estimation engine (`harness = false`;
+//! no criterion — the crate is dependency-free).
+//!
+//! Measures estimates/sec and p50/p99 per-call latency on two workloads:
+//! the 12-network zoo (Table 2) and a 256-graph NASBench sample, for
+//!
+//! * the **pre-PR baseline** (`Estimator::estimate_uncompiled_with`: feature
+//!   re-derivation, per-unit allocation, O(n²) member attachment), and
+//! * the **compiled engine** (`Estimator::total_ms`: fingerprint-cached
+//!   compiled graphs, allocation-free total-only fast path),
+//!
+//! plus the parallel batch service (`Service::serve_lines`) at 1/2/4 worker
+//! threads. Results are written to `BENCH_estimator.json` at the repo root —
+//! the perf trajectory future PRs regress against.
+//!
+//! ```sh
+//! make bench           # full run
+//! cargo bench --bench estimator_bench -- --smoke   # CI smoke (seconds)
+//! ```
+
+use std::time::Instant;
+
+use annette::coordinator::orchestrator::run_campaign;
+use annette::coordinator::Service;
+use annette::estim::estimator::Estimator;
+use annette::graph::serial::graph_to_value;
+use annette::graph::Graph;
+use annette::hw::device::Device;
+use annette::hw::dpu::DpuDevice;
+use annette::json::Value;
+use annette::models::layer::ModelKind;
+use annette::models::platform::PlatformModel;
+use annette::zoo;
+
+struct WorkloadResult {
+    workload: String,
+    estimates_per_sec: f64,
+    p50_us: f64,
+    p99_us: f64,
+    threads: usize,
+    calls: usize,
+}
+
+impl WorkloadResult {
+    fn to_value(&self) -> Value {
+        Value::Obj(vec![
+            ("workload".to_string(), Value::str(self.workload.clone())),
+            (
+                "estimates_per_sec".to_string(),
+                Value::num(round3(self.estimates_per_sec)),
+            ),
+            ("p50_us".to_string(), Value::num(round3(self.p50_us))),
+            ("p99_us".to_string(), Value::num(round3(self.p99_us))),
+            ("threads".to_string(), Value::int(self.threads)),
+            ("calls".to_string(), Value::int(self.calls)),
+        ])
+    }
+}
+
+fn round3(x: f64) -> f64 {
+    if x.is_finite() {
+        (x * 1000.0).round() / 1000.0
+    } else {
+        0.0
+    }
+}
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
+    sorted[idx]
+}
+
+/// Time `f` once per graph per pass, recording per-call latency.
+fn run_single<F: FnMut(&Graph) -> f64>(
+    name: &str,
+    graphs: &[Graph],
+    passes: usize,
+    mut f: F,
+) -> WorkloadResult {
+    let mut lat_us: Vec<f64> = Vec::with_capacity(passes * graphs.len());
+    let mut sink = 0.0f64;
+    let wall = Instant::now();
+    for _ in 0..passes {
+        for g in graphs {
+            let t0 = Instant::now();
+            sink += f(g);
+            lat_us.push(t0.elapsed().as_secs_f64() * 1e6);
+        }
+    }
+    let elapsed = wall.elapsed().as_secs_f64();
+    assert!(sink > 0.0, "estimates must be positive");
+    lat_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    WorkloadResult {
+        workload: name.to_string(),
+        estimates_per_sec: lat_us.len() as f64 / elapsed,
+        p50_us: percentile(&lat_us, 0.50),
+        p99_us: percentile(&lat_us, 0.99),
+        threads: 1,
+        calls: lat_us.len(),
+    }
+}
+
+/// Time `serve_lines` over `passes` batches; per-line latency percentiles
+/// are over per-pass means (individual lines are not separable once fanned
+/// across workers).
+fn run_service(
+    name: &str,
+    svc: &Service,
+    input: &str,
+    n_lines: usize,
+    passes: usize,
+    threads: usize,
+) -> WorkloadResult {
+    let mut pass_mean_us: Vec<f64> = Vec::with_capacity(passes);
+    let wall = Instant::now();
+    for _ in 0..passes {
+        let t0 = Instant::now();
+        let out = svc.serve_lines(input, threads);
+        let dt = t0.elapsed().as_secs_f64();
+        assert_eq!(out.len(), n_lines);
+        pass_mean_us.push(dt * 1e6 / n_lines as f64);
+    }
+    let elapsed = wall.elapsed().as_secs_f64();
+    pass_mean_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    WorkloadResult {
+        workload: name.to_string(),
+        estimates_per_sec: (passes * n_lines) as f64 / elapsed,
+        p50_us: percentile(&pass_mean_us, 0.50),
+        p99_us: percentile(&pass_mean_us, 0.99),
+        threads,
+        calls: passes * n_lines,
+    }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke" || a == "--quick");
+    let (nas_count, base_passes, fast_passes, svc_passes) = if smoke {
+        (32, 1, 20, 2)
+    } else {
+        (256, 5, 400, 20)
+    };
+
+    eprintln!("[bench] fitting platform model (ZCU102 DPU campaign) ...");
+    let dev = DpuDevice::zcu102();
+    let data = run_campaign(&dev, 2, 4);
+    let model = PlatformModel::fit(&dev.spec(), &data);
+    let est = Estimator::new(&model);
+
+    let zoo_nets: Vec<Graph> = zoo::table2().into_iter().map(|e| e.graph).collect();
+    let nas_nets = zoo::nasbench::sample_networks(nas_count, 2024);
+    eprintln!(
+        "[bench] workloads: zoo x{}, nasbench x{} (smoke={smoke})",
+        zoo_nets.len(),
+        nas_nets.len()
+    );
+
+    let mut results: Vec<WorkloadResult> = Vec::new();
+
+    // --- Single-thread: pre-PR baseline vs compiled engine ------------------
+    let base_nas = run_single(
+        &format!("nasbench{nas_count}_uncompiled_baseline"),
+        &nas_nets,
+        base_passes,
+        |g| est.estimate_uncompiled_with(g, ModelKind::Mixed).total_ms(),
+    );
+    let base_zoo = run_single("zoo12_uncompiled_baseline", &zoo_nets, base_passes, |g| {
+        est.estimate_uncompiled_with(g, ModelKind::Mixed).total_ms()
+    });
+    // Warm the compiled-graph cache, then measure steady state (the NAS
+    // inner-loop scenario the engine targets).
+    for g in nas_nets.iter().chain(&zoo_nets) {
+        est.total_ms(g, ModelKind::Mixed);
+    }
+    let fast_nas = run_single(
+        &format!("nasbench{nas_count}_compiled_total"),
+        &nas_nets,
+        fast_passes,
+        |g| est.total_ms(g, ModelKind::Mixed),
+    );
+    let fast_zoo = run_single("zoo12_compiled_total", &zoo_nets, fast_passes, |g| {
+        est.total_ms(g, ModelKind::Mixed)
+    });
+    // NAS loops that hold the compiled handle skip even the per-call
+    // fingerprint pass: a pure table lookup.
+    let handles: Vec<_> = nas_nets.iter().map(|g| est.compile_graph(g)).collect();
+    let handle_nas = {
+        let mut idx = 0usize;
+        run_single(
+            &format!("nasbench{nas_count}_compiled_handle"),
+            &nas_nets,
+            fast_passes,
+            |_| {
+                let t = handles[idx % handles.len()].total_ms(ModelKind::Mixed);
+                idx += 1;
+                t
+            },
+        )
+    };
+    let speedup = fast_nas.estimates_per_sec / base_nas.estimates_per_sec;
+    eprintln!(
+        "[bench] single-thread: baseline {:.0}/s -> compiled {:.0}/s ({speedup:.1}x)",
+        base_nas.estimates_per_sec, fast_nas.estimates_per_sec
+    );
+
+    // --- Parallel batch service ---------------------------------------------
+    let svc = Service::new(model.clone());
+    let mut input = String::new();
+    for g in &nas_nets {
+        input.push_str(&format!(
+            "{{\"op\":\"estimate\",\"kind\":\"mixed\",\"total_only\":true,\"network\":{}}}\n",
+            graph_to_value(g)
+        ));
+    }
+    let mut svc_results: Vec<WorkloadResult> = Vec::new();
+    for threads in [1usize, 2, 4] {
+        let r = run_service(
+            &format!("service_nasbench{nas_count}_{threads}t"),
+            &svc,
+            &input,
+            nas_nets.len(),
+            svc_passes,
+            threads,
+        );
+        eprintln!(
+            "[bench] service x{threads} threads: {:.0} lines/s",
+            r.estimates_per_sec
+        );
+        svc_results.push(r);
+    }
+    let scaling_2t = svc_results[1].estimates_per_sec / svc_results[0].estimates_per_sec;
+    let scaling_4t = svc_results[2].estimates_per_sec / svc_results[0].estimates_per_sec;
+
+    results.push(base_nas);
+    results.push(base_zoo);
+    results.push(fast_nas);
+    results.push(fast_zoo);
+    results.push(handle_nas);
+    results.extend(svc_results);
+
+    let doc = Value::Obj(vec![
+        ("format".to_string(), Value::str("annette-bench.v1")),
+        (
+            "mode".to_string(),
+            Value::str(if smoke { "smoke" } else { "full" }),
+        ),
+        ("device".to_string(), Value::str(model.spec.name.clone())),
+        (
+            "threads_available".to_string(),
+            Value::int(
+                std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(1),
+            ),
+        ),
+        (
+            "workloads".to_string(),
+            Value::Arr(results.iter().map(|r| r.to_value()).collect()),
+        ),
+        (
+            "speedup_single_thread".to_string(),
+            Value::num(round3(speedup)),
+        ),
+        (
+            "parallel_scaling_2t".to_string(),
+            Value::num(round3(scaling_2t)),
+        ),
+        (
+            "parallel_scaling_4t".to_string(),
+            Value::num(round3(scaling_4t)),
+        ),
+        (
+            "provenance".to_string(),
+            Value::str("benches/estimator_bench.rs"),
+        ),
+    ]);
+    std::fs::write("BENCH_estimator.json", doc.to_string()).expect("write BENCH_estimator.json");
+    eprintln!("[bench] wrote BENCH_estimator.json");
+    println!("{doc}");
+}

@@ -7,59 +7,107 @@
 //! * `{"op":"models"}` — list available model families and the device.
 //! * `{"op":"estimate","network":<graph>,"kind":"mixed"}` — estimate a
 //!   network description graph; `kind` is optional and defaults to mixed.
+//!   Pass `"total_only":true` to skip the per-unit breakdown (the NAS
+//!   screening fast path).
+//!
+//! The service compiles its platform model **once** at construction
+//! ([`crate::estim::CompiledModel`]), caches compiled graphs by structural
+//! fingerprint, and serializes responses by streaming into a reusable
+//! `String` buffer with static keys — no `Value` tree, no per-key
+//! allocation. [`Service::serve_lines`] fans a batch of request lines
+//! across worker threads with deterministic, input-ordered output.
 
 use crate::error::{Error, Result};
-use crate::estim::estimator::Estimator;
+use crate::estim::compiled::{CompiledModel, GraphCache};
 use crate::graph::serial;
-use crate::json::Value;
+use crate::json::{write_json_f64, write_json_str, write_json_usize, Value};
 use crate::models::layer::ModelKind;
 use crate::models::platform::PlatformModel;
+use crate::par::fan_indexed;
 
 /// A resident platform model answering estimation requests.
 pub struct Service {
     model: PlatformModel,
+    compiled: CompiledModel,
+    cache: GraphCache,
 }
 
 impl Service {
+    /// Compile `model` once; every request thereafter reuses the flat
+    /// tables instead of rebuilding an estimator.
     pub fn new(model: PlatformModel) -> Self {
-        Service { model }
+        let compiled = CompiledModel::compile(&model);
+        Service {
+            model,
+            compiled,
+            cache: GraphCache::new(),
+        }
+    }
+
+    /// The platform model this service answers from.
+    pub fn model(&self) -> &PlatformModel {
+        &self.model
     }
 
     /// Handle one request line; the response is always a single JSON line.
     pub fn handle(&self, request: &str) -> String {
-        match self.dispatch(request) {
-            Ok(v) => v.to_string(),
-            Err(e) => Value::Obj(vec![
-                ("ok".to_string(), Value::Bool(false)),
-                ("error".to_string(), Value::str(e.to_string())),
-            ])
-            .to_string(),
+        let mut out = String::with_capacity(128);
+        self.handle_into(request, &mut out);
+        out
+    }
+
+    /// Handle one request line, writing the response into `out` (cleared
+    /// first). Callers in a serve loop pass the same buffer every time, so
+    /// steady-state request handling performs no response allocation.
+    pub fn handle_into(&self, request: &str, out: &mut String) {
+        out.clear();
+        if let Err(e) = self.dispatch(request, out) {
+            // A handler may have written a partial response before failing;
+            // errors are whole lines of their own.
+            out.clear();
+            out.push_str("{\"ok\":false,\"error\":");
+            write_json_str(out, &e.to_string());
+            out.push('}');
         }
     }
 
-    fn dispatch(&self, request: &str) -> Result<Value> {
+    /// Answer a batch of request lines across `threads` workers
+    /// ([`crate::par::fan_indexed`]). Each line is independent; results land
+    /// at their input index, so the output is byte-identical to the
+    /// single-threaded run and an in-band error on one line never affects
+    /// its neighbors.
+    pub fn serve_lines(&self, input: &str, threads: usize) -> Vec<String> {
+        let lines: Vec<&str> = input.lines().collect();
+        fan_indexed(lines.len(), threads, |i| self.handle(lines[i]))
+    }
+
+    fn dispatch(&self, request: &str, out: &mut String) -> Result<()> {
         let req = Value::parse(request)?;
         let op = req.req_str("op")?;
         match op {
-            "models" => Ok(Value::Obj(vec![
-                ("ok".to_string(), Value::Bool(true)),
-                ("device".to_string(), Value::str(self.model.spec.name.clone())),
-                (
-                    "models".to_string(),
-                    Value::Arr(
-                        ModelKind::ALL
-                            .iter()
-                            .map(|k| Value::str(k.as_str()))
-                            .collect(),
-                    ),
-                ),
-            ])),
-            "estimate" => self.estimate(&req),
+            "models" => {
+                self.write_models(out);
+                Ok(())
+            }
+            "estimate" => self.estimate(&req, out),
             other => Err(Error::Invalid(format!("unknown op `{other}`"))),
         }
     }
 
-    fn estimate(&self, req: &Value) -> Result<Value> {
+    fn write_models(&self, out: &mut String) {
+        out.push_str("{\"ok\":true,\"device\":");
+        write_json_str(out, &self.model.spec.name);
+        out.push_str(",\"models\":[");
+        for (i, kind) in ModelKind::ALL.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            write_json_str(out, kind.as_str());
+        }
+        out.push_str("]}");
+    }
+
+    fn estimate(&self, req: &Value, out: &mut String) -> Result<()> {
         let kind = match req.get("kind") {
             Some(v) => {
                 let s = v
@@ -74,26 +122,34 @@ impl Service {
             .get("network")
             .ok_or_else(|| Error::Invalid("`estimate` requires a `network` graph".to_string()))?;
         let graph = serial::graph_from_value(network)?;
-        let est = Estimator::new(&self.model).estimate_with(&graph, kind);
-        let units: Vec<Value> = est
-            .units
-            .iter()
-            .map(|u| {
-                Value::Obj(vec![
-                    ("name".to_string(), Value::str(u.name.clone())),
-                    ("class".to_string(), Value::str(u.class.clone())),
-                    ("ms".to_string(), Value::num(u.ms)),
-                    ("fused".to_string(), Value::int(u.members.len())),
-                ])
-            })
-            .collect();
-        Ok(Value::Obj(vec![
-            ("ok".to_string(), Value::Bool(true)),
-            ("network".to_string(), Value::str(est.network.clone())),
-            ("kind".to_string(), Value::str(kind.as_str())),
-            ("total_ms".to_string(), Value::num(est.total_ms())),
-            ("units".to_string(), Value::Arr(units)),
-        ]))
+        let total_only = matches!(req.get("total_only"), Some(Value::Bool(true)));
+        let cg = self.cache.get_or_compile(&self.compiled, &graph);
+        out.push_str("{\"ok\":true,\"network\":");
+        write_json_str(out, &graph.name);
+        out.push_str(",\"kind\":");
+        write_json_str(out, kind.as_str());
+        out.push_str(",\"total_ms\":");
+        write_json_f64(out, cg.total_ms(kind));
+        if !total_only {
+            out.push_str(",\"units\":[");
+            for (i, unit) in cg.units(kind).enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                out.push_str("{\"name\":");
+                write_json_str(out, &graph.layers[unit.root].name);
+                out.push_str(",\"class\":");
+                write_json_str(out, unit.class);
+                out.push_str(",\"ms\":");
+                write_json_f64(out, unit.ms);
+                out.push_str(",\"fused\":");
+                write_json_usize(out, unit.fused);
+                out.push('}');
+            }
+            out.push(']');
+        }
+        out.push('}');
+        Ok(())
     }
 }
 
@@ -136,6 +192,41 @@ mod tests {
         assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(true));
         assert!(resp.req_f64("total_ms").unwrap() > 0.0);
         assert!(!resp.req_arr("units").unwrap().is_empty());
+        let unit = &resp.req_arr("units").unwrap()[0];
+        assert!(unit.get("name").is_some());
+        assert!(unit.get("class").is_some());
+        assert!(unit.get("fused").is_some());
+    }
+
+    #[test]
+    fn total_only_skips_units_but_agrees_on_total() {
+        let svc = service();
+        let full = format!(r#"{{"op":"estimate","kind":"mixed","network":{}}}"#, net_json());
+        let fast = format!(
+            r#"{{"op":"estimate","kind":"mixed","total_only":true,"network":{}}}"#,
+            net_json()
+        );
+        let rf = Value::parse(&svc.handle(&full)).unwrap();
+        let rt = Value::parse(&svc.handle(&fast)).unwrap();
+        assert!(rt.get("units").is_none());
+        assert_eq!(
+            rf.req_f64("total_ms").unwrap().to_bits(),
+            rt.req_f64("total_ms").unwrap().to_bits()
+        );
+    }
+
+    #[test]
+    fn handle_into_reuses_the_buffer() {
+        let svc = service();
+        let mut buf = String::new();
+        svc.handle_into(r#"{"op":"models"}"#, &mut buf);
+        let first = buf.clone();
+        // A failed request then a repeat of the first: the buffer must hold
+        // exactly the latest response each time.
+        svc.handle_into("not json", &mut buf);
+        assert!(buf.contains("\"ok\":false"));
+        svc.handle_into(r#"{"op":"models"}"#, &mut buf);
+        assert_eq!(buf, first);
     }
 
     #[test]

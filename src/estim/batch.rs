@@ -8,8 +8,12 @@
 //! Until a PJRT runtime is wired in, [`BatchEstimator::new`] validates the
 //! artifact and fails with an actionable error when it is absent, and
 //! [`BatchEstimator::estimate_networks`] evaluates the same stacked model
-//! with the native estimator over the whole batch. Callers degrade exactly
-//! as `examples/nas_search.rs` documents: no artifact → native path.
+//! with the native compiled estimator over the whole batch — via the
+//! total-only fast path, optionally fanned across worker threads
+//! ([`BatchEstimator::estimate_networks_threaded`]) with deterministic,
+//! input-ordered output. Callers degrade exactly as
+//! `examples/nas_search.rs` documents: no artifact → native path
+//! ([`BatchEstimator::open_or_native`]).
 
 use std::fs;
 use std::path::Path;
@@ -17,15 +21,18 @@ use std::path::Path;
 use crate::error::{Error, Result};
 use crate::estim::estimator::Estimator;
 use crate::graph::Graph;
+use crate::models::layer::ModelKind;
 use crate::models::platform::PlatformModel;
+use crate::par::fan_indexed;
 
 /// Magic first line a batch artifact must carry.
 pub const ARTIFACT_MAGIC: &str = "annette-hlo v1";
 
 pub struct BatchEstimator<'a> {
-    model: &'a PlatformModel,
+    est: Estimator<'a>,
     /// Artifact description (first line after the magic), kept for
-    /// diagnostics.
+    /// diagnostics; identifies the native fallback when no artifact backs
+    /// this estimator.
     pub artifact_info: String,
 }
 
@@ -55,15 +62,53 @@ impl<'a> BatchEstimator<'a> {
         }
         let artifact_info = lines.next().unwrap_or("").trim().to_string();
         Ok(BatchEstimator {
-            model,
+            est: Estimator::new(model),
             artifact_info,
         })
     }
 
-    /// Score a batch of networks (mixed model, milliseconds per network).
+    /// The native fallback: no artifact, same scores, scalar execution
+    /// through the compiled estimator.
+    pub fn native(model: &'a PlatformModel) -> Self {
+        BatchEstimator {
+            est: Estimator::new(model),
+            artifact_info: "native fallback (no PJRT artifact)".to_string(),
+        }
+    }
+
+    /// Open the artifact when it exists, otherwise degrade to the native
+    /// path. A present-but-malformed artifact still errors loudly.
+    pub fn open_or_native(model: &'a PlatformModel, artifact: &Path) -> Result<Self> {
+        if artifact.exists() {
+            Self::new(model, artifact)
+        } else {
+            Ok(Self::native(model))
+        }
+    }
+
+    /// The estimator backing the native path.
+    pub fn estimator(&self) -> &Estimator<'a> {
+        &self.est
+    }
+
+    /// Score a batch of networks (mixed model, milliseconds per network) on
+    /// the current thread.
     pub fn estimate_networks(&self, nets: &[Graph]) -> Result<Vec<f64>> {
-        let est = Estimator::new(self.model);
-        Ok(nets.iter().map(|g| est.estimate(g).total_ms()).collect())
+        Ok(nets
+            .iter()
+            .map(|g| self.est.total_ms(g, ModelKind::Mixed))
+            .collect())
+    }
+
+    /// Score a batch across `threads` worker threads
+    /// ([`crate::par::fan_indexed`]): shared-counter work pulling (good load
+    /// balance on graphs of uneven depth) with results landing at their
+    /// input index, so the output is byte-identical to the single-threaded
+    /// run regardless of scheduling.
+    pub fn estimate_networks_threaded(&self, nets: &[Graph], threads: usize) -> Result<Vec<f64>> {
+        Ok(fan_indexed(nets.len(), threads, |i| {
+            self.est.total_ms(&nets[i], ModelKind::Mixed)
+        }))
     }
 }
 
@@ -108,5 +153,50 @@ mod tests {
         let scores = be.estimate_networks(&nets).unwrap();
         assert_eq!(scores.len(), 3);
         assert!(scores.iter().all(|s| *s > 0.0));
+    }
+
+    #[test]
+    fn native_fallback_matches_estimator_exactly() {
+        let m = model();
+        // Missing artifact → native path, not an error.
+        let be = BatchEstimator::open_or_native(&m, Path::new("no/such/artifact.hlo.txt"))
+            .expect("native fallback");
+        assert!(be.artifact_info.contains("native fallback"));
+        // A malformed artifact that *does* exist still errors loudly.
+        let dir = std::env::temp_dir().join("annette-batch-native-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let bad = dir.join("bad.hlo.txt");
+        std::fs::write(&bad, "garbage\n").unwrap();
+        assert!(BatchEstimator::open_or_native(&m, &bad).is_err());
+
+        let nets = crate::zoo::nasbench::sample_networks(12, 9);
+        let scores = be.estimate_networks(&nets).unwrap();
+        let est = Estimator::new(&m);
+        for (g, &s) in nets.iter().zip(&scores) {
+            assert_eq!(
+                s.to_bits(),
+                est.estimate(g).total_ms().to_bits(),
+                "native batch score diverged for {}",
+                g.name
+            );
+        }
+    }
+
+    #[test]
+    fn threaded_scores_are_byte_identical_to_serial() {
+        let m = model();
+        let be = BatchEstimator::native(&m);
+        let nets = crate::zoo::nasbench::sample_networks(24, 5);
+        let serial = be.estimate_networks(&nets).unwrap();
+        for threads in [2, 4, 7] {
+            let par = be.estimate_networks_threaded(&nets, threads).unwrap();
+            assert_eq!(serial.len(), par.len());
+            for (a, b) in serial.iter().zip(&par) {
+                assert_eq!(a.to_bits(), b.to_bits(), "threaded run diverged");
+            }
+        }
+        // Degenerate thread counts behave.
+        assert_eq!(be.estimate_networks_threaded(&nets, 0).unwrap(), serial);
+        assert!(be.estimate_networks_threaded(&[], 4).unwrap().is_empty());
     }
 }

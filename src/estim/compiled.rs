@@ -1,0 +1,551 @@
+//! The throughput-first estimation engine: platform models and graphs
+//! compiled into flat, index-addressed tables so the per-estimate hot path
+//! runs without allocation, string comparison, or `Option` chains.
+//!
+//! Two precomputation stages mirror what changes at which frequency:
+//!
+//! 1. [`CompiledModel::compile`] runs once per fitted [`PlatformModel`]
+//!    (service startup, estimator construction). It flattens the per-class
+//!    coefficient lookup (`Vec<ClassModel>` + string compare) into a dense
+//!    `[CompiledClass; NUM_CLASSES]` table and the learned fusion-rule list
+//!    into a `NUM_CLASSES × NUM_FUSION_KEYS` boolean table.
+//! 2. [`CompiledGraph::compile`] runs once per distinct graph. It derives
+//!    every feature an estimate needs — per-layer class ids, flops, ideal
+//!    compute/memory microseconds, PE-utilization corrections, fusion roots,
+//!    and CSR member lists — and bakes the per-layer unit latencies of all
+//!    four model families, plus their totals. Repeated estimates of the same
+//!    graph (the NAS-search / batch-zoo scenario) then reduce to a cache
+//!    lookup keyed by the graph's structural fingerprint.
+//!
+//! Numerical discipline: the compile step evaluates *exactly* the same
+//! floating-point expressions, in the same order, as the uncompiled
+//! reference path ([`crate::estim::Estimator::estimate_uncompiled_with`]),
+//! so compiled and uncompiled estimates agree bit-for-bit, not just within
+//! a tolerance.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::graph::{assign_units, Graph, LayerClass, LayerKind, NUM_CLASSES, NUM_FUSION_KEYS};
+use crate::hw::device::{class_utils, DeviceSpec};
+use crate::models::layer::ModelKind;
+use crate::models::platform::PlatformModel;
+
+/// Class names indexed by [`LayerClass::index`].
+const CLASS_NAMES: [&str; NUM_CLASSES] = ["conv", "dwconv", "pool", "fc", "elem", "mem"];
+
+/// Sentinel class id for uncosted layers (Input, Flatten).
+const UNCOSTED: u8 = u8::MAX;
+
+/// One layer class, flattened for index addressing.
+#[derive(Clone, Copy, Debug)]
+pub struct CompiledClass {
+    /// Whether the campaign fitted a model for this class; when false the
+    /// fitted families fall back to the plain roofline value.
+    pub present: bool,
+    /// Statistical regression `[θ_compute, θ_mem, overhead_us]`.
+    pub stat: [f64; 3],
+    /// Mixed regression `[1/base_eff, 1/mem_eff, overhead_us]`.
+    pub mixed: [f64; 3],
+    /// Detected PE-alignment triple used by the mixed model.
+    pub align_out: usize,
+    pub align_in: usize,
+    pub align_w: usize,
+    /// Learned fusion rules: `fuse[k]` says a consumer with fusion-key index
+    /// `k` folds into a unit rooted at this class.
+    pub fuse: [bool; NUM_FUSION_KEYS],
+}
+
+impl CompiledClass {
+    fn absent() -> CompiledClass {
+        CompiledClass {
+            present: false,
+            stat: [0.0; 3],
+            mixed: [0.0; 3],
+            align_out: 1,
+            align_in: 1,
+            align_w: 1,
+            fuse: [false; NUM_FUSION_KEYS],
+        }
+    }
+}
+
+/// Process-unique ids for compiled models, so graph caches can detect a
+/// compilation produced under a *different* model and refuse to serve it.
+static NEXT_MODEL_ID: AtomicU64 = AtomicU64::new(1);
+
+/// A [`PlatformModel`] compiled into flat per-class tables. Construct once
+/// (service or estimator creation), query millions of times.
+#[derive(Clone, Debug)]
+pub struct CompiledModel {
+    /// Process-unique identity of this compilation; clones share it (their
+    /// tables are identical by construction).
+    id: u64,
+    /// The device datasheet (needed for the analytical baselines).
+    pub spec: DeviceSpec,
+    /// Dense per-class table indexed by [`LayerClass::index`].
+    pub classes: [CompiledClass; NUM_CLASSES],
+}
+
+impl CompiledModel {
+    /// Process-unique identity of this compilation.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Flatten a fitted platform model. O(classes + fusion rules); never on
+    /// the hot path.
+    pub fn compile(model: &PlatformModel) -> CompiledModel {
+        let mut classes = [CompiledClass::absent(); NUM_CLASSES];
+        for cm in &model.classes {
+            let idx = match LayerClass::parse(&cm.class) {
+                Some(c) if c != LayerClass::None => c.index(),
+                // Unknown or uncosted class names can never match a layer's
+                // class on the hot path; drop them, as the string-comparing
+                // lookup effectively did.
+                _ => continue,
+            };
+            let fuse = classes[idx].fuse;
+            classes[idx] = CompiledClass {
+                present: true,
+                stat: cm.stat,
+                mixed: cm.mixed,
+                align_out: cm.align_out,
+                align_in: cm.align_in,
+                align_w: cm.align_w,
+                fuse,
+            };
+        }
+        for (producer, consumer) in &model.fusion {
+            let pidx = match LayerClass::parse(producer) {
+                Some(c) if c != LayerClass::None => c.index(),
+                _ => continue,
+            };
+            let kidx = match consumer.as_str() {
+                "batchnorm" => 0,
+                "act" => 1,
+                _ => continue,
+            };
+            classes[pidx].fuse[kidx] = true;
+        }
+        CompiledModel {
+            id: NEXT_MODEL_ID.fetch_add(1, Ordering::Relaxed),
+            spec: model.spec.clone(),
+            classes,
+        }
+    }
+
+    /// The learned fusion predicate as two array indexings — equivalent to
+    /// [`PlatformModel::fusable`]'s linear scan over string pairs.
+    #[inline]
+    pub fn fusable(&self, producer: LayerClass, consumer: &LayerKind) -> bool {
+        let pidx = producer.index();
+        if pidx >= NUM_CLASSES {
+            return false;
+        }
+        match consumer.fusion_key_index() {
+            Some(kidx) => self.classes[pidx].fuse[kidx],
+            None => false,
+        }
+    }
+}
+
+/// Borrowed view of one execution unit of a compiled graph: everything a
+/// response serializer needs without allocating a [`crate::estim::UnitEstimate`].
+#[derive(Clone, Copy, Debug)]
+pub struct UnitView {
+    /// Root layer id.
+    pub root: usize,
+    /// Interned class name.
+    pub class: &'static str,
+    /// Operation count of the root layer.
+    pub flops: f64,
+    /// Predicted unit latency in milliseconds.
+    pub ms: f64,
+    /// Number of layers fused into this unit (excluding the root).
+    pub fused: usize,
+}
+
+/// A [`Graph`] precomputed against one [`CompiledModel`]: struct-of-arrays
+/// layer features and baked per-family unit latencies.
+#[derive(Clone, Debug)]
+pub struct CompiledGraph {
+    /// Identity of the [`CompiledModel`] this graph was compiled under.
+    pub model_id: u64,
+    /// Graph name (sanity anchor for fingerprint-keyed caches).
+    pub name: String,
+    /// Structural fingerprint of the source graph.
+    pub fingerprint: (u64, u64),
+    /// Layer count of the source graph.
+    pub n_layers: usize,
+    /// Dense class id per layer ([`LayerClass::index`] as u8, `UNCOSTED` for
+    /// Input/Flatten).
+    class_idx: Vec<u8>,
+    /// Operation count per layer.
+    flops: Vec<f64>,
+    /// Unit latency in µs per model family (indexed by [`ModelKind::index`])
+    /// per layer; zero for uncosted layers.
+    us: [Vec<f64>; 4],
+    /// End-to-end latency in ms per model family, summed in unit order.
+    totals_ms: [f64; 4],
+    /// Every costed layer id, ascending — the units of the analytical
+    /// baselines, which have no mapping model.
+    solo_units: Vec<u32>,
+    /// Fusion-root layer ids, ascending — the units of the fitted families.
+    fused_units: Vec<u32>,
+    /// CSR offsets into `members`: unit `i` of the fused path owns
+    /// `members[member_start[i]..member_start[i+1]]`.
+    member_start: Vec<u32>,
+    /// Fused member layer ids (excluding roots), grouped per unit in layer
+    /// order.
+    members: Vec<u32>,
+}
+
+impl CompiledGraph {
+    /// Derive all estimation features of `g` under `model`. O(n); runs once
+    /// per distinct graph, after which every estimate is allocation-free.
+    pub fn compile(model: &CompiledModel, g: &Graph) -> CompiledGraph {
+        let n = g.layers.len();
+        let spec = &model.spec;
+        let mut class_idx = vec![UNCOSTED; n];
+        let mut flops = vec![0.0f64; n];
+        let mut us = [
+            vec![0.0f64; n],
+            vec![0.0f64; n],
+            vec![0.0f64; n],
+            vec![0.0f64; n],
+        ];
+        let mut solo_units: Vec<u32> = Vec::new();
+        for lay in &g.layers {
+            let class = lay.class();
+            if class == LayerClass::None {
+                continue;
+            }
+            let ci = class.index();
+            class_idx[lay.id] = ci as u8;
+            solo_units.push(lay.id as u32);
+            flops[lay.id] = lay.flops();
+            let (cout, cin, wout) = lay.mapping_features();
+            // Exactly the uncompiled reference expressions, term for term.
+            let compute = spec.ideal_compute_us(lay.flops());
+            let mem = spec.ideal_mem_us(spec.layer_bytes(lay));
+            let roofline = compute.max(mem);
+            let u_spec = class_utils(
+                class,
+                cout,
+                cin,
+                wout,
+                spec.channel_align,
+                spec.input_align,
+                spec.spatial_align,
+            );
+            let cc = &model.classes[ci];
+            us[0][lay.id] = roofline;
+            us[1][lay.id] = (compute / u_spec).max(mem);
+            us[2][lay.id] = if cc.present {
+                (cc.stat[0] * compute + cc.stat[1] * mem + cc.stat[2]).max(0.0)
+            } else {
+                roofline
+            };
+            us[3][lay.id] = if cc.present {
+                let u = class_utils(class, cout, cin, wout, cc.align_out, cc.align_in, cc.align_w);
+                (cc.mixed[0] * compute / u + cc.mixed[1] * mem + cc.mixed[2]).max(0.0)
+            } else {
+                roofline
+            };
+        }
+
+        // Fusion roots under the learned mapping model (union-find flavored:
+        // producers precede consumers, so one forward pass resolves roots).
+        let roots = assign_units(g, |p, k| model.fusable(p, k));
+        let fused_units: Vec<u32> = g
+            .layers
+            .iter()
+            .filter(|lay| roots[lay.id] == lay.id && class_idx[lay.id] != UNCOSTED)
+            .map(|lay| lay.id as u32)
+            .collect();
+        // Root layer id → fused-unit index, then CSR member lists.
+        let mut unit_of_root = vec![u32::MAX; n];
+        for (ui, &root) in fused_units.iter().enumerate() {
+            unit_of_root[root as usize] = ui as u32;
+        }
+        let mut member_start = vec![0u32; fused_units.len() + 1];
+        for lay in &g.layers {
+            let root = roots[lay.id];
+            if root != lay.id && unit_of_root[root] != u32::MAX {
+                member_start[unit_of_root[root] as usize + 1] += 1;
+            }
+        }
+        for i in 1..member_start.len() {
+            member_start[i] += member_start[i - 1];
+        }
+        let mut cursor: Vec<u32> = member_start[..member_start.len() - 1].to_vec();
+        let mut members = vec![0u32; *member_start.last().unwrap() as usize];
+        for lay in &g.layers {
+            let root = roots[lay.id];
+            if root != lay.id && unit_of_root[root] != u32::MAX {
+                let ui = unit_of_root[root] as usize;
+                members[cursor[ui] as usize] = lay.id as u32;
+                cursor[ui] += 1;
+            }
+        }
+
+        // Per-family totals, accumulated in unit order so the sums are
+        // bit-identical to `Estimate::total_ms` over the reference path.
+        let mut totals_ms = [0.0f64; 4];
+        for &id in &solo_units {
+            totals_ms[0] += us[0][id as usize] / 1000.0;
+            totals_ms[1] += us[1][id as usize] / 1000.0;
+        }
+        for &id in &fused_units {
+            totals_ms[2] += us[2][id as usize] / 1000.0;
+            totals_ms[3] += us[3][id as usize] / 1000.0;
+        }
+
+        CompiledGraph {
+            model_id: model.id,
+            name: g.name.clone(),
+            fingerprint: g.fingerprint(),
+            n_layers: n,
+            class_idx,
+            flops,
+            us,
+            totals_ms,
+            solo_units,
+            fused_units,
+            member_start,
+            members,
+        }
+    }
+
+    /// Interned class name of a costed layer.
+    #[inline]
+    fn class_name(&self, id: usize) -> &'static str {
+        CLASS_NAMES[self.class_idx[id] as usize]
+    }
+
+    /// End-to-end latency in milliseconds under `kind` — the `total_us_only`
+    /// fast path: a single table lookup, no per-unit work at all.
+    #[inline]
+    pub fn total_ms(&self, kind: ModelKind) -> f64 {
+        self.totals_ms[kind.index()]
+    }
+
+    /// Number of execution units under `kind`.
+    pub fn unit_count(&self, kind: ModelKind) -> usize {
+        if kind.uses_fusion() {
+            self.fused_units.len()
+        } else {
+            self.solo_units.len()
+        }
+    }
+
+    /// Iterate the execution units under `kind` without allocating.
+    pub fn units(&self, kind: ModelKind) -> impl Iterator<Item = UnitView> + '_ {
+        let k = kind.index();
+        let fused_path = kind.uses_fusion();
+        let ids: &[u32] = if fused_path {
+            &self.fused_units
+        } else {
+            &self.solo_units
+        };
+        ids.iter().enumerate().map(move |(ui, &id32)| {
+            let id = id32 as usize;
+            UnitView {
+                root: id,
+                class: self.class_name(id),
+                flops: self.flops[id],
+                ms: self.us[k][id] / 1000.0,
+                fused: if fused_path {
+                    (self.member_start[ui + 1] - self.member_start[ui]) as usize
+                } else {
+                    0
+                },
+            }
+        })
+    }
+
+    /// Member layer ids fused into unit `ui` of the fused path (excluding
+    /// the root), in layer order.
+    pub fn unit_members(&self, ui: usize) -> &[u32] {
+        &self.members[self.member_start[ui] as usize..self.member_start[ui + 1] as usize]
+    }
+}
+
+/// Cap on cached compiled graphs; the map is cleared wholesale beyond this
+/// so a service fed unbounded distinct graphs cannot grow without limit.
+pub const GRAPH_CACHE_CAP: usize = 4096;
+
+/// Fingerprint-keyed cache of compiled graphs, shared across threads.
+#[derive(Debug, Default)]
+pub struct GraphCache {
+    map: Mutex<HashMap<(u64, u64), Arc<CompiledGraph>>>,
+}
+
+impl GraphCache {
+    pub fn new() -> GraphCache {
+        GraphCache::default()
+    }
+
+    /// Number of cached graphs.
+    pub fn len(&self) -> usize {
+        self.map.lock().expect("graph cache poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Return the compiled form of `g`, compiling on first sight. A cache
+    /// hit costs one O(n) fingerprint pass plus a map lookup and performs no
+    /// allocation. An entry compiled under a *different* model is never
+    /// served (the model id is checked), so one cache accidentally shared
+    /// across devices degrades to recompiling instead of answering wrong.
+    pub fn get_or_compile(&self, model: &CompiledModel, g: &Graph) -> Arc<CompiledGraph> {
+        let key = g.fingerprint();
+        {
+            let map = self.map.lock().expect("graph cache poisoned");
+            if let Some(cg) = map.get(&key) {
+                // Belt-and-braces against fingerprint collisions: the cheap
+                // invariants must also match.
+                if cg.model_id == model.id && cg.n_layers == g.layers.len() && cg.name == g.name {
+                    return Arc::clone(cg);
+                }
+            }
+        }
+        let cg = Arc::new(CompiledGraph::compile(model, g));
+        let mut map = self.map.lock().expect("graph cache poisoned");
+        if map.len() >= GRAPH_CACHE_CAP {
+            map.clear();
+        }
+        map.insert(key, Arc::clone(&cg));
+        cg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::orchestrator::run_campaign;
+    use crate::graph::GraphBuilder;
+    use crate::hw::device::Device;
+    use crate::hw::dpu::DpuDevice;
+
+    fn fitted() -> PlatformModel {
+        let dev = DpuDevice::zcu102();
+        let data = run_campaign(&dev, 2, 4);
+        PlatformModel::fit(&dev.spec(), &data)
+    }
+
+    fn net() -> Graph {
+        let mut b = GraphBuilder::new("cg");
+        let i = b.input(32, 32, 8);
+        let x = b.conv_bn_relu(i, 16, 3, 1);
+        let x = b.maxpool(x, 2, 2);
+        let x = b.conv_bn_relu(x, 32, 3, 1);
+        b.classifier(x, 10);
+        b.finish().unwrap()
+    }
+
+    #[test]
+    fn compiled_fusable_matches_model_fusable() {
+        let model = fitted();
+        let cm = CompiledModel::compile(&model);
+        let kinds = [
+            LayerKind::BatchNorm,
+            LayerKind::Activation { act: crate::graph::Act::Relu },
+            LayerKind::Add,
+            LayerKind::Softmax,
+            LayerKind::Conv { filters: 8, kernel: 3, stride: 1 },
+        ];
+        for class in [
+            LayerClass::Conv,
+            LayerClass::DwConv,
+            LayerClass::Pool,
+            LayerClass::Fc,
+            LayerClass::Elem,
+            LayerClass::Mem,
+        ] {
+            for kind in &kinds {
+                assert_eq!(
+                    cm.fusable(class, kind),
+                    model.fusable(class, kind),
+                    "fusable mismatch for {class:?} / {kind:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn compiled_units_partition_the_graph() {
+        let model = fitted();
+        let cm = CompiledModel::compile(&model);
+        let g = net();
+        let cg = CompiledGraph::compile(&cm, &g);
+        // Every costed layer is exactly one solo unit.
+        let costed = g
+            .layers
+            .iter()
+            .filter(|l| l.class() != LayerClass::None)
+            .count();
+        assert_eq!(cg.unit_count(ModelKind::Roofline), costed);
+        // Fused units plus their members cover all costed layers exactly once.
+        let mut covered = 0;
+        for ui in 0..cg.unit_count(ModelKind::Mixed) {
+            covered += 1 + cg.unit_members(ui).len();
+        }
+        assert_eq!(covered, costed);
+        // Totals are the sums of their unit views.
+        for kind in ModelKind::ALL {
+            let sum: f64 = cg.units(kind).map(|u| u.ms).sum();
+            assert!((sum - cg.total_ms(kind)).abs() < 1e-12);
+            assert!(cg.total_ms(kind) > 0.0);
+        }
+    }
+
+    #[test]
+    fn cache_hits_return_the_same_compilation() {
+        let model = fitted();
+        let cm = CompiledModel::compile(&model);
+        let cache = GraphCache::new();
+        let g = net();
+        let a = cache.get_or_compile(&cm, &g);
+        let b = cache.get_or_compile(&cm, &g);
+        assert!(Arc::ptr_eq(&a, &b), "second lookup must hit the cache");
+        assert_eq!(cache.len(), 1);
+        // A structurally different graph compiles separately.
+        let mut b2 = GraphBuilder::new("cg2");
+        let i = b2.input(32, 32, 8);
+        let x = b2.conv_bn_relu(i, 16, 3, 1);
+        b2.classifier(x, 10);
+        let g2 = b2.finish().unwrap();
+        let c = cache.get_or_compile(&cm, &g2);
+        assert_eq!(cache.len(), 2);
+        assert_ne!(c.fingerprint, a.fingerprint);
+    }
+
+    #[test]
+    fn cache_never_serves_a_different_models_compilation() {
+        let model = fitted();
+        // Two separate compilations of even the same platform model carry
+        // distinct identities; a shared cache must recompile rather than
+        // hand model B a graph compiled under model A.
+        let cm_a = CompiledModel::compile(&model);
+        let cm_b = CompiledModel::compile(&model);
+        assert_ne!(cm_a.id(), cm_b.id());
+        // A clone shares identity (identical tables by construction).
+        assert_eq!(cm_a.clone().id(), cm_a.id());
+        let cache = GraphCache::new();
+        let g = net();
+        let a = cache.get_or_compile(&cm_a, &g);
+        let b = cache.get_or_compile(&cm_b, &g);
+        assert!(!Arc::ptr_eq(&a, &b), "model B must not be served model A's entry");
+        assert_eq!(b.model_id, cm_b.id());
+        // Same totals here (same source model), but via a fresh compilation.
+        assert_eq!(
+            a.total_ms(ModelKind::Mixed).to_bits(),
+            b.total_ms(ModelKind::Mixed).to_bits()
+        );
+    }
+}

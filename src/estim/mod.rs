@@ -1,8 +1,10 @@
-//! The estimation phase: native per-network estimator and the batched
-//! artifact-backed path.
+//! The estimation phase: the compiled throughput-first engine, the native
+//! per-network estimator, and the batched artifact-backed path.
 
 pub mod batch;
+pub mod compiled;
 pub mod estimator;
 
 pub use batch::BatchEstimator;
+pub use compiled::{CompiledGraph, CompiledModel, GraphCache, UnitView};
 pub use estimator::{Estimate, Estimator, UnitEstimate};

@@ -125,7 +125,20 @@ impl LayerKind {
             _ => None,
         }
     }
+
+    /// Dense index of [`Self::fusion_key`] (0 = batchnorm, 1 = act), used by
+    /// the compiled fusion table on the estimation hot path.
+    pub fn fusion_key_index(&self) -> Option<usize> {
+        match self {
+            LayerKind::BatchNorm => Some(0),
+            LayerKind::Activation { .. } => Some(1),
+            _ => None,
+        }
+    }
 }
+
+/// Number of distinct fusion keys [`LayerKind::fusion_key_index`] can return.
+pub const NUM_FUSION_KEYS: usize = 2;
 
 /// Modeling class a layer belongs to. Mapping and layer models are fitted per
 /// class, not per operator: all elementwise ops share one cost structure, and
@@ -166,7 +179,24 @@ impl LayerClass {
             LayerClass::None => usize::MAX,
         }
     }
+
+    /// Inverse of [`Self::as_str`]; `None` for unknown names.
+    pub fn parse(s: &str) -> Option<LayerClass> {
+        match s {
+            "conv" => Some(LayerClass::Conv),
+            "dwconv" => Some(LayerClass::DwConv),
+            "pool" => Some(LayerClass::Pool),
+            "fc" => Some(LayerClass::Fc),
+            "elem" => Some(LayerClass::Elem),
+            "mem" => Some(LayerClass::Mem),
+            "none" => Some(LayerClass::None),
+            _ => None,
+        }
+    }
 }
+
+/// Number of costed layer classes ([`LayerClass::index`] range, None excluded).
+pub const NUM_CLASSES: usize = 6;
 
 /// One IR node.
 #[derive(Clone, Debug, PartialEq)]
@@ -263,6 +293,41 @@ pub struct Graph {
     pub layers: Vec<Layer>,
 }
 
+/// One FNV-1a64 absorption step over a byte slice.
+#[inline]
+fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// One 64-bit word absorption step (xor–multiply–rotate, FxHash-flavored):
+/// an order of magnitude cheaper than byte-wise FNV for numeric fields,
+/// which keeps the per-estimate fingerprint pass off the critical path.
+#[inline]
+fn mix(h: u64, v: u64) -> u64 {
+    (h ^ v).wrapping_mul(0x9e37_79b9_7f4a_7c15).rotate_left(26)
+}
+
+/// Per-process fingerprint seeds, drawn once from the standard library's
+/// randomized hasher state. An adversary feeding graphs to a long-running
+/// service cannot engineer fingerprint collisions offline because the seeds
+/// differ on every process start.
+fn process_seeds() -> (u64, u64) {
+    use std::hash::{BuildHasher, Hasher};
+    static SEEDS: std::sync::OnceLock<(u64, u64)> = std::sync::OnceLock::new();
+    *SEEDS.get_or_init(|| {
+        let rs = std::collections::hash_map::RandomState::new();
+        let mut h1 = rs.build_hasher();
+        h1.write_u64(0x416e_6e65_7474_6531);
+        let mut h2 = rs.build_hasher();
+        h2.write_u64(0x416e_6e65_7474_6532);
+        (h1.finish(), h2.finish())
+    })
+}
+
 impl Graph {
     /// Number of layers (including inputs).
     pub fn len(&self) -> usize {
@@ -271,6 +336,64 @@ impl Graph {
 
     pub fn is_empty(&self) -> bool {
         self.layers.is_empty()
+    }
+
+    /// Seeded structural hash over everything that influences an estimate's
+    /// *numbers*: the graph name, operator kinds and parameters, wiring, and
+    /// shapes. Layer names are deliberately excluded — no model feature
+    /// depends on them, and consumers of a cached compilation read unit
+    /// names from the live graph, so structurally identical graphs with
+    /// different layer labels correctly share one compilation. O(n), no
+    /// allocation — cheap enough to run per estimation request.
+    pub fn structural_hash(&self, seed: u64) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64 ^ seed.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+        h = fnv1a(h, self.name.as_bytes());
+        h = mix(h, self.layers.len() as u64);
+        for lay in &self.layers {
+            let (tag, p0, p1, p2): (u64, usize, usize, usize) = match lay.kind {
+                LayerKind::Input => (0, 0, 0, 0),
+                LayerKind::Conv { filters, kernel, stride } => (1, filters, kernel, stride),
+                LayerKind::DwConv { kernel, stride } => (2, kernel, stride, 0),
+                LayerKind::Pool { op, kernel, stride } => {
+                    let op = match op {
+                        PoolOp::Max => 0,
+                        PoolOp::Avg => 1,
+                    };
+                    (3, kernel, stride, op)
+                }
+                LayerKind::GlobalPool => (4, 0, 0, 0),
+                LayerKind::Fc { units } => (5, units, 0, 0),
+                LayerKind::Add => (6, 0, 0, 0),
+                LayerKind::Concat => (7, 0, 0, 0),
+                LayerKind::Activation { act } => (8, act as usize, 0, 0),
+                LayerKind::BatchNorm => (9, 0, 0, 0),
+                LayerKind::Softmax => (10, 0, 0, 0),
+                LayerKind::Flatten => (11, 0, 0, 0),
+            };
+            h = mix(h, tag);
+            h = mix(h, p0 as u64);
+            h = mix(h, p1 as u64);
+            h = mix(h, p2 as u64);
+            h = mix(h, ((lay.inp.h as u64) << 42) ^ ((lay.inp.w as u64) << 21) ^ lay.inp.c as u64);
+            h = mix(h, ((lay.out.h as u64) << 42) ^ ((lay.out.w as u64) << 21) ^ lay.out.c as u64);
+            h = mix(h, lay.inputs.len() as u64);
+            for &src in &lay.inputs {
+                h = mix(h, src as u64);
+            }
+        }
+        // Final avalanche so the rotate-mixer's last word still diffuses.
+        h = mix(h, 0x2545_f491_4f6c_dd1d);
+        h ^ (h >> 31)
+    }
+
+    /// 128-bit structural fingerprint (two independently seeded hashes) used
+    /// to key compiled-graph caches. The mixer is fast, not cryptographic;
+    /// the seeds are drawn per process (from `RandomState`) so untrusted
+    /// service input cannot precompute colliding graph pairs offline.
+    /// Fingerprints are stable within a process, not across processes.
+    pub fn fingerprint(&self) -> (u64, u64) {
+        let (s1, s2) = process_seeds();
+        (self.structural_hash(s1), self.structural_hash(s2))
     }
 
     /// Structural validation: ids dense and topological, shapes consistent.
@@ -535,6 +658,30 @@ mod tests {
         let mut g = small_graph();
         g.layers[1].id = 5;
         assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn fingerprint_tracks_structure() {
+        let g = small_graph();
+        assert_eq!(g.fingerprint(), small_graph().fingerprint());
+        // Any structural edit moves the fingerprint.
+        let mut renamed = small_graph();
+        renamed.name = "other".to_string();
+        assert_ne!(g.fingerprint(), renamed.fingerprint());
+        // Layer labels are NOT structure: estimates never depend on them, so
+        // relabeled-but-identical graphs share a compilation cache slot.
+        let mut relabeled = small_graph();
+        relabeled.layers[1].name = "some_other_label".to_string();
+        assert_eq!(g.fingerprint(), relabeled.fingerprint());
+        let mut reshaped = small_graph();
+        reshaped.layers[0].inp = Shape::new(16, 8, 3);
+        reshaped.layers[0].out = Shape::new(16, 8, 3);
+        assert_ne!(g.fingerprint(), reshaped.fingerprint());
+        let mut rekinded = small_graph();
+        rekinded.layers[3].kind = LayerKind::BatchNorm;
+        assert_ne!(g.fingerprint(), rekinded.fingerprint());
+        // The two lanes are independent.
+        assert_ne!(g.structural_hash(0), g.structural_hash(0x5bd1_e995));
     }
 
     #[test]

@@ -6,6 +6,7 @@
 //! benchmark data, platform models, service requests).
 
 use std::fmt;
+use std::fmt::Write as _;
 
 use crate::error::{Error, Result};
 
@@ -132,6 +133,35 @@ impl Value {
     pub fn int(n: usize) -> Value {
         Value::Num(n as f64)
     }
+
+    /// Serialize into an existing buffer (appends, never clears). Response
+    /// builders reuse one `String` across calls instead of allocating per
+    /// document.
+    pub fn write_into(&self, out: &mut String) {
+        write_value(out, self);
+    }
+}
+
+/// Write `s` as a quoted, escaped JSON string literal into `out`.
+pub fn write_json_str(out: &mut String, s: &str) {
+    out.push('"');
+    escape_into(out, s);
+    out.push('"');
+}
+
+/// Write a number exactly as the serializer does (non-finite becomes
+/// `null`), with no intermediate allocation.
+pub fn write_json_f64(out: &mut String, n: f64) {
+    if n.is_finite() {
+        let _ = write!(out, "{n}");
+    } else {
+        out.push_str("null");
+    }
+}
+
+/// Write a non-negative integer into `out` with no intermediate allocation.
+pub fn write_json_usize(out: &mut String, n: usize) {
+    let _ = write!(out, "{n}");
 }
 
 /// Maximum container nesting. The parser is recursive-descent and documents
@@ -366,7 +396,7 @@ fn escape_into(out: &mut String, s: &str) {
             '\r' => out.push_str("\\r"),
             '\t' => out.push_str("\\t"),
             c if (c as u32) < 0x20 => {
-                out.push_str(&format!("\\u{:04x}", c as u32));
+                let _ = write!(out, "\\u{:04x}", c as u32);
             }
             c => out.push(c),
         }
@@ -378,13 +408,7 @@ fn write_value(out: &mut String, v: &Value) {
         Value::Null => out.push_str("null"),
         Value::Bool(true) => out.push_str("true"),
         Value::Bool(false) => out.push_str("false"),
-        Value::Num(n) => {
-            if n.is_finite() {
-                out.push_str(&format!("{n}"));
-            } else {
-                out.push_str("null");
-            }
-        }
+        Value::Num(n) => write_json_f64(out, *n),
         Value::Str(s) => {
             out.push('"');
             escape_into(out, s);
@@ -418,7 +442,9 @@ fn write_value(out: &mut String, v: &Value) {
 
 impl fmt::Display for Value {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        let mut out = String::new();
+        // Preallocate: scalar documents fit the initial chunk, containers
+        // grow geometrically instead of byte by byte.
+        let mut out = String::with_capacity(64);
         write_value(&mut out, self);
         f.write_str(&out)
     }
@@ -478,5 +504,30 @@ mod tests {
     fn integers_serialize_without_fraction() {
         assert_eq!(Value::int(42).to_string(), "42");
         assert_eq!(Value::num(1.25).to_string(), "1.25");
+    }
+
+    #[test]
+    fn streaming_writers_match_the_serializer() {
+        let mut out = String::new();
+        write_json_str(&mut out, "a\"b\n\u{1}");
+        out.push(':');
+        write_json_f64(&mut out, 2.5);
+        out.push(':');
+        write_json_f64(&mut out, f64::INFINITY);
+        out.push(':');
+        write_json_usize(&mut out, 17);
+        assert_eq!(out, "\"a\\\"b\\n\\u0001\":2.5:null:17");
+        // write_into appends without clearing.
+        let mut buf = String::from("x");
+        Value::int(3).write_into(&mut buf);
+        assert_eq!(buf, "x3");
+        assert_eq!(
+            Value::str("a\"b").to_string(),
+            {
+                let mut s = String::new();
+                write_json_str(&mut s, "a\"b");
+                s
+            }
+        );
     }
 }

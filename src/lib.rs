@@ -15,10 +15,18 @@
 //! 2. **Estimation phase** — [`estim::Estimator`] predicts layer-wise
 //!    latency for a network description [`graph::Graph`] without compiling
 //!    or executing it, reconstructing the execution-unit graph from the
-//!    learned fusion rules.
+//!    learned fusion rules. The estimator runs on a compiled hot path
+//!    ([`estim::CompiledModel`] / [`estim::CompiledGraph`]): platform models
+//!    flatten to index-addressed coefficient tables at construction, graphs
+//!    compile once into struct-of-arrays feature form cached by structural
+//!    fingerprint, and repeated estimates are allocation-free. The
+//!    [`coordinator::Service`] batch layer fans request lines across worker
+//!    threads with deterministic, input-ordered output.
 //!
 //! The crate is dependency-free by design (hand-rolled JSON in [`json`]) so
-//! it builds in hermetic environments.
+//! it builds in hermetic environments. `make bench` runs the std-only
+//! benchmark harness (`benches/estimator_bench.rs`) and records the perf
+//! trajectory in `BENCH_estimator.json`.
 
 pub mod coordinator;
 pub mod error;
@@ -28,6 +36,7 @@ pub mod hw;
 pub mod json;
 pub mod metrics;
 pub mod models;
+pub mod par;
 pub mod repro;
 pub mod rng;
 pub mod zoo;
@@ -39,6 +48,8 @@ pub mod prelude {
     pub use crate::coordinator::orchestrator::{default_threads, run_campaign, BenchData};
     pub use crate::coordinator::Service;
     pub use crate::error::{Error, Result};
+    pub use crate::estim::batch::BatchEstimator;
+    pub use crate::estim::compiled::{CompiledGraph, CompiledModel, GraphCache};
     pub use crate::estim::estimator::{Estimate, Estimator};
     pub use crate::graph::{Graph, GraphBuilder, Layer, LayerClass, LayerKind, Shape};
     pub use crate::hw::device::{Device, DeviceSpec, Profile};
@@ -47,4 +58,5 @@ pub mod prelude {
     pub use crate::metrics::{mae, mape, spearman_rho};
     pub use crate::models::layer::ModelKind;
     pub use crate::models::platform::PlatformModel;
+    pub use crate::par::fan_indexed;
 }

@@ -35,6 +35,23 @@ impl ModelKind {
         }
     }
 
+    /// Dense index (matches [`Self::ALL`] order) for per-kind tables on the
+    /// compiled estimation hot path.
+    pub fn index(&self) -> usize {
+        match self {
+            ModelKind::Roofline => 0,
+            ModelKind::RefinedRoofline => 1,
+            ModelKind::Statistical => 2,
+            ModelKind::Mixed => 3,
+        }
+    }
+
+    /// Whether this family reconstructs fusion with the learned mapping model
+    /// (the analytical baselines cost every layer as its own unit).
+    pub fn uses_fusion(&self) -> bool {
+        matches!(self, ModelKind::Statistical | ModelKind::Mixed)
+    }
+
     pub fn parse(s: &str) -> Option<ModelKind> {
         match s {
             "roofline" => Some(ModelKind::Roofline),
@@ -57,5 +74,14 @@ mod tests {
         }
         assert_eq!(ModelKind::parse("refined"), Some(ModelKind::RefinedRoofline));
         assert_eq!(ModelKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn index_matches_all_order() {
+        for (i, kind) in ModelKind::ALL.iter().enumerate() {
+            assert_eq!(kind.index(), i);
+        }
+        assert!(!ModelKind::Roofline.uses_fusion());
+        assert!(ModelKind::Mixed.uses_fusion());
     }
 }

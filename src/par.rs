@@ -1,0 +1,90 @@
+//! Minimal std-only parallel fan-out used by the batch layers.
+//!
+//! One pattern, one implementation: N independent work items addressed by
+//! index, pulled by worker threads from a shared counter (good load balance
+//! for items of uneven cost), with results scattered back to their input
+//! index. Output order — and therefore output bytes — is identical to a
+//! sequential run regardless of thread scheduling.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Evaluate `f(0..n)` across up to `threads` worker threads and return the
+/// results in input order. `threads <= 1` (or `n <= 1`) runs sequentially on
+/// the calling thread. Panics in `f` propagate.
+pub fn fan_indexed<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.clamp(1, n);
+    if threads == 1 {
+        return (0..n).map(f).collect();
+    }
+    let counter = AtomicUsize::new(0);
+    let parts: Vec<Vec<(usize, T)>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                s.spawn(|| {
+                    let mut part = Vec::new();
+                    loop {
+                        let i = counter.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        part.push((i, f(i)));
+                    }
+                    part
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("fan_indexed worker panicked"))
+            .collect()
+    });
+    let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    for part in parts {
+        for (i, v) in part {
+            slots[i] = Some(v);
+        }
+    }
+    slots
+        .into_iter()
+        .map(|v| v.expect("every index is produced exactly once"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_are_input_ordered_for_any_thread_count() {
+        let expect: Vec<usize> = (0..97).map(|i| i * i).collect();
+        for threads in [0, 1, 2, 3, 8, 200] {
+            assert_eq!(fan_indexed(97, threads, |i| i * i), expect);
+        }
+        assert!(fan_indexed(0, 4, |i| i).is_empty());
+        assert_eq!(fan_indexed(1, 4, |i| i + 7), vec![7]);
+    }
+
+    #[test]
+    fn uneven_work_still_lands_in_order() {
+        // Make late indices cheap and early ones expensive so workers finish
+        // out of submission order.
+        let out = fan_indexed(64, 4, |i| {
+            let spins = (64 - i) * 1000;
+            let mut acc = i as u64;
+            for k in 0..spins {
+                acc = acc.wrapping_mul(31).wrapping_add(k as u64);
+            }
+            (i, acc)
+        });
+        for (i, (j, _)) in out.iter().enumerate() {
+            assert_eq!(i, *j);
+        }
+    }
+}

@@ -1,0 +1,122 @@
+//! The compiled estimation engine must be an *exact* drop-in for the
+//! pre-compilation reference path: same totals (to 1e-9 ms and in fact to
+//! the bit), same units, same fused member lists — across both simulated
+//! devices, all four model families, the 12-network zoo, and a NASBench
+//! sample.
+
+use annette::coordinator::orchestrator::run_campaign;
+use annette::estim::estimator::Estimator;
+use annette::graph::Graph;
+use annette::hw::device::Device;
+use annette::hw::dpu::DpuDevice;
+use annette::hw::vpu::VpuDevice;
+use annette::models::layer::ModelKind;
+use annette::models::platform::PlatformModel;
+use annette::zoo;
+
+fn check_equivalence(model: &PlatformModel, nets: &[Graph]) {
+    let est = Estimator::new(model);
+    for g in nets {
+        for kind in ModelKind::ALL {
+            let fast = est.estimate_with(g, kind);
+            let slow = est.estimate_uncompiled_with(g, kind);
+            assert!(
+                (fast.total_ms() - slow.total_ms()).abs() < 1e-9,
+                "{} / {kind:?}: compiled {} vs reference {}",
+                g.name,
+                fast.total_ms(),
+                slow.total_ms()
+            );
+            assert_eq!(
+                fast.units.len(),
+                slow.units.len(),
+                "{} / {kind:?}: unit count mismatch",
+                g.name
+            );
+            for (a, b) in fast.units.iter().zip(&slow.units) {
+                assert_eq!(a.root, b.root, "{} / {kind:?}: root mismatch", g.name);
+                assert_eq!(a.name, b.name);
+                assert_eq!(a.class, b.class);
+                assert_eq!(a.members, b.members, "{} / {kind:?}: members", g.name);
+                assert_eq!(
+                    a.ms.to_bits(),
+                    b.ms.to_bits(),
+                    "{} / {kind:?} unit {}: compiled us diverged",
+                    g.name,
+                    a.root
+                );
+                assert_eq!(a.flops.to_bits(), b.flops.to_bits());
+            }
+            // The total-only fast path agrees with the full breakdown.
+            assert_eq!(
+                est.total_ms(g, kind).to_bits(),
+                fast.total_ms().to_bits(),
+                "{} / {kind:?}: fast path diverged",
+                g.name
+            );
+        }
+    }
+}
+
+#[test]
+fn compiled_path_is_bit_exact_on_dpu() {
+    let dev = DpuDevice::zcu102();
+    let data = run_campaign(&dev, 2, 4);
+    let model = PlatformModel::fit(&dev.spec(), &data);
+    let mut nets: Vec<Graph> = zoo::table2().into_iter().map(|e| e.graph).collect();
+    nets.extend(zoo::nasbench::sample_networks(40, 2024));
+    check_equivalence(&model, &nets);
+}
+
+#[test]
+fn compiled_path_is_bit_exact_on_vpu() {
+    let dev = VpuDevice::ncs2();
+    let data = run_campaign(&dev, 2, 4);
+    let model = PlatformModel::fit(&dev.spec(), &data);
+    let nets = zoo::nasbench::sample_networks(24, 7);
+    check_equivalence(&model, &nets);
+}
+
+#[test]
+fn relabeled_graphs_share_compilation_but_keep_their_names() {
+    // Layer labels are excluded from the structural fingerprint; a relabeled
+    // copy must hit the same cache slot yet report its own unit names.
+    let dev = DpuDevice::zcu102();
+    let data = run_campaign(&dev, 1, 4);
+    let model = PlatformModel::fit(&dev.spec(), &data);
+    let est = Estimator::new(&model);
+    let g = zoo::nasbench::sample_network(0, 2024);
+    let mut relabeled = g.clone();
+    for lay in &mut relabeled.layers {
+        lay.name = format!("renamed_{}", lay.id);
+    }
+    assert_eq!(g.fingerprint(), relabeled.fingerprint());
+    let a = est.estimate(&g);
+    let b = est.estimate(&relabeled);
+    assert_eq!(a.total_ms().to_bits(), b.total_ms().to_bits());
+    for (ua, ub) in a.units.iter().zip(&b.units) {
+        assert_eq!(ua.root, ub.root);
+        assert_eq!(ub.name, format!("renamed_{}", ub.root), "names come from the live graph");
+        assert_eq!(ua.members, ub.members);
+    }
+}
+
+#[test]
+fn cache_survives_interleaved_distinct_graphs() {
+    // Alternating estimates over many distinct graphs must keep returning
+    // the right compilation for each (fingerprint keying, not last-seen).
+    let dev = DpuDevice::zcu102();
+    let data = run_campaign(&dev, 1, 4);
+    let model = PlatformModel::fit(&dev.spec(), &data);
+    let est = Estimator::new(&model);
+    let nets = zoo::nasbench::sample_networks(16, 11);
+    let first: Vec<f64> = nets
+        .iter()
+        .map(|g| est.total_ms(g, ModelKind::Mixed))
+        .collect();
+    for _ in 0..3 {
+        for (g, &expect) in nets.iter().zip(&first).rev() {
+            assert_eq!(est.total_ms(g, ModelKind::Mixed).to_bits(), expect.to_bits());
+        }
+    }
+}

@@ -1,0 +1,104 @@
+//! The parallel batch service must be invisible except for speed: results
+//! under N worker threads are byte-identical to the single-threaded run, in
+//! input order, and an in-band error on one line never poisons neighbors.
+
+use annette::coordinator::orchestrator::run_campaign;
+use annette::coordinator::Service;
+use annette::graph::serial::graph_to_value;
+use annette::hw::device::Device;
+use annette::hw::dpu::DpuDevice;
+use annette::json::Value;
+use annette::models::platform::PlatformModel;
+use annette::zoo;
+
+fn service() -> Service {
+    let dev = DpuDevice::zcu102();
+    let data = run_campaign(&dev, 1, 4);
+    Service::new(PlatformModel::fit(&dev.spec(), &data))
+}
+
+fn request_batch() -> (String, usize) {
+    let nets = zoo::nasbench::sample_networks(12, 3);
+    let mut input = String::new();
+    let mut count = 0;
+    for (i, g) in nets.iter().enumerate() {
+        // Interleave malformed lines between valid requests.
+        if i % 4 == 1 {
+            input.push_str("this is not json\n");
+            count += 1;
+        }
+        if i % 4 == 3 {
+            input.push_str("{\"op\":\"teleport\"}\n");
+            count += 1;
+        }
+        input.push_str(&format!(
+            "{{\"op\":\"estimate\",\"kind\":\"mixed\",\"network\":{}}}\n",
+            graph_to_value(g)
+        ));
+        count += 1;
+    }
+    (input, count)
+}
+
+#[test]
+fn parallel_output_is_byte_identical_and_ordered() {
+    let svc = service();
+    let (input, count) = request_batch();
+    let serial_run = svc.serve_lines(&input, 1);
+    assert_eq!(serial_run.len(), count);
+    for threads in [2, 3, 4, 8] {
+        let par = svc.serve_lines(&input, threads);
+        assert_eq!(par.len(), count, "{threads} threads: line count");
+        for (i, (a, b)) in serial_run.iter().zip(&par).enumerate() {
+            assert_eq!(a, b, "{threads} threads: line {i} diverged");
+        }
+    }
+    // Thread counts beyond the line count and zero both behave.
+    assert_eq!(svc.serve_lines(&input, 1000), serial_run);
+    assert_eq!(svc.serve_lines(&input, 0), serial_run);
+    assert!(svc.serve_lines("", 4).is_empty());
+}
+
+#[test]
+fn bad_lines_fail_in_band_without_poisoning_neighbors() {
+    let svc = service();
+    let (input, _) = request_batch();
+    let out = svc.serve_lines(&input, 4);
+    let lines: Vec<&str> = input.lines().collect();
+    let mut ok_seen = 0;
+    let mut err_seen = 0;
+    for (line, resp) in lines.iter().zip(&out) {
+        let v = Value::parse(resp).expect("every response line is valid JSON");
+        let ok = v.get("ok").and_then(|x| x.as_bool()).unwrap();
+        if line.starts_with("{\"op\":\"estimate\"") {
+            assert!(ok, "valid request failed: {resp}");
+            assert!(v.req_f64("total_ms").unwrap() > 0.0);
+            ok_seen += 1;
+        } else {
+            assert!(!ok, "bad request must fail in-band: {resp}");
+            assert!(v.get("error").is_some());
+            err_seen += 1;
+        }
+    }
+    assert_eq!(ok_seen, 12);
+    assert!(err_seen >= 5);
+}
+
+#[test]
+fn repeated_graphs_hit_the_compiled_cache_consistently() {
+    // The same graph sent many times (the zoo-serving scenario) must return
+    // the identical response line every time, across thread counts.
+    let svc = service();
+    let g = zoo::mobilenet::mobilenet_v1(224, 1000);
+    let req = format!(
+        "{{\"op\":\"estimate\",\"kind\":\"mixed\",\"total_only\":true,\"network\":{}}}",
+        graph_to_value(&g)
+    );
+    let input = vec![req.as_str(); 16].join("\n");
+    let out = svc.serve_lines(&input, 4);
+    assert_eq!(out.len(), 16);
+    for resp in &out[1..] {
+        assert_eq!(resp, &out[0]);
+    }
+    assert!(out[0].contains("\"ok\":true"));
+}
