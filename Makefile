@@ -1,6 +1,6 @@
 # Convenience targets for the annette reproduction.
 
-.PHONY: build test examples bench bench-smoke artifacts clean
+.PHONY: build test examples fleet-demo prop-extended bench bench-smoke artifacts clean
 
 build:
 	cargo build --release
@@ -15,6 +15,19 @@ examples: build
 	cargo run --release --example estimate_zoo
 	cargo run --release --example serve_demo
 	cargo run --release --example nas_search
+	cargo run --release --example fleet_compare
+
+# Fit the whole device fleet, print the 12-network x 3-device latency
+# matrix with best-device placement, and demo the fleet service protocol.
+fleet-demo: build
+	cargo run --release --example fleet_compare
+
+# Long randomized property run (the nightly CI job). Tier-1 always runs the
+# 200-graph fixed-seed pass via `cargo test`.
+prop-extended:
+	ANNETTE_PROP_GRAPHS=$${ANNETTE_PROP_GRAPHS:-2000} \
+	ANNETTE_PROP_SEED=$${ANNETTE_PROP_SEED:-$$(date +%s)} \
+	cargo test --release --test property_suite -- --nocapture
 
 # Estimation-engine throughput/latency benchmark (std-only, no criterion).
 # Writes BENCH_estimator.json at the repo root: baseline vs compiled

@@ -1,6 +1,6 @@
-//! Estimate all 12 Test-set-1 networks (paper Table 2) on both simulated
-//! devices with all four model families — the data behind Figs. 10/11 and
-//! Table 5.
+//! Estimate all 12 Test-set-1 networks (paper Table 2) on every registered
+//! simulated device with all four model families — the data behind
+//! Figs. 10/11 and Table 5, extended to the whole registry.
 //!
 //! ```sh
 //! cargo run --release --example estimate_zoo
@@ -8,22 +8,23 @@
 
 use annette::estim::estimator::Estimator;
 use annette::hw::device::Device;
+use annette::hw::registry;
 use annette::metrics::{mae, mape};
 use annette::models::layer::ModelKind;
-use annette::repro::campaign::{fit_device, DeviceChoice};
+use annette::repro::campaign::fit_device;
 use annette::zoo;
 
 fn main() {
     let out = std::path::Path::new("out");
-    for choice in [DeviceChoice::Dpu, DeviceChoice::Vpu] {
-        let fitted = fit_device(choice, 5, Some(out)).expect("campaign");
+    for entry in registry::entries() {
+        let fitted = fit_device(entry.id, 5, Some(out)).expect("campaign");
         let est = Estimator::new(&fitted.model);
         let nets = zoo::table2();
         let truth: Vec<f64> = nets
             .iter()
             .map(|e| fitted.device.profile(&e.graph, 20, 7).total_ms())
             .collect();
-        println!("\n=== {} ===", choice.paper_name());
+        println!("\n=== {} ===", entry.paper_name);
         println!(
             "{:<14} {:>10} {:>10} {:>10} {:>10} {:>10}",
             "network", "measured", "roofline", "refined", "stat", "mixed"

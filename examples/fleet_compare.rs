@@ -1,0 +1,75 @@
+//! Fleet-wide estimation: fit a platform model for every registered device
+//! in parallel, print the 12-network × 3-device latency matrix with the
+//! predicted-best placement per network, and demo the fleet service
+//! protocol (`device` routing and `"fleet":true` requests).
+//!
+//! ```sh
+//! cargo run --release --example fleet_compare
+//! ```
+
+use std::time::Instant;
+
+use annette::fleet::Fleet;
+use annette::graph::serial::graph_to_value;
+use annette::graph::Graph;
+use annette::hw::registry;
+use annette::models::layer::ModelKind;
+use annette::zoo;
+
+fn main() {
+    println!("fitting the fleet ({} devices, in parallel) ...", registry::entries().len());
+    let t0 = Instant::now();
+    let fleet = Fleet::fit_all(3).expect("fleet campaign");
+    println!(
+        "fitted {} platform models in {:.1}s: {}",
+        fleet.len(),
+        t0.elapsed().as_secs_f64(),
+        fleet.ids().join(", ")
+    );
+
+    let entries = zoo::table2();
+    let nets: Vec<Graph> = entries.iter().map(|e| e.graph.clone()).collect();
+    let matrix = fleet.latency_matrix(&nets, ModelKind::Mixed, 4);
+
+    println!("\npredicted latency matrix (mixed model, ms):");
+    let mut header = format!("{:<16}", "network");
+    for id in fleet.ids() {
+        header.push_str(&format!(" {id:>12}"));
+    }
+    println!("{header} {:>12}", "best");
+    let mut wins = vec![0usize; fleet.len()];
+    for (e, row) in entries.iter().zip(&matrix) {
+        let best = fleet.best_device(&e.graph, ModelKind::Mixed);
+        let bi = fleet.ids().iter().position(|id| *id == best.device).unwrap();
+        wins[bi] += 1;
+        let mut line = format!("{:<16}", e.name);
+        for ms in row {
+            line.push_str(&format!(" {ms:>12.2}"));
+        }
+        println!("{line} {:>12}", best.device);
+    }
+    println!("\nplacement wins:");
+    for (id, w) in fleet.ids().iter().zip(&wins) {
+        println!("  {id:<12} {w:>2}/12");
+    }
+
+    // The same answers over the wire: one process serving the whole fleet.
+    let svc = fleet.to_service();
+    let g = &entries[7].graph; // mobilenet_v1
+    let single = format!(
+        r#"{{"op":"estimate","device":"tpu-edge","total_only":true,"network":{}}}"#,
+        graph_to_value(g)
+    );
+    let fleet_req = format!(
+        r#"{{"op":"estimate","fleet":true,"network":{}}}"#,
+        graph_to_value(g)
+    );
+    println!("\nfleet service demo ({}):", g.name);
+    for req in [r#"{"op":"models"}"#.to_string(), single, fleet_req] {
+        let preview: String = req.chars().take(64).collect();
+        println!("→ {preview}...");
+        let resp = svc.handle(&req);
+        let short: String = resp.chars().take(200).collect();
+        println!("← {short}");
+    }
+}

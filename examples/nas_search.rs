@@ -20,14 +20,14 @@ use annette::coordinator::orchestrator::default_threads;
 use annette::estim::batch::BatchEstimator;
 use annette::hw::device::Device;
 use annette::metrics::{mape, spearman_rho};
-use annette::repro::campaign::{fit_device, DeviceChoice};
+use annette::repro::campaign::fit_device;
 use annette::zoo::nasbench;
 
 const CANDIDATES: usize = 300;
 
 fn main() {
     let out = std::path::Path::new("out");
-    let fitted = fit_device(DeviceChoice::Vpu, 5, Some(out)).expect("campaign");
+    let fitted = fit_device("vpu-ncs2", 5, Some(out)).expect("campaign");
 
     println!("sampling {CANDIDATES} NASBench candidates ...");
     let nets = nasbench::sample_networks(CANDIDATES, 2024);

@@ -2,20 +2,28 @@
 //! estimation tool. One request per line in, one response per line out;
 //! errors are always in-band (`{"ok":false,"error":...}`), never panics.
 //!
+//! A service hosts one or more **targets** (device label + compiled
+//! platform model); a single process can answer for a whole device fleet.
+//!
 //! Request ops:
 //!
-//! * `{"op":"models"}` — list available model families and the device.
+//! * `{"op":"models"}` — list the served devices and model families.
 //! * `{"op":"estimate","network":<graph>,"kind":"mixed"}` — estimate a
 //!   network description graph; `kind` is optional and defaults to mixed.
-//!   Pass `"total_only":true` to skip the per-unit breakdown (the NAS
-//!   screening fast path).
+//!   Optional fields:
+//!   * `"device":"<label>"` — route to that target (default: the first).
+//!   * `"fleet":true` — answer with per-device totals for *every* target
+//!     plus the predicted-fastest one (mutually exclusive with `device`).
+//!   * `"total_only":true` — skip the per-unit breakdown (the NAS
+//!     screening fast path; implied by fleet mode).
 //!
-//! The service compiles its platform model **once** at construction
-//! ([`crate::estim::CompiledModel`]), caches compiled graphs by structural
-//! fingerprint, and serializes responses by streaming into a reusable
-//! `String` buffer with static keys — no `Value` tree, no per-key
-//! allocation. [`Service::serve_lines`] fans a batch of request lines
-//! across worker threads with deterministic, input-ordered output.
+//! The service compiles each platform model **once** at construction
+//! ([`crate::estim::CompiledModel`]), caches compiled graphs in one shared
+//! [`GraphCache`] keyed by (model id, structural fingerprint), and
+//! serializes responses by streaming into a reusable `String` buffer with
+//! static keys — no `Value` tree, no per-key allocation.
+//! [`Service::serve_lines`] fans a batch of request lines across worker
+//! threads with deterministic, input-ordered output.
 
 use crate::error::{Error, Result};
 use crate::estim::compiled::{CompiledModel, GraphCache};
@@ -25,28 +33,79 @@ use crate::models::layer::ModelKind;
 use crate::models::platform::PlatformModel;
 use crate::par::fan_indexed;
 
-/// A resident platform model answering estimation requests.
-pub struct Service {
+/// One served device: routing label plus the compiled platform model.
+struct Target {
+    label: String,
     model: PlatformModel,
     compiled: CompiledModel,
+}
+
+/// A resident set of platform models answering estimation requests.
+pub struct Service {
+    targets: Vec<Target>,
     cache: GraphCache,
 }
 
 impl Service {
-    /// Compile `model` once; every request thereafter reuses the flat
-    /// tables instead of rebuilding an estimator.
+    /// Serve a single platform model, labeled by its device name (or
+    /// `"default"` when a hand-built spec carries an empty name — a single
+    /// target must never make construction fall over). Every request
+    /// thereafter reuses the flat compiled tables instead of rebuilding an
+    /// estimator.
     pub fn new(model: PlatformModel) -> Self {
-        let compiled = CompiledModel::compile(&model);
-        Service {
-            model,
-            compiled,
-            cache: GraphCache::new(),
-        }
+        let label = if model.spec.name.is_empty() {
+            "default".to_string()
+        } else {
+            model.spec.name.clone()
+        };
+        Service::multi(vec![(label, model)])
+            .expect("a single non-empty label cannot be rejected")
     }
 
-    /// The platform model this service answers from.
+    /// Serve several platform models from one process — the fleet
+    /// deployment form. `targets` pairs each routing label (typically the
+    /// registry id) with its fitted model; the first entry is the default
+    /// device for requests that don't name one. Labels must be non-empty
+    /// and unique.
+    pub fn multi(targets: Vec<(String, PlatformModel)>) -> Result<Self> {
+        if targets.is_empty() {
+            return Err(Error::Invalid(
+                "a service needs at least one platform model".to_string(),
+            ));
+        }
+        for (i, (label, _)) in targets.iter().enumerate() {
+            if label.is_empty() {
+                return Err(Error::Invalid("empty device label".to_string()));
+            }
+            if targets[..i].iter().any(|(l, _)| l == label) {
+                return Err(Error::Invalid(format!("duplicate device label `{label}`")));
+            }
+        }
+        let targets = targets
+            .into_iter()
+            .map(|(label, model)| {
+                let compiled = CompiledModel::compile(&model);
+                Target {
+                    label,
+                    model,
+                    compiled,
+                }
+            })
+            .collect();
+        Ok(Service {
+            targets,
+            cache: GraphCache::new(),
+        })
+    }
+
+    /// The default (first) target's platform model.
     pub fn model(&self) -> &PlatformModel {
-        &self.model
+        &self.targets[0].model
+    }
+
+    /// Routing labels of every served device, in target order.
+    pub fn device_labels(&self) -> Vec<&str> {
+        self.targets.iter().map(|t| t.label.as_str()).collect()
     }
 
     /// Handle one request line; the response is always a single JSON line.
@@ -96,8 +155,15 @@ impl Service {
 
     fn write_models(&self, out: &mut String) {
         out.push_str("{\"ok\":true,\"device\":");
-        write_json_str(out, &self.model.spec.name);
-        out.push_str(",\"models\":[");
+        write_json_str(out, &self.targets[0].label);
+        out.push_str(",\"devices\":[");
+        for (i, t) in self.targets.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            write_json_str(out, &t.label);
+        }
+        out.push_str("],\"models\":[");
         for (i, kind) in ModelKind::ALL.iter().enumerate() {
             if i > 0 {
                 out.push(',');
@@ -105,6 +171,15 @@ impl Service {
             write_json_str(out, kind.as_str());
         }
         out.push_str("]}");
+    }
+
+    fn target(&self, label: &str) -> Result<&Target> {
+        self.targets.iter().find(|t| t.label == label).ok_or_else(|| {
+            Error::Invalid(format!(
+                "unknown device `{label}` (serving: {})",
+                self.device_labels().join(", ")
+            ))
+        })
     }
 
     fn estimate(&self, req: &Value, out: &mut String) -> Result<()> {
@@ -118,13 +193,35 @@ impl Service {
             }
             None => ModelKind::Mixed,
         };
+        let fleet = matches!(req.get("fleet"), Some(Value::Bool(true)));
+        let device = match req.get("device") {
+            Some(v) => Some(
+                v.as_str()
+                    .ok_or_else(|| Error::Invalid("`device` must be a string".to_string()))?,
+            ),
+            None => None,
+        };
+        if fleet && device.is_some() {
+            return Err(Error::Invalid(
+                "`fleet` answers for every device; drop the `device` field".to_string(),
+            ));
+        }
+        let target = match device {
+            Some(label) => self.target(label)?,
+            None => &self.targets[0],
+        };
         let network = req
             .get("network")
             .ok_or_else(|| Error::Invalid("`estimate` requires a `network` graph".to_string()))?;
         let graph = serial::graph_from_value(network)?;
+        if fleet {
+            return self.estimate_fleet(&graph, kind, out);
+        }
         let total_only = matches!(req.get("total_only"), Some(Value::Bool(true)));
-        let cg = self.cache.get_or_compile(&self.compiled, &graph);
-        out.push_str("{\"ok\":true,\"network\":");
+        let cg = self.cache.get_or_compile(&target.compiled, &graph);
+        out.push_str("{\"ok\":true,\"device\":");
+        write_json_str(out, &target.label);
+        out.push_str(",\"network\":");
         write_json_str(out, &graph.name);
         out.push_str(",\"kind\":");
         write_json_str(out, kind.as_str());
@@ -151,6 +248,47 @@ impl Service {
         out.push('}');
         Ok(())
     }
+
+    /// One answer for the whole fleet: per-device totals (target order) and
+    /// the predicted-fastest device (first wins ties — deterministic).
+    fn estimate_fleet(
+        &self,
+        graph: &crate::graph::Graph,
+        kind: ModelKind,
+        out: &mut String,
+    ) -> Result<()> {
+        out.push_str("{\"ok\":true,\"network\":");
+        write_json_str(out, &graph.name);
+        out.push_str(",\"kind\":");
+        write_json_str(out, kind.as_str());
+        out.push_str(",\"fleet\":[");
+        let mut best: Option<(usize, f64)> = None;
+        for (i, t) in self.targets.iter().enumerate() {
+            let total = self.cache.get_or_compile(&t.compiled, graph).total_ms(kind);
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str("{\"device\":");
+            write_json_str(out, &t.label);
+            out.push_str(",\"total_ms\":");
+            write_json_f64(out, total);
+            out.push('}');
+            let better = match best {
+                None => true,
+                Some((_, b)) => total < b,
+            };
+            if better {
+                best = Some((i, total));
+            }
+        }
+        let (bi, bms) = best.expect("a service always has targets");
+        out.push_str("],\"best\":{\"device\":");
+        write_json_str(out, &self.targets[bi].label);
+        out.push_str(",\"total_ms\":");
+        write_json_f64(out, bms);
+        out.push_str("}}");
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -161,11 +299,24 @@ mod tests {
     use crate::graph::GraphBuilder;
     use crate::hw::device::Device;
     use crate::hw::dpu::DpuDevice;
+    use crate::hw::registry;
 
     fn service() -> Service {
         let dev = DpuDevice::zcu102();
         let data = run_campaign(&dev, 1, 4);
         Service::new(PlatformModel::fit(&dev.spec(), &data))
+    }
+
+    fn fleet_service() -> Service {
+        let targets = registry::entries()
+            .iter()
+            .map(|entry| {
+                let dev = (entry.build)();
+                let data = run_campaign(dev.as_ref(), 1, 4);
+                (entry.id.to_string(), PlatformModel::fit(&dev.spec(), &data))
+            })
+            .collect();
+        Service::multi(targets).unwrap()
     }
 
     fn net_json() -> String {
@@ -182,6 +333,7 @@ mod tests {
         let resp = Value::parse(&svc.handle(r#"{"op":"models"}"#)).unwrap();
         assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(true));
         assert_eq!(resp.req_arr("models").unwrap().len(), 4);
+        assert_eq!(resp.req_arr("devices").unwrap().len(), 1);
     }
 
     #[test]
@@ -190,6 +342,7 @@ mod tests {
         let req = format!(r#"{{"op":"estimate","kind":"mixed","network":{}}}"#, net_json());
         let resp = Value::parse(&svc.handle(&req)).unwrap();
         assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(true));
+        assert_eq!(resp.req_str("device").unwrap(), "ZCU102-DPU-sim");
         assert!(resp.req_f64("total_ms").unwrap() > 0.0);
         assert!(!resp.req_arr("units").unwrap().is_empty());
         let unit = &resp.req_arr("units").unwrap()[0];
@@ -237,6 +390,7 @@ mod tests {
             r#"{"op":"estimate"}"#,
             r#"{"op":"teleport"}"#,
             r#"{"op":"estimate","kind":"warp","network":{}}"#,
+            r#"{"op":"estimate","device":42,"network":{}}"#,
         ] {
             let resp = Value::parse(&svc.handle(bad)).unwrap();
             assert_eq!(
@@ -246,5 +400,95 @@ mod tests {
             );
             assert!(resp.get("error").is_some());
         }
+    }
+
+    #[test]
+    fn device_field_routes_across_the_fleet() {
+        let svc = fleet_service();
+        let resp = Value::parse(&svc.handle(r#"{"op":"models"}"#)).unwrap();
+        assert_eq!(resp.req_arr("devices").unwrap().len(), 3);
+        assert_eq!(resp.req_str("device").unwrap(), "dpu-zcu102");
+        let mut totals = Vec::new();
+        for id in ["dpu-zcu102", "vpu-ncs2", "tpu-edge"] {
+            let req = format!(
+                r#"{{"op":"estimate","device":"{id}","total_only":true,"network":{}}}"#,
+                net_json()
+            );
+            let resp = Value::parse(&svc.handle(&req)).unwrap();
+            assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(true));
+            assert_eq!(resp.req_str("device").unwrap(), id);
+            totals.push(resp.req_f64("total_ms").unwrap());
+        }
+        // Three genuinely different devices → three different answers.
+        assert!(totals[0] != totals[1] && totals[1] != totals[2]);
+        // Unknown devices fail in-band and name the served fleet.
+        let bad = format!(
+            r#"{{"op":"estimate","device":"gpu-h100","network":{}}}"#,
+            net_json()
+        );
+        let resp = Value::parse(&svc.handle(&bad)).unwrap();
+        assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(false));
+        assert!(resp.req_str("error").unwrap().contains("tpu-edge"));
+    }
+
+    #[test]
+    fn fleet_mode_answers_for_every_device_at_once() {
+        let svc = fleet_service();
+        let req = format!(
+            r#"{{"op":"estimate","fleet":true,"kind":"mixed","network":{}}}"#,
+            net_json()
+        );
+        let resp = Value::parse(&svc.handle(&req)).unwrap();
+        assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(true));
+        let per_dev = resp.req_arr("fleet").unwrap();
+        assert_eq!(per_dev.len(), 3);
+        // Fleet entries agree with individually routed requests, bit for bit.
+        for entry in per_dev {
+            let id = entry.req_str("device").unwrap();
+            let single = format!(
+                r#"{{"op":"estimate","device":"{id}","total_only":true,"network":{}}}"#,
+                net_json()
+            );
+            let sresp = Value::parse(&svc.handle(&single)).unwrap();
+            assert_eq!(
+                entry.req_f64("total_ms").unwrap().to_bits(),
+                sresp.req_f64("total_ms").unwrap().to_bits(),
+                "fleet and single-device answers diverged for {id}"
+            );
+        }
+        // `best` is the argmin of the fleet array.
+        let best = resp.req("best").unwrap();
+        let min = per_dev
+            .iter()
+            .map(|e| e.req_f64("total_ms").unwrap())
+            .fold(f64::INFINITY, f64::min);
+        assert_eq!(best.req_f64("total_ms").unwrap().to_bits(), min.to_bits());
+        // fleet + device together is a request error.
+        let conflicted = format!(
+            r#"{{"op":"estimate","fleet":true,"device":"dpu-zcu102","network":{}}}"#,
+            net_json()
+        );
+        let resp = Value::parse(&svc.handle(&conflicted)).unwrap();
+        assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(false));
+    }
+
+    #[test]
+    fn multi_rejects_bad_target_sets() {
+        let dev = DpuDevice::zcu102();
+        let data = run_campaign(&dev, 1, 4);
+        let model = PlatformModel::fit(&dev.spec(), &data);
+        assert!(Service::multi(vec![]).is_err());
+        assert!(Service::multi(vec![(String::new(), model.clone())]).is_err());
+        assert!(Service::multi(vec![
+            ("a".to_string(), model.clone()),
+            ("a".to_string(), model.clone()),
+        ])
+        .is_err());
+        // `new` must never panic, even on a hand-built spec with no name:
+        // the label falls back to "default".
+        let mut anon = model;
+        anon.spec.name = String::new();
+        let svc = Service::new(anon);
+        assert_eq!(svc.device_labels(), vec!["default"]);
     }
 }

@@ -377,10 +377,14 @@ impl CompiledGraph {
 /// so a service fed unbounded distinct graphs cannot grow without limit.
 pub const GRAPH_CACHE_CAP: usize = 4096;
 
-/// Fingerprint-keyed cache of compiled graphs, shared across threads.
+/// Cache of compiled graphs, shared across threads, keyed by **compiled
+/// model id + structural fingerprint**. The per-model keying means one
+/// cache can sit behind a whole fleet of devices: the same network compiled
+/// under N models occupies N entries instead of ping-ponging through a
+/// single slot, and an entry can never be served to the wrong model.
 #[derive(Debug, Default)]
 pub struct GraphCache {
-    map: Mutex<HashMap<(u64, u64), Arc<CompiledGraph>>>,
+    map: Mutex<HashMap<(u64, u64, u64), Arc<CompiledGraph>>>,
 }
 
 impl GraphCache {
@@ -388,7 +392,7 @@ impl GraphCache {
         GraphCache::default()
     }
 
-    /// Number of cached graphs.
+    /// Number of cached (model, graph) compilations.
     pub fn len(&self) -> usize {
         self.map.lock().expect("graph cache poisoned").len()
     }
@@ -397,13 +401,14 @@ impl GraphCache {
         self.len() == 0
     }
 
-    /// Return the compiled form of `g`, compiling on first sight. A cache
-    /// hit costs one O(n) fingerprint pass plus a map lookup and performs no
-    /// allocation. An entry compiled under a *different* model is never
-    /// served (the model id is checked), so one cache accidentally shared
-    /// across devices degrades to recompiling instead of answering wrong.
+    /// Return the compiled form of `g` under `model`, compiling on first
+    /// sight. A cache hit costs one O(n) fingerprint pass plus a map lookup
+    /// and performs no allocation. The model id is part of the key, so a
+    /// cache shared across devices (the fleet service) keeps one entry per
+    /// (model, graph) pair and never answers from another model's tables.
     pub fn get_or_compile(&self, model: &CompiledModel, g: &Graph) -> Arc<CompiledGraph> {
-        let key = g.fingerprint();
+        let fp = g.fingerprint();
+        let key = (model.id, fp.0, fp.1);
         {
             let map = self.map.lock().expect("graph cache poisoned");
             if let Some(cg) = map.get(&key) {
@@ -529,8 +534,8 @@ mod tests {
     fn cache_never_serves_a_different_models_compilation() {
         let model = fitted();
         // Two separate compilations of even the same platform model carry
-        // distinct identities; a shared cache must recompile rather than
-        // hand model B a graph compiled under model A.
+        // distinct identities; a shared cache must compile per model rather
+        // than hand model B a graph compiled under model A.
         let cm_a = CompiledModel::compile(&model);
         let cm_b = CompiledModel::compile(&model);
         assert_ne!(cm_a.id(), cm_b.id());
@@ -542,10 +547,19 @@ mod tests {
         let b = cache.get_or_compile(&cm_b, &g);
         assert!(!Arc::ptr_eq(&a, &b), "model B must not be served model A's entry");
         assert_eq!(b.model_id, cm_b.id());
-        // Same totals here (same source model), but via a fresh compilation.
+        // Same totals here (same source model), but via a distinct compilation.
         assert_eq!(
             a.total_ms(ModelKind::Mixed).to_bits(),
             b.total_ms(ModelKind::Mixed).to_bits()
         );
+        // The model id is part of the cache key (fleet sharing): both
+        // compilations stay resident, and re-requesting under either model
+        // hits its own entry instead of thrashing a shared slot.
+        assert_eq!(cache.len(), 2);
+        let a2 = cache.get_or_compile(&cm_a, &g);
+        let b2 = cache.get_or_compile(&cm_b, &g);
+        assert!(Arc::ptr_eq(&a, &a2), "model A's entry must survive model B's insert");
+        assert!(Arc::ptr_eq(&b, &b2));
+        assert_eq!(cache.len(), 2);
     }
 }

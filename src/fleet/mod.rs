@@ -1,0 +1,309 @@
+//! Fleet-wide estimation: fit a [`PlatformModel`] for **every** registered
+//! device and answer cross-device questions — "how fast is this network on
+//! each target?", "which device should serve it?", "give me the full
+//! network × device latency matrix".
+//!
+//! This is ANNETTE's decoupling promise taken to its conclusion: once each
+//! accelerator has been benchmarked once, architecture search and placement
+//! decisions run against the whole fleet without ever touching hardware
+//! again. Fitting fans across worker threads ([`crate::par::fan_indexed`]),
+//! per-device platform models compile into [`CompiledModel`]s, and one
+//! shared [`GraphCache`] (keyed by model id + structural fingerprint) holds
+//! each network's compilation for every device simultaneously.
+
+use std::fs;
+use std::path::Path;
+
+use crate::coordinator::orchestrator::{default_threads, run_campaign, BenchData};
+use crate::coordinator::Service;
+use crate::error::{Error, Result};
+use crate::estim::compiled::{CompiledModel, GraphCache};
+use crate::graph::Graph;
+use crate::hw::device::Device;
+use crate::hw::registry::{self, DeviceEntry};
+use crate::models::layer::ModelKind;
+use crate::models::platform::PlatformModel;
+use crate::par::fan_indexed;
+
+/// One fitted fleet member: the registry entry, the live (simulated) device,
+/// and everything the benchmark-and-fit flow produced for it.
+pub struct FleetMember {
+    pub entry: &'static DeviceEntry,
+    pub device: Box<dyn Device>,
+    pub bench: BenchData,
+    pub model: PlatformModel,
+}
+
+/// A per-device prediction for one network.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DeviceLatency {
+    /// Registry id of the device.
+    pub device: &'static str,
+    /// Predicted end-to-end latency in milliseconds.
+    pub total_ms: f64,
+}
+
+/// Platform models for a set of registered devices, ready to estimate any
+/// network on all of them.
+pub struct Fleet {
+    members: Vec<FleetMember>,
+    compiled: Vec<CompiledModel>,
+    cache: GraphCache,
+}
+
+impl Fleet {
+    /// Benchmark and fit every device in the registry, in parallel.
+    pub fn fit_all(runs: usize) -> Result<Fleet> {
+        Fleet::fit(&registry::ids(), runs)
+    }
+
+    /// Benchmark and fit the given registry ids, in parallel (one worker per
+    /// device; each campaign splits the remaining parallelism). Campaigns
+    /// are seed-deterministic, so the fitted models are identical to a
+    /// sequential run. Ids must be known to the registry and unique.
+    pub fn fit(ids: &[&str], runs: usize) -> Result<Fleet> {
+        let entries: Vec<&'static DeviceEntry> = ids
+            .iter()
+            .copied()
+            .map(registry::get_or_err)
+            .collect::<Result<_>>()?;
+        // Validate the id set before spending time on campaigns; the
+        // from_members checks would catch both anyway, but only after
+        // benchmarking every device.
+        if entries.is_empty() {
+            return Err(Error::Invalid("a fleet needs at least one device".to_string()));
+        }
+        for (i, e) in entries.iter().enumerate() {
+            if entries[..i].iter().any(|o| o.id == e.id) {
+                return Err(Error::Invalid(format!("duplicate fleet device `{}`", e.id)));
+            }
+        }
+        let campaign_threads = (default_threads() / entries.len()).max(1);
+        let members = fan_indexed(entries.len(), entries.len(), |i| {
+            let entry = entries[i];
+            let device = (entry.build)();
+            let bench = run_campaign(device.as_ref(), runs, campaign_threads);
+            let model = PlatformModel::fit(&device.spec(), &bench);
+            FleetMember {
+                entry,
+                device,
+                bench,
+                model,
+            }
+        });
+        Fleet::from_members(members)
+    }
+
+    /// Assemble a fleet from already-fitted members (e.g. models reloaded
+    /// from disk and paired with their registry entries). Fails on an empty
+    /// member list or duplicate device ids — both would make id-keyed
+    /// lookups (`member`, the fleet service's routing) ambiguous.
+    pub fn from_members(members: Vec<FleetMember>) -> Result<Fleet> {
+        if members.is_empty() {
+            return Err(Error::Invalid("a fleet needs at least one device".to_string()));
+        }
+        for (i, m) in members.iter().enumerate() {
+            if members[..i].iter().any(|o| o.entry.id == m.entry.id) {
+                return Err(Error::Invalid(format!(
+                    "duplicate fleet device `{}`",
+                    m.entry.id
+                )));
+            }
+        }
+        let compiled = members
+            .iter()
+            .map(|m| CompiledModel::compile(&m.model))
+            .collect();
+        Ok(Fleet {
+            members,
+            compiled,
+            cache: GraphCache::new(),
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+
+    pub fn members(&self) -> &[FleetMember] {
+        &self.members
+    }
+
+    /// Registry ids of the fleet, in member order.
+    pub fn ids(&self) -> Vec<&'static str> {
+        self.members.iter().map(|m| m.entry.id).collect()
+    }
+
+    pub fn member(&self, id: &str) -> Option<&FleetMember> {
+        self.members.iter().find(|m| m.entry.id == id)
+    }
+
+    /// Predicted latency of `g` on fleet member `idx` (compiled + cached).
+    fn total_ms_at(&self, idx: usize, g: &Graph, kind: ModelKind) -> f64 {
+        self.cache
+            .get_or_compile(&self.compiled[idx], g)
+            .total_ms(kind)
+    }
+
+    /// Estimate `g` on every device of the fleet, in member order.
+    pub fn estimate_on_all(&self, g: &Graph, kind: ModelKind) -> Vec<DeviceLatency> {
+        (0..self.members.len())
+            .map(|i| DeviceLatency {
+                device: self.members[i].entry.id,
+                total_ms: self.total_ms_at(i, g, kind),
+            })
+            .collect()
+    }
+
+    /// The fleet member predicted fastest for `g` (first wins ties, so the
+    /// answer is deterministic).
+    pub fn best_device(&self, g: &Graph, kind: ModelKind) -> DeviceLatency {
+        let all = self.estimate_on_all(g, kind);
+        let mut best = all[0];
+        for cand in &all[1..] {
+            if cand.total_ms < best.total_ms {
+                best = *cand;
+            }
+        }
+        best
+    }
+
+    /// The full latency matrix: `matrix[n][d]` is network `n` on device `d`
+    /// (member order), fanned across `threads` workers with deterministic,
+    /// input-ordered output.
+    pub fn latency_matrix(
+        &self,
+        nets: &[Graph],
+        kind: ModelKind,
+        threads: usize,
+    ) -> Vec<Vec<f64>> {
+        let d = self.members.len();
+        let flat = fan_indexed(nets.len() * d, threads, |i| {
+            self.total_ms_at(i % d, &nets[i / d], kind)
+        });
+        flat.chunks(d).map(|row| row.to_vec()).collect()
+    }
+
+    /// A line-JSON [`Service`] answering for the whole fleet (per-device
+    /// routing via the request's `device` field, cross-device answers via
+    /// `"fleet":true`). The first member is the default device.
+    pub fn to_service(&self) -> Service {
+        Service::multi(
+            self.members
+                .iter()
+                .map(|m| (m.entry.id.to_string(), m.model.clone()))
+                .collect(),
+        )
+        .expect("fleet construction guarantees non-empty, unique device ids")
+    }
+
+    /// Persist every member's benchmark data and platform model under
+    /// `<out_dir>/<device-id>/`.
+    pub fn save(&self, out_dir: &Path) -> Result<()> {
+        for m in &self.members {
+            let sub = out_dir.join(m.entry.id);
+            fs::create_dir_all(&sub)?;
+            m.bench.save(sub.join("bench.json"))?;
+            m.model.save(sub.join("model.json"))?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::zoo;
+
+    #[test]
+    fn fit_all_covers_the_registry_and_fills_the_matrix() {
+        let fleet = Fleet::fit_all(1).unwrap();
+        assert_eq!(fleet.ids(), registry::ids());
+        assert_eq!(fleet.len(), 3);
+        let nets: Vec<Graph> = zoo::table2().into_iter().map(|e| e.graph).collect();
+        let matrix = fleet.latency_matrix(&nets, ModelKind::Mixed, 4);
+        assert_eq!(matrix.len(), 12, "12 networks");
+        for (g, row) in nets.iter().zip(&matrix) {
+            assert_eq!(row.len(), 3, "3 devices");
+            assert!(row.iter().all(|ms| *ms > 0.0), "{}: {row:?}", g.name);
+            // The matrix row agrees bit-for-bit with per-network queries.
+            let all = fleet.estimate_on_all(g, ModelKind::Mixed);
+            for (cell, lat) in row.iter().zip(&all) {
+                assert_eq!(cell.to_bits(), lat.total_ms.to_bits());
+            }
+            // best_device is the row argmin.
+            let best = fleet.best_device(g, ModelKind::Mixed);
+            let min = row.iter().cloned().fold(f64::INFINITY, f64::min);
+            assert_eq!(best.total_ms.to_bits(), min.to_bits());
+        }
+        // The devices genuinely disagree: no single column dominates the
+        // whole matrix (the systolic TPU loses on the giant-FC networks).
+        let firsts: std::collections::HashSet<&str> = nets
+            .iter()
+            .map(|g| fleet.best_device(g, ModelKind::Mixed).device)
+            .collect();
+        assert!(firsts.len() >= 2, "one device swept the zoo: {firsts:?}");
+    }
+
+    #[test]
+    fn matrix_is_thread_count_invariant() {
+        let fleet = Fleet::fit(&["dpu-zcu102", "tpu-edge"], 1).unwrap();
+        let nets = zoo::nasbench::sample_networks(6, 5);
+        let serial = fleet.latency_matrix(&nets, ModelKind::Mixed, 1);
+        for threads in [2, 3, 8] {
+            let par = fleet.latency_matrix(&nets, ModelKind::Mixed, threads);
+            assert_eq!(serial.len(), par.len());
+            for (a, b) in serial.iter().zip(&par) {
+                for (x, y) in a.iter().zip(b) {
+                    assert_eq!(x.to_bits(), y.to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_fit_matches_sequential_fit() {
+        // Campaigns are seed-deterministic: a fleet fitted in parallel must
+        // carry exactly the models a one-by-one fit produces.
+        let fleet = Fleet::fit(&["dpu-zcu102", "vpu-ncs2"], 1).unwrap();
+        for m in fleet.members() {
+            let device = (m.entry.build)();
+            let bench = run_campaign(device.as_ref(), 1, default_threads());
+            let solo = PlatformModel::fit(&device.spec(), &bench);
+            assert_eq!(solo.fusion, m.model.fusion, "{}", m.entry.id);
+            assert_eq!(solo.classes.len(), m.model.classes.len());
+            for (a, b) in solo.classes.iter().zip(&m.model.classes) {
+                assert_eq!(a.class, b.class);
+                assert_eq!(a.mixed, b.mixed, "{} {}", m.entry.id, a.class);
+                assert_eq!(a.stat, b.stat);
+                assert_eq!(
+                    (a.align_out, a.align_in, a.align_w),
+                    (b.align_out, b.align_in, b.align_w)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_duplicate_and_empty_fleets_fail() {
+        assert!(Fleet::fit(&["dpu-zcu102", "abacus"], 1).is_err());
+        assert!(Fleet::fit(&[], 1).is_err());
+        let err = Fleet::fit(&["tpu-edge", "tpu-edge"], 1).unwrap_err().to_string();
+        assert!(err.contains("duplicate"), "{err}");
+    }
+
+    #[test]
+    fn fleet_persists_artifacts_per_device() {
+        let dir = std::env::temp_dir().join("annette-fleet-save-test");
+        let _ = fs::remove_dir_all(&dir);
+        let fleet = Fleet::fit(&["tpu-edge"], 1).unwrap();
+        fleet.save(&dir).unwrap();
+        assert!(dir.join("tpu-edge/bench.json").exists());
+        let loaded = PlatformModel::load(dir.join("tpu-edge/model.json")).unwrap();
+        assert_eq!(loaded.spec, fleet.members()[0].model.spec);
+    }
+}

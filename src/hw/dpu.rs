@@ -40,6 +40,8 @@ impl DpuDevice {
                     (LayerClass::Fc, "act"),
                     (LayerClass::Elem, "act"),
                 ],
+                // Weights stream from DDR each run anyway; no resident buffer.
+                spill: None,
             },
         }
     }

@@ -1,11 +1,16 @@
-//! Hardware targets: the [`device::Device`] abstraction and the simulated
-//! accelerators benchmarks run against.
+//! Hardware targets: the [`device::Device`] abstraction, the simulated
+//! accelerators benchmarks run against, and the [`registry`] that names
+//! them for everything above this layer.
 
 pub mod device;
 pub mod dpu;
+pub mod registry;
 pub mod sim;
+pub mod tpu;
 pub mod vpu;
 
 pub use device::{Device, DeviceSpec, Profile};
 pub use dpu::DpuDevice;
+pub use registry::DeviceEntry;
+pub use tpu::TpuDevice;
 pub use vpu::VpuDevice;

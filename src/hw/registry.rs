@@ -1,0 +1,135 @@
+//! The device registry: the single place that knows which accelerator
+//! targets exist and how to instantiate them.
+//!
+//! Everything above the `hw` layer — the benchmark/fit flows in `repro`,
+//! the [`crate::fleet::Fleet`], the examples — resolves devices through
+//! this table instead of matching on hardcoded device enums, so adding a
+//! fourth family is one new [`DeviceEntry`] line, not a repo-wide edit.
+
+use crate::error::{Error, Result};
+use crate::hw::device::Device;
+use crate::hw::dpu::DpuDevice;
+use crate::hw::tpu::TpuDevice;
+use crate::hw::vpu::VpuDevice;
+
+/// One registered accelerator target.
+#[derive(Clone, Copy, Debug)]
+pub struct DeviceEntry {
+    /// Stable identifier, also the artifact-directory slug ("dpu-zcu102").
+    pub id: &'static str,
+    /// Human-readable name (the paper's, where the paper evaluates it).
+    pub paper_name: &'static str,
+    /// Architecture family ("dpu", "vpu", "tpu").
+    pub family: &'static str,
+    /// Instantiate a fresh simulated device.
+    pub build: fn() -> Box<dyn Device>,
+}
+
+fn build_dpu() -> Box<dyn Device> {
+    Box::new(DpuDevice::zcu102())
+}
+
+fn build_vpu() -> Box<dyn Device> {
+    Box::new(VpuDevice::ncs2())
+}
+
+fn build_tpu() -> Box<dyn Device> {
+    Box::new(TpuDevice::edge())
+}
+
+/// Every built-in simulated accelerator, in canonical (fleet) order.
+pub static BUILTIN: &[DeviceEntry] = &[
+    DeviceEntry {
+        id: "dpu-zcu102",
+        paper_name: "ZCU102 DPU (DNNDK)",
+        family: "dpu",
+        build: build_dpu,
+    },
+    DeviceEntry {
+        id: "vpu-ncs2",
+        paper_name: "Intel NCS2 (Myriad X VPU)",
+        family: "vpu",
+        build: build_vpu,
+    },
+    DeviceEntry {
+        id: "tpu-edge",
+        paper_name: "Edge-TPU-class systolic array",
+        family: "tpu",
+        build: build_tpu,
+    },
+];
+
+/// All registered entries, in canonical order.
+pub fn entries() -> &'static [DeviceEntry] {
+    BUILTIN
+}
+
+/// The ids of all registered devices, in canonical order.
+pub fn ids() -> Vec<&'static str> {
+    BUILTIN.iter().map(|e| e.id).collect()
+}
+
+/// Look up an entry by id.
+pub fn get(id: &str) -> Option<&'static DeviceEntry> {
+    BUILTIN.iter().find(|e| e.id == id)
+}
+
+/// Look up an entry by id, with the canonical unknown-device error every
+/// caller (repro flows, fleet construction, CLI-facing code) shares.
+pub fn get_or_err(id: &str) -> Result<&'static DeviceEntry> {
+    get(id).ok_or_else(|| {
+        Error::Invalid(format!(
+            "unknown device `{id}` (registered: {})",
+            ids().join(", ")
+        ))
+    })
+}
+
+/// Instantiate the device registered under `id`.
+pub fn build(id: &str) -> Result<Box<dyn Device>> {
+    Ok((get_or_err(id)?.build)())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_lists_three_distinct_families() {
+        assert_eq!(entries().len(), 3);
+        let mut families: Vec<&str> = entries().iter().map(|e| e.family).collect();
+        families.dedup();
+        assert_eq!(families.len(), 3, "families must be distinct: {families:?}");
+        // Ids are unique and stable.
+        assert_eq!(ids(), vec!["dpu-zcu102", "vpu-ncs2", "tpu-edge"]);
+    }
+
+    #[test]
+    fn build_instantiates_every_entry() {
+        for entry in entries() {
+            let dev = build(entry.id).unwrap();
+            let spec = dev.spec();
+            assert!(spec.peak_gops > 0.0, "{}: bogus spec", entry.id);
+            assert!(spec.channel_align >= 1);
+        }
+        assert!(build("quantum-annealer").is_err());
+        let msg = build("nope").unwrap_err().to_string();
+        assert!(msg.contains("dpu-zcu102"), "error must list known ids: {msg}");
+    }
+
+    #[test]
+    fn specs_are_distinct_across_the_fleet() {
+        let specs: Vec<_> = entries().iter().map(|e| (e.build)().spec()).collect();
+        for (i, a) in specs.iter().enumerate() {
+            for b in &specs[i + 1..] {
+                assert_ne!(a.name, b.name);
+                assert!(
+                    a.channel_align != b.channel_align || a.peak_gops != b.peak_gops,
+                    "{} and {} look like the same silicon",
+                    a.name,
+                    b.name
+                );
+            }
+        }
+    }
+}

@@ -17,6 +17,13 @@
 //! with multiplicative Gaussian measurement noise per run, and foldable
 //! consumers (BatchNorm / Activation) fused into their producer's unit at
 //! zero cost when the device supports that fusion.
+//!
+//! Devices with a finite on-chip parameter buffer (weight-stationary
+//! systolic arrays) additionally model **buffer spill**: a unit whose weight
+//! tensor exceeds the buffer re-streams its weights from DRAM every
+//! invocation, adding `penalty · mem_ideal(weight_bytes)` — a thresholded,
+//! *non-linear* effect the fitted models can only approximate, exactly like
+//! real accelerator cliffs.
 
 use crate::graph::{assign_units, Graph, LayerClass, LayerKind};
 use crate::hw::device::{class_utils, Device, DeviceSpec, LayerTiming, Profile};
@@ -35,11 +42,24 @@ pub struct SimParams {
 /// Fusion capability: (producer class, foldable consumer op name).
 pub type FusedPair = (LayerClass, &'static str);
 
+/// Hidden on-chip parameter-buffer model for weight-stationary devices.
+#[derive(Clone, Debug)]
+pub struct SpillModel {
+    /// On-chip parameter buffer capacity in bytes.
+    pub buffer_bytes: f64,
+    /// Extra memory-time multiplier applied to the *weight* traffic of a
+    /// layer whose parameters exceed the buffer (they stream from DRAM on
+    /// every invocation instead of staying resident).
+    pub mem_penalty: f64,
+}
+
 /// A simulated accelerator.
 pub struct SimDevice {
     pub spec: DeviceSpec,
     pub params: SimParams,
     pub fused: Vec<FusedPair>,
+    /// Present on devices whose weights normally stay on-chip.
+    pub spill: Option<SpillModel>,
 }
 
 impl SimDevice {
@@ -69,9 +89,16 @@ impl SimDevice {
         );
         let compute = self.spec.ideal_compute_us(lay.flops());
         let mem = self.spec.ideal_mem_us(self.spec.layer_bytes(lay));
-        self.params.overhead_us[ci]
+        let mut t = self.params.overhead_us[ci]
             + compute / (self.params.base_eff[ci] * u)
-            + mem / self.params.mem_eff[ci]
+            + mem / self.params.mem_eff[ci];
+        if let Some(sp) = &self.spill {
+            let wbytes = self.spec.bytes_per_elem * lay.weight_elems();
+            if wbytes > sp.buffer_bytes {
+                t += sp.mem_penalty * self.spec.ideal_mem_us(wbytes);
+            }
+        }
+        t
     }
 }
 
@@ -146,6 +173,36 @@ mod tests {
         assert_eq!(p.layers[2].fused_into, Some(1));
         assert_eq!(p.layers[3].fused_into, Some(1));
         assert!(p.layers[1].ms > 0.0);
+    }
+
+    #[test]
+    fn spill_penalizes_only_over_buffer_weights() {
+        use crate::hw::tpu::TpuDevice;
+        // A conv whose weights fit the buffer, and one that overflows it.
+        let small = {
+            let mut b = GraphBuilder::new("small");
+            let i = b.input(14, 14, 64);
+            b.conv(i, 64, 3, 1);
+            b.finish().unwrap()
+        };
+        let big = {
+            let mut b = GraphBuilder::new("big");
+            let i = b.input(14, 14, 1024);
+            b.conv(i, 1024, 3, 1); // 9.4 MB of int8 weights > 8 MiB buffer
+            b.finish().unwrap()
+        };
+        let with = TpuDevice::edge();
+        let mut without = TpuDevice::edge().into_sim();
+        without.spill = None;
+        assert_eq!(
+            with.profile(&small, 1, 3).total_ms(),
+            without.profile(&small, 1, 3).total_ms(),
+            "under-buffer layers must be unaffected by the spill model"
+        );
+        assert!(
+            with.profile(&big, 1, 3).total_ms() > 1.5 * without.profile(&big, 1, 3).total_ms(),
+            "over-buffer weights must pay the re-streaming penalty"
+        );
     }
 
     #[test]

@@ -38,6 +38,8 @@ impl VpuDevice {
                     (LayerClass::DwConv, "act"),
                     (LayerClass::Fc, "act"),
                 ],
+                // Weights stream over USB/DDR each run; no resident buffer.
+                spill: None,
             },
         }
     }

@@ -8,10 +8,14 @@
 //!
 //! 1. **Benchmark phase** — [`coordinator::orchestrator::run_campaign`]
 //!    sweeps micro-kernel and multi-layer benchmarks on a [`hw::Device`]
-//!    (simulated ZCU102 DPU / NCS2 VPU), and
+//!    resolved through the [`hw::registry`] (simulated ZCU102 DPU, NCS2
+//!    VPU, and an Edge-TPU-class systolic array), and
 //!    [`models::PlatformModel::fit`] generates the stacked platform model:
 //!    mapping models (fusion rules, PE-alignment) plus per-layer-class
 //!    roofline / refined-roofline / statistical / mixed latency models.
+//!    [`fleet::Fleet`] runs this for every registered device in parallel
+//!    and answers cross-device queries (per-device estimates, best-device
+//!    selection, full latency matrices).
 //! 2. **Estimation phase** — [`estim::Estimator`] predicts layer-wise
 //!    latency for a network description [`graph::Graph`] without compiling
 //!    or executing it, reconstructing the execution-unit graph from the
@@ -31,6 +35,7 @@
 pub mod coordinator;
 pub mod error;
 pub mod estim;
+pub mod fleet;
 pub mod graph;
 pub mod hw;
 pub mod json;
@@ -51,9 +56,12 @@ pub mod prelude {
     pub use crate::estim::batch::BatchEstimator;
     pub use crate::estim::compiled::{CompiledGraph, CompiledModel, GraphCache};
     pub use crate::estim::estimator::{Estimate, Estimator};
+    pub use crate::fleet::{DeviceLatency, Fleet, FleetMember};
     pub use crate::graph::{Graph, GraphBuilder, Layer, LayerClass, LayerKind, Shape};
     pub use crate::hw::device::{Device, DeviceSpec, Profile};
     pub use crate::hw::dpu::DpuDevice;
+    pub use crate::hw::registry::{self, DeviceEntry};
+    pub use crate::hw::tpu::TpuDevice;
     pub use crate::hw::vpu::VpuDevice;
     pub use crate::metrics::{mae, mape, spearman_rho};
     pub use crate::models::layer::ModelKind;

@@ -36,13 +36,18 @@ pub fn mape(pred: &[f64], truth: &[f64]) -> f64 {
     }
 }
 
-/// Average ranks (1-based); ties receive the mean of their rank range.
+/// Average ranks (1-based): tied entries all receive the mean of the rank
+/// range they span, so e.g. `[1, 2, 2, 3]` ranks as `[1, 2.5, 2.5, 4]`.
+/// Sorting uses `f64::total_cmp` — a total order — because `sort_by` with
+/// the partial float comparison may panic (or order arbitrarily) when fed
+/// NaN; under total order NaNs deterministically rank past +inf.
 fn ranks(xs: &[f64]) -> Vec<f64> {
     let mut order: Vec<usize> = (0..xs.len()).collect();
-    order.sort_by(|&a, &b| xs[a].partial_cmp(&xs[b]).unwrap_or(std::cmp::Ordering::Equal));
+    order.sort_by(|&a, &b| xs[a].total_cmp(&xs[b]));
     let mut out = vec![0.0; xs.len()];
     let mut i = 0;
     while i < order.len() {
+        // Group ties: every entry equal to the group head shares one rank.
         let mut j = i;
         while j + 1 < order.len() && xs[order[j + 1]] == xs[order[i]] {
             j += 1;

@@ -19,7 +19,10 @@ use crate::hw::device::{class_utils, DeviceSpec};
 use crate::coordinator::orchestrator::MicroRecord;
 
 const RIDGE: f64 = 1e-9;
-const ALIGN_CANDIDATES: [usize; 6] = [1, 2, 4, 8, 16, 32];
+/// Candidate PE alignments for the channel axes. Includes 64 for systolic
+/// arrays (Edge-TPU class); on the narrower devices the extra candidate
+/// never wins the SSE grid search, so their fits are unchanged.
+const ALIGN_CANDIDATES: [usize; 7] = [1, 2, 4, 8, 16, 32, 64];
 const ALIGN_CANDIDATES_W: [usize; 5] = [1, 2, 4, 8, 16];
 
 /// Solve `argmin_θ Σ (rows·θ - ys)²` for three features via ridge-stabilized

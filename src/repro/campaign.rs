@@ -1,5 +1,6 @@
-//! Benchmark-then-fit convenience flow: pick a paper device, run a campaign,
-//! fit the platform model, and optionally persist both artifacts.
+//! Benchmark-then-fit convenience flow: resolve a device through the
+//! registry, run a campaign, fit the platform model, and optionally persist
+//! both artifacts.
 
 use std::fs;
 use std::path::Path;
@@ -7,70 +8,37 @@ use std::path::Path;
 use crate::coordinator::orchestrator::{default_threads, run_campaign, BenchData};
 use crate::error::Result;
 use crate::hw::device::Device;
-use crate::hw::dpu::DpuDevice;
-use crate::hw::vpu::VpuDevice;
+use crate::hw::registry::{self, DeviceEntry};
 use crate::models::platform::PlatformModel;
-
-/// The paper's two evaluation targets.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum DeviceChoice {
-    Dpu,
-    Vpu,
-}
-
-impl DeviceChoice {
-    /// The name the paper uses for this target.
-    pub fn paper_name(&self) -> &'static str {
-        match self {
-            DeviceChoice::Dpu => "ZCU102 DPU (DNNDK)",
-            DeviceChoice::Vpu => "Intel NCS2 (Myriad X VPU)",
-        }
-    }
-
-    /// Filesystem-friendly identifier for artifact directories.
-    pub fn slug(&self) -> &'static str {
-        match self {
-            DeviceChoice::Dpu => "dpu-zcu102",
-            DeviceChoice::Vpu => "vpu-ncs2",
-        }
-    }
-
-    /// Instantiate the simulated device.
-    pub fn device(&self) -> Box<dyn Device> {
-        match self {
-            DeviceChoice::Dpu => Box::new(DpuDevice::zcu102()),
-            DeviceChoice::Vpu => Box::new(VpuDevice::ncs2()),
-        }
-    }
-}
 
 /// A device together with the benchmark data and platform model fitted on it.
 pub struct FittedDevice {
-    pub choice: DeviceChoice,
+    pub entry: &'static DeviceEntry,
     pub device: Box<dyn Device>,
     pub bench: BenchData,
     pub model: PlatformModel,
 }
 
-/// Benchmark `choice` (with `runs` repetitions per measurement) and fit its
-/// platform model. When `out_dir` is given, the benchmark data and model are
-/// persisted under `<out_dir>/<slug>/`.
+/// Benchmark the registry device `device_id` (with `runs` repetitions per
+/// measurement) and fit its platform model. When `out_dir` is given, the
+/// benchmark data and model are persisted under `<out_dir>/<device_id>/`.
 pub fn fit_device(
-    choice: DeviceChoice,
+    device_id: &str,
     runs: usize,
     out_dir: Option<&Path>,
 ) -> Result<FittedDevice> {
-    let device = choice.device();
+    let entry = registry::get_or_err(device_id)?;
+    let device = (entry.build)();
     let bench = run_campaign(device.as_ref(), runs, default_threads());
     let model = PlatformModel::fit(&device.spec(), &bench);
     if let Some(dir) = out_dir {
-        let sub = dir.join(choice.slug());
+        let sub = dir.join(entry.id);
         fs::create_dir_all(&sub)?;
         bench.save(sub.join("bench.json"))?;
         model.save(sub.join("model.json"))?;
     }
     Ok(FittedDevice {
-        choice,
+        entry,
         device,
         bench,
         model,
@@ -85,12 +53,23 @@ mod tests {
     fn fit_device_persists_artifacts() {
         let dir = std::env::temp_dir().join("annette-repro-test");
         let _ = std::fs::remove_dir_all(&dir);
-        let fitted = fit_device(DeviceChoice::Dpu, 1, Some(&dir)).unwrap();
-        assert_eq!(fitted.choice, DeviceChoice::Dpu);
+        let fitted = fit_device("dpu-zcu102", 1, Some(&dir)).unwrap();
+        assert_eq!(fitted.entry.id, "dpu-zcu102");
         assert!(dir.join("dpu-zcu102/bench.json").exists());
         assert!(dir.join("dpu-zcu102/model.json").exists());
         // The persisted model reloads to the same coefficients.
         let loaded = PlatformModel::load(dir.join("dpu-zcu102/model.json")).unwrap();
         assert_eq!(loaded.classes.len(), fitted.model.classes.len());
+    }
+
+    #[test]
+    fn fit_device_resolves_every_registry_entry_and_rejects_strangers() {
+        for entry in registry::entries() {
+            // Resolution only — fitting all three here would repeat the
+            // fleet tests; just check the id round-trips.
+            assert_eq!(registry::get(entry.id).unwrap().id, entry.id);
+        }
+        let err = fit_device("abacus", 1, None).unwrap_err().to_string();
+        assert!(err.contains("abacus") && err.contains("tpu-edge"), "{err}");
     }
 }

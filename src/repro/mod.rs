@@ -1,6 +1,6 @@
-//! Reproduction drivers: canned benchmark-and-fit flows for the paper's two
-//! evaluation targets.
+//! Reproduction drivers: canned benchmark-and-fit flows for any registered
+//! evaluation target.
 
 pub mod campaign;
 
-pub use campaign::{fit_device, DeviceChoice, FittedDevice};
+pub use campaign::{fit_device, FittedDevice};

@@ -1,0 +1,113 @@
+//! Golden-file regression tests for the persisted schemas: a fixture
+//! checked in under `tests/golden/` must (a) still **load**, and (b)
+//! re-serialize to exactly the canonical form of the fixture. Any field
+//! rename, reorder, drop, or encoding change fails here with a readable
+//! diff *before* it silently orphans every model file users have on disk.
+//!
+//! The comparison is canonical-text vs canonical-text (both sides pass
+//! through `Value::parse(..).to_string()`), so the fixtures themselves can
+//! stay pretty-printed.
+
+use annette::hw::device::DeviceSpec;
+use annette::json::Value;
+use annette::models::platform::{PlatformModel, FORMAT as MODEL_FORMAT};
+
+const MODEL_GOLDEN: &str = include_str!("golden/platform_model.v1.json");
+const SPEC_GOLDEN: &str = include_str!("golden/device_spec.v1.json");
+
+/// Compare two canonical JSON strings; on mismatch, panic with the first
+/// divergence and surrounding context from both sides.
+fn assert_canonical_eq(current: &str, golden: &str, what: &str) {
+    if current == golden {
+        return;
+    }
+    let shared = current
+        .bytes()
+        .zip(golden.bytes())
+        .take_while(|(a, b)| a == b)
+        .count();
+    // Fixtures are ASCII, so byte offsets are char boundaries.
+    let lo = shared.saturating_sub(48);
+    let golden_ctx = &golden[lo..(shared + 48).min(golden.len())];
+    let current_ctx = &current[lo..(shared + 48).min(current.len())];
+    panic!(
+        "{what} schema drifted from the golden file (first divergence at byte {shared}):\n  \
+         golden : …{golden_ctx}…\n  \
+         current: …{current_ctx}…\n\
+         If the change is intentional, bump the format version and refresh tests/golden/."
+    );
+}
+
+fn canonical(text: &str) -> String {
+    Value::parse(text).expect("golden fixture must be valid JSON").to_string()
+}
+
+#[test]
+fn platform_model_golden_file_still_loads_and_round_trips() {
+    let v = Value::parse(MODEL_GOLDEN).unwrap();
+    let model = PlatformModel::from_value(&v)
+        .expect("the checked-in platform-model fixture no longer loads — schema drifted");
+    // Spot-check the semantics actually landed where the schema says.
+    assert_eq!(model.spec.name, "golden-device");
+    assert_eq!(model.spec.peak_gops, 2400.0);
+    assert_eq!(model.spec.bandwidth_gbs, 19.2);
+    assert_eq!(model.fusion.len(), 3);
+    assert_eq!(model.fusion[0], ("conv".to_string(), "batchnorm".to_string()));
+    assert_eq!(model.classes.len(), 2);
+    let conv = &model.classes[0];
+    assert_eq!(conv.class, "conv");
+    assert_eq!((conv.align_out, conv.align_in, conv.align_w), (16, 16, 8));
+    assert_eq!(conv.mixed, [1.25, 1.5, 35.5]);
+    assert_eq!(conv.stat, [2.5, 1.75, 40.25]);
+    // Load → save must reproduce the canonical golden text byte for byte.
+    assert_canonical_eq(
+        &model.to_value().to_string(),
+        &canonical(MODEL_GOLDEN),
+        "PlatformModel",
+    );
+}
+
+#[test]
+fn device_spec_golden_file_still_loads_and_round_trips() {
+    let v = Value::parse(SPEC_GOLDEN).unwrap();
+    let spec = DeviceSpec::from_value(&v)
+        .expect("the checked-in device-spec fixture no longer loads — schema drifted");
+    assert_eq!(spec.name, "golden-spec");
+    assert_eq!(spec.peak_gops, 4000.0);
+    assert_eq!(spec.bandwidth_gbs, 25.6);
+    assert_eq!(spec.bytes_per_elem, 1.0);
+    assert_eq!(
+        (spec.channel_align, spec.input_align, spec.spatial_align),
+        (64, 64, 1)
+    );
+    assert_canonical_eq(&spec.to_value().to_string(), &canonical(SPEC_GOLDEN), "DeviceSpec");
+}
+
+#[test]
+fn model_format_version_is_pinned() {
+    // Renaming the version string orphans persisted models; make it loud.
+    assert_eq!(MODEL_FORMAT, "annette-model.v1");
+    // A version-bumped document must be rejected, not half-parsed.
+    let bumped = MODEL_GOLDEN.replace("annette-model.v1", "annette-model.v2");
+    let v = Value::parse(&bumped).unwrap();
+    assert!(PlatformModel::from_value(&v).is_err());
+}
+
+#[test]
+fn golden_model_survives_a_disk_round_trip() {
+    // save → load through real files, not just Values.
+    let dir = std::env::temp_dir().join("annette-golden-test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let v = Value::parse(MODEL_GOLDEN).unwrap();
+    let model = PlatformModel::from_value(&v).unwrap();
+    let path = dir.join("golden_model.json");
+    model.save(&path).unwrap();
+    let back = PlatformModel::load(&path).unwrap();
+    assert_eq!(back.spec, model.spec);
+    assert_eq!(back.fusion, model.fusion);
+    for (a, b) in back.classes.iter().zip(&model.classes) {
+        assert_eq!(a.class, b.class);
+        assert_eq!(a.mixed, b.mixed);
+        assert_eq!(a.stat, b.stat);
+    }
+}

@@ -90,6 +90,90 @@ fn spearman_degenerate_inputs_are_zero() {
 }
 
 #[test]
+fn spearman_table_driven_tie_handling() {
+    // Average-rank tie handling, checked against hand-computed Pearson
+    // correlations of the average ranks.
+    struct Case {
+        name: &'static str,
+        a: &'static [f64],
+        b: &'static [f64],
+        expect: f64,
+    }
+    let cases = [
+        Case {
+            name: "strictly monotonic",
+            a: &[1.0, 2.0, 3.0, 4.0, 5.0],
+            b: &[2.0, 4.0, 8.0, 16.0, 32.0],
+            expect: 1.0,
+        },
+        Case {
+            name: "reversed",
+            a: &[1.0, 2.0, 3.0, 4.0],
+            b: &[9.0, 7.0, 5.0, 3.0],
+            expect: -1.0,
+        },
+        Case {
+            // ranks b = [1, 2.5, 2.5, 4]: rho = 4.5 / sqrt(5 * 4.5)
+            name: "one tie pair, monotonic",
+            a: &[1.0, 2.0, 3.0, 4.0],
+            b: &[1.0, 2.0, 2.0, 3.0],
+            expect: 0.9486832980505138,
+        },
+        Case {
+            // ranks a = [1, 2.5, 2.5, 4], b = [4, 2.5, 2.5, 1]: exactly -1.
+            name: "reversed with aligned ties",
+            a: &[1.0, 2.0, 2.0, 3.0],
+            b: &[3.0, 2.0, 2.0, 1.0],
+            expect: -1.0,
+        },
+        Case {
+            // ranks a = [1.5, 1.5, 3.5, 3.5], b = [1.5, 3.5, 1.5, 3.5]:
+            // the rank products cancel pairwise → exactly 0.
+            name: "crossing tie pairs cancel",
+            a: &[1.0, 1.0, 2.0, 2.0],
+            b: &[1.0, 2.0, 1.0, 2.0],
+            expect: 0.0,
+        },
+        Case {
+            name: "all ties on one side",
+            a: &[7.0, 7.0, 7.0, 7.0],
+            b: &[1.0, 2.0, 3.0, 4.0],
+            expect: 0.0,
+        },
+        Case {
+            name: "all ties on both sides",
+            a: &[3.0, 3.0, 3.0],
+            b: &[9.0, 9.0, 9.0],
+            expect: 0.0,
+        },
+    ];
+    for c in &cases {
+        let got = spearman_rho(c.a, c.b);
+        assert!(
+            (got - c.expect).abs() < 1e-12,
+            "{}: rho = {got}, expected {}",
+            c.name,
+            c.expect
+        );
+        // rho is symmetric in its arguments.
+        let sym = spearman_rho(c.b, c.a);
+        assert!((got - sym).abs() < 1e-12, "{}: asymmetric ({got} vs {sym})", c.name);
+    }
+}
+
+#[test]
+fn spearman_tolerates_nan_without_panicking() {
+    // `sort_by` with a partial comparison may panic on NaN; ranks() uses a
+    // total order instead. The exact value is unimportant — the call must
+    // be deterministic and finite-or-zero, not a crash.
+    let a = [1.0, f64::NAN, 3.0, 2.0];
+    let b = [2.0, 1.0, 4.0, 3.0];
+    let r1 = spearman_rho(&a, &b);
+    let r2 = spearman_rho(&a, &b);
+    assert_eq!(r1.to_bits(), r2.to_bits(), "NaN input must still be deterministic");
+}
+
+#[test]
 fn spearman_is_scale_invariant_on_ranks() {
     let a = [3.0, 1.0, 4.0, 1.5, 9.0, 2.6];
     let b = [30.0, 10.0, 40.0, 15.0, 90.0, 26.0];

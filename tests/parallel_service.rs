@@ -7,6 +7,7 @@ use annette::coordinator::Service;
 use annette::graph::serial::graph_to_value;
 use annette::hw::device::Device;
 use annette::hw::dpu::DpuDevice;
+use annette::hw::registry;
 use annette::json::Value;
 use annette::models::platform::PlatformModel;
 use annette::zoo;
@@ -15,6 +16,18 @@ fn service() -> Service {
     let dev = DpuDevice::zcu102();
     let data = run_campaign(&dev, 1, 4);
     Service::new(PlatformModel::fit(&dev.spec(), &data))
+}
+
+fn fleet_service() -> Service {
+    let targets = ["dpu-zcu102", "tpu-edge"]
+        .iter()
+        .map(|id| {
+            let dev = registry::build(id).unwrap();
+            let data = run_campaign(dev.as_ref(), 1, 4);
+            (id.to_string(), PlatformModel::fit(&dev.spec(), &data))
+        })
+        .collect();
+    Service::multi(targets).unwrap()
 }
 
 fn request_batch() -> (String, usize) {
@@ -82,6 +95,89 @@ fn bad_lines_fail_in_band_without_poisoning_neighbors() {
     }
     assert_eq!(ok_seen, 12);
     assert!(err_seen >= 5);
+}
+
+#[test]
+fn device_and_fleet_requests_are_thread_invariant() {
+    // A batch mixing per-device routing, fleet mode, unknown devices, and
+    // malformed lines must serve byte-identically across thread counts.
+    let svc = fleet_service();
+    let nets = zoo::nasbench::sample_networks(8, 41);
+    let mut input = String::new();
+    for (i, g) in nets.iter().enumerate() {
+        let net = graph_to_value(g);
+        match i % 4 {
+            0 => input.push_str(&format!(
+                "{{\"op\":\"estimate\",\"device\":\"dpu-zcu102\",\"total_only\":true,\"network\":{net}}}\n"
+            )),
+            1 => input.push_str(&format!(
+                "{{\"op\":\"estimate\",\"device\":\"tpu-edge\",\"total_only\":true,\"network\":{net}}}\n"
+            )),
+            2 => input.push_str(&format!(
+                "{{\"op\":\"estimate\",\"fleet\":true,\"network\":{net}}}\n"
+            )),
+            _ => input.push_str(&format!(
+                "{{\"op\":\"estimate\",\"device\":\"gpu-nope\",\"network\":{net}}}\n"
+            )),
+        }
+    }
+    let serial_run = svc.serve_lines(&input, 1);
+    for threads in [2, 4, 8] {
+        assert_eq!(svc.serve_lines(&input, threads), serial_run, "{threads} threads diverged");
+    }
+    for (i, resp) in serial_run.iter().enumerate() {
+        let v = Value::parse(resp).expect("valid JSON response");
+        let ok = v.get("ok").and_then(|x| x.as_bool()).unwrap();
+        match i % 4 {
+            0 => assert_eq!(v.req_str("device").unwrap(), "dpu-zcu102"),
+            1 => assert_eq!(v.req_str("device").unwrap(), "tpu-edge"),
+            2 => {
+                assert!(ok, "fleet request failed: {resp}");
+                assert_eq!(v.req_arr("fleet").unwrap().len(), 2);
+                assert!(v.get("best").is_some());
+            }
+            _ => {
+                assert!(!ok, "unknown device must fail in-band: {resp}");
+                assert!(v.req_str("error").unwrap().contains("gpu-nope"));
+            }
+        }
+    }
+}
+
+#[test]
+fn cache_is_not_poisoned_by_in_band_errors_or_cross_device_traffic() {
+    // The same network answered before and after (a) requests that fail
+    // in-band *mentioning the same network* and (b) traffic routed to a
+    // different device must return byte-identical lines: per-model cache
+    // keying means neither errors nor neighbors can corrupt an entry.
+    let svc = fleet_service();
+    let net = graph_to_value(&zoo::mobilenet::mobilenet_v1(224, 1000)).to_string();
+    let good_dpu =
+        format!("{{\"op\":\"estimate\",\"device\":\"dpu-zcu102\",\"kind\":\"mixed\",\"network\":{net}}}");
+    let good_tpu =
+        format!("{{\"op\":\"estimate\",\"device\":\"tpu-edge\",\"kind\":\"mixed\",\"network\":{net}}}");
+    let before_dpu = svc.handle(&good_dpu);
+    let before_tpu = svc.handle(&good_tpu);
+    assert!(before_dpu.contains("\"ok\":true"));
+    assert_ne!(before_dpu, before_tpu, "two devices must answer differently");
+    // In-band failures referencing the same network: unknown device,
+    // unknown kind, and a structurally invalid graph document.
+    for bad in [
+        format!("{{\"op\":\"estimate\",\"device\":\"npu-404\",\"network\":{net}}}"),
+        format!("{{\"op\":\"estimate\",\"kind\":\"warp\",\"network\":{net}}}"),
+        "{\"op\":\"estimate\",\"network\":{\"format\":\"annette-graph.v1\",\"name\":\"bad\",\"layers\":[]}}"
+            .to_string(),
+    ] {
+        let resp = svc.handle(&bad);
+        assert!(resp.contains("\"ok\":false"), "expected in-band error: {resp}");
+    }
+    // Interleave cross-device traffic, then re-ask the originals.
+    for _ in 0..3 {
+        svc.handle(&good_tpu);
+        svc.handle(&good_dpu);
+    }
+    assert_eq!(svc.handle(&good_dpu), before_dpu, "DPU answer drifted");
+    assert_eq!(svc.handle(&good_tpu), before_tpu, "TPU answer drifted");
 }
 
 #[test]

@@ -1,0 +1,117 @@
+//! Zero-dependency property-test harness: a seeded generator of randomized
+//! *valid* network graphs built on [`annette::rng::Rng`], plus a shrinker.
+//!
+//! Generation walks a random op sequence through [`GraphBuilder`], which
+//! guarantees shape consistency by construction; every emitted graph passes
+//! `Graph::validate`. Shrinking exploits the IR's topological-order
+//! invariant: any *prefix* of a valid graph's layer list is itself a valid
+//! graph (producers always precede consumers, and validation never requires
+//! outputs to be consumed), so a failing case shrinks by scanning prefixes
+//! from the shortest up and reporting the first one that still fails.
+
+use annette::graph::{Act, Graph, GraphBuilder};
+use annette::rng::{Rng, PHI};
+
+/// Deterministically generate candidate `index` of the stream identified by
+/// `seed`. Graphs mix every operator kind: conv/dwconv (with and without
+/// fused bn+act tails), pooling, residual adds, channel concats, global
+/// pooling, flatten→fc heads, and odd (alignment-hostile) channel counts.
+pub fn random_graph(seed: u64, index: usize) -> Graph {
+    let mut rng = Rng::new(seed ^ ((index as u64 + 1).wrapping_mul(PHI)));
+    let mut b = GraphBuilder::new(&format!("prop-{index:04}"));
+    let hw = *rng.pick(&[4usize, 6, 7, 8, 12, 16, 28, 32]);
+    let c0 = *rng.pick(&[1usize, 2, 3, 4, 8, 16, 24, 31, 32]);
+    let mut x = b.input(hw, hw, c0);
+    let mut flattened = false;
+    let ops = rng.range(3, 36);
+    for _ in 0..ops {
+        if flattened {
+            // Only shape-preserving or dense ops are meaningful after
+            // flatten; the builder would accept more, but this mirrors how
+            // real networks end.
+            x = match rng.range(0, 4) {
+                0 => b.fc(x, *rng.pick(&[10usize, 17, 64, 100])),
+                1 => b.relu(x),
+                2 => b.batchnorm(x),
+                _ => b.softmax(x),
+            };
+            continue;
+        }
+        let c = b.shape(x).c;
+        match rng.range(0, 12) {
+            0 => {
+                let filters = *rng.pick(&[1usize, 3, 8, 16, 17, 24, 32, 48, 64]);
+                let k = *rng.pick(&[1usize, 3, 5]);
+                let s = *rng.pick(&[1usize, 1, 2]);
+                x = b.conv(x, filters, k, s);
+            }
+            1 => {
+                let filters = *rng.pick(&[4usize, 8, 16, 20, 32, 64]);
+                x = b.conv_bn_relu(x, filters, 3, *rng.pick(&[1usize, 2]));
+            }
+            2 => x = b.dwconv(x, *rng.pick(&[3usize, 5]), *rng.pick(&[1usize, 2])),
+            3 => x = b.dw_bn_relu(x, 3, 1),
+            4 => x = b.maxpool(x, 2, 2),
+            5 => x = b.avgpool(x, 3, 2),
+            6 => {
+                let act = *rng.pick(&[Act::Relu, Act::Relu6, Act::Sigmoid, Act::Swish]);
+                x = b.activation(x, act);
+            }
+            7 => x = b.batchnorm(x),
+            8 => {
+                // Residual branch: same-shape conv+bn side path, then add.
+                let y = b.conv(x, c, 3, 1);
+                let y = b.batchnorm(y);
+                x = b.add(x, y);
+            }
+            9 => {
+                if c <= 256 {
+                    // Concat branch: a 1×1 conv side path widens channels.
+                    let y = b.conv(x, *rng.pick(&[4usize, 8, 16]), 1, 1);
+                    x = b.concat(&[x, y]);
+                } else {
+                    x = b.relu(x);
+                }
+            }
+            10 => x = b.global_pool(x),
+            _ => {
+                x = b.flatten(x);
+                flattened = true;
+            }
+        }
+    }
+    if !flattened && rng.range(0, 2) == 0 {
+        b.classifier(x, *rng.pick(&[10usize, 100, 1000]));
+    } else if rng.range(0, 2) == 0 {
+        let f = b.fc(x, 10);
+        b.softmax(f);
+    }
+    b.finish().expect("generated graph must validate")
+}
+
+/// The first `n` layers of `g` as a standalone graph. Sound for any
+/// `1 <= n <= g.len()` because layer ids are topological: a prefix is
+/// closed under producers.
+pub fn prefix(g: &Graph, n: usize) -> Graph {
+    Graph {
+        name: g.name.clone(),
+        layers: g.layers[..n].to_vec(),
+    }
+}
+
+/// Shrink a failing graph by prefix truncation: return the shortest prefix
+/// on which `check` still reports a violation, together with that report.
+/// The caller guarantees the full graph fails, so the scan always succeeds
+/// (at worst with the full graph itself).
+pub fn shrink_to_minimal<F>(g: &Graph, check: F) -> (Graph, String)
+where
+    F: Fn(&Graph) -> Option<String>,
+{
+    for n in 1..=g.layers.len() {
+        let p = prefix(g, n);
+        if let Some(err) = check(&p) {
+            return (p, err);
+        }
+    }
+    unreachable!("caller guarantees the full graph fails `check`");
+}

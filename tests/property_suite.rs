@@ -1,0 +1,175 @@
+//! Property-based test suite over randomized graphs, run against **every**
+//! device in the registry. For each generated graph the suite asserts:
+//!
+//! 1. the compiled estimation path is bit-exact against the uncompiled
+//!    reference (`estimate_uncompiled_with`) for all four model families —
+//!    totals, unit roots, fused member lists, per-unit f64 bits;
+//! 2. the structural hash / fingerprint is stable under layer renaming
+//!    (labels are not structure);
+//! 3. JSON serialization round-trips to an identical graph with an
+//!    identical fingerprint.
+//!
+//! Failures shrink by prefix truncation (see `prop::shrink_to_minimal`) and
+//! panic with the minimal failing graph's JSON so the case is replayable.
+//!
+//! Tier-1 runs 200 seeded graphs per device. The nightly CI job raises the
+//! count and randomizes the seed via environment variables:
+//! `ANNETTE_PROP_GRAPHS` (count) and `ANNETTE_PROP_SEED` (stream seed).
+
+mod prop;
+
+use annette::coordinator::orchestrator::run_campaign;
+use annette::estim::estimator::Estimator;
+use annette::graph::{serial, Graph};
+use annette::hw::registry;
+use annette::json::Value;
+use annette::models::layer::ModelKind;
+use annette::models::platform::PlatformModel;
+
+const DEFAULT_GRAPHS_PER_DEVICE: usize = 200;
+const DEFAULT_SEED: u64 = 0xA11E77E;
+
+fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name)
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+/// All three properties for one graph under one fitted estimator; `None`
+/// when everything holds, otherwise a human-readable violation report.
+fn check_graph(est: &Estimator, g: &Graph) -> Option<String> {
+    // Property 1: compiled path ≡ uncompiled reference, bit for bit.
+    for kind in ModelKind::ALL {
+        let fast = est.estimate_with(g, kind);
+        let slow = est.estimate_uncompiled_with(g, kind);
+        if fast.units.len() != slow.units.len() {
+            return Some(format!(
+                "{kind:?}: compiled path has {} units, reference {}",
+                fast.units.len(),
+                slow.units.len()
+            ));
+        }
+        for (a, b) in fast.units.iter().zip(&slow.units) {
+            if a.root != b.root || a.class != b.class {
+                return Some(format!(
+                    "{kind:?}: unit mismatch (compiled root {} `{}`, reference root {} `{}`)",
+                    a.root, a.class, b.root, b.class
+                ));
+            }
+            if a.members != b.members {
+                return Some(format!(
+                    "{kind:?}: fused members diverged at unit {} ({:?} vs {:?})",
+                    a.root, a.members, b.members
+                ));
+            }
+            if a.ms.to_bits() != b.ms.to_bits() {
+                return Some(format!(
+                    "{kind:?}: unit {} latency diverged ({} vs {})",
+                    a.root, a.ms, b.ms
+                ));
+            }
+        }
+        if est.total_ms(g, kind).to_bits() != fast.total_ms().to_bits() {
+            return Some(format!("{kind:?}: total-only fast path diverged"));
+        }
+    }
+
+    // Property 2: layer labels are not structure.
+    let mut relabeled = g.clone();
+    for lay in &mut relabeled.layers {
+        lay.name = format!("relabeled_{}", lay.id);
+    }
+    for seed in [0u64, 7, 0x5bd1_e995] {
+        if g.structural_hash(seed) != relabeled.structural_hash(seed) {
+            return Some(format!("structural_hash(seed={seed}) moved under layer renaming"));
+        }
+    }
+    if g.fingerprint() != relabeled.fingerprint() {
+        return Some("fingerprint moved under layer renaming".to_string());
+    }
+
+    // Property 3: Graph → JSON → Graph is the identity (same fingerprint).
+    let text = serial::graph_to_value(g).to_string();
+    let back = match Value::parse(&text).and_then(|v| serial::graph_from_value(&v)) {
+        Ok(back) => back,
+        Err(e) => return Some(format!("serialization round-trip failed: {e}")),
+    };
+    if back != *g {
+        return Some("JSON round-trip produced a different graph".to_string());
+    }
+    if back.fingerprint() != g.fingerprint() {
+        return Some("JSON round-trip moved the fingerprint".to_string());
+    }
+    None
+}
+
+#[test]
+fn properties_hold_on_every_registry_device() {
+    let n = env_u64("ANNETTE_PROP_GRAPHS", DEFAULT_GRAPHS_PER_DEVICE as u64) as usize;
+    let seed = env_u64("ANNETTE_PROP_SEED", DEFAULT_SEED);
+    for entry in registry::entries() {
+        let device = (entry.build)();
+        let bench = run_campaign(device.as_ref(), 1, 4);
+        let model = PlatformModel::fit(&device.spec(), &bench);
+        let est = Estimator::new(&model);
+        for i in 0..n {
+            let g = prop::random_graph(seed, i);
+            if check_graph(&est, &g).is_some() {
+                let (minimal, err) = prop::shrink_to_minimal(&g, |p| check_graph(&est, p));
+                panic!(
+                    "property violated on {} with graph #{i} (seed {seed:#x}): {err}\n\
+                     minimal failing prefix ({} of {} layers):\n{}",
+                    entry.id,
+                    minimal.layers.len(),
+                    g.layers.len(),
+                    serial::graph_to_value(&minimal)
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn generator_emits_valid_diverse_graphs() {
+    let mut sizes = Vec::new();
+    let mut ops_seen = std::collections::BTreeSet::new();
+    for i in 0..DEFAULT_GRAPHS_PER_DEVICE {
+        let g = prop::random_graph(DEFAULT_SEED, i);
+        g.validate().unwrap_or_else(|e| panic!("graph #{i} invalid: {e}"));
+        sizes.push(g.layers.len());
+        for lay in &g.layers {
+            ops_seen.insert(lay.kind.op_name());
+        }
+    }
+    // Every operator kind in the IR shows up somewhere in the stream.
+    for op in [
+        "input", "conv", "dwconv", "pool", "globalpool", "fc", "add", "concat", "act",
+        "batchnorm", "softmax", "flatten",
+    ] {
+        assert!(ops_seen.contains(op), "generator never emits `{op}`");
+    }
+    // Depth varies: the stream is not one graph repeated.
+    let (min, max) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+    assert!(max - min >= 10, "degenerate size spread: {min}..{max}");
+    // Different seeds give different streams.
+    assert_ne!(
+        prop::random_graph(1, 0).fingerprint(),
+        prop::random_graph(2, 0).fingerprint()
+    );
+}
+
+#[test]
+fn every_prefix_of_a_generated_graph_is_valid() {
+    // The shrinker's soundness argument, checked directly: prefixes of valid
+    // graphs validate, serialize, and estimate without panicking.
+    let g = prop::random_graph(DEFAULT_SEED, 1);
+    for n in 1..=g.layers.len() {
+        let p = prop::prefix(&g, n);
+        p.validate()
+            .unwrap_or_else(|e| panic!("prefix of {n} layers invalid: {e}"));
+        let text = serial::graph_to_value(&p).to_string();
+        let back = serial::graph_from_value(&Value::parse(&text).unwrap()).unwrap();
+        assert_eq!(p, back);
+    }
+}
