@@ -1,12 +1,17 @@
 # Convenience targets for the annette reproduction.
 
-.PHONY: build test examples fleet-demo prop-extended bench bench-smoke artifacts clean
+.PHONY: build test lint examples fleet-demo map-demo prop-extended bench bench-smoke artifacts clean
 
 build:
 	cargo build --release
 
 test:
 	cargo test -q
+
+# The same checks the CI lint job runs.
+lint:
+	cargo fmt --check
+	cargo clippy --all-targets -- -D warnings
 
 # Run every example end to end (the tier-1 demo flow).
 examples: build
@@ -16,11 +21,17 @@ examples: build
 	cargo run --release --example serve_demo
 	cargo run --release --example nas_search
 	cargo run --release --example fleet_compare
+	cargo run --release --example map_demo
 
 # Fit the whole device fleet, print the 12-network x 3-device latency
 # matrix with best-device placement, and demo the fleet service protocol.
 fleet-demo: build
 	cargo run --release --example fleet_compare
+
+# Learn the DPU's mapping model and print MobileNet's execution-unit graph
+# before and after the rewrite pass (fused chains + elided layers).
+map-demo: build
+	cargo run --release --example map_demo
 
 # Long randomized property run (the nightly CI job). Tier-1 always runs the
 # 200-graph fixed-seed pass via `cargo test`.

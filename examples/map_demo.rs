@@ -1,0 +1,68 @@
+//! Mapping-pass demo (`make map-demo`): benchmark the simulated DPU, learn
+//! its mapping model, and print MobileNet-v1's execution-unit graph before
+//! and after the rewrite pass — the paper's Fig. 2 "mapping model" stage
+//! made visible.
+//!
+//! ```sh
+//! cargo run --release --example map_demo
+//! ```
+
+use annette::mapping::{self, MappingModel, MappingRule};
+use annette::repro::campaign::fit_device;
+use annette::zoo;
+
+fn main() {
+    let fitted = fit_device("dpu-zcu102", 5, None).expect("campaign");
+    println!("learned mapping rules for {}:", fitted.entry.id);
+    for rule in &fitted.model.mapping.rules {
+        match rule {
+            MappingRule::Fuse { producer, consumer } => {
+                println!("  fuse   {producer} <- {consumer}");
+            }
+            MappingRule::Chain { producer, consumers } => {
+                println!("  chain  {producer} <- {}", consumers.join(" <- "));
+            }
+            MappingRule::Elide { op } => println!("  elide  {op}"),
+        }
+    }
+
+    let g = zoo::mobilenet::mobilenet_v1(224, 1000);
+    // "Before": the identity mapping — no rules, every costed layer its own
+    // execution unit, exactly what the analytical baselines cost.
+    let before = mapping::apply(&MappingModel::default(), &g);
+    // "After": the learned rewrite the DPU's compiler actually performs.
+    let after = mapping::apply(&fitted.model.mapping, &g);
+
+    println!(
+        "\n{}: {} layers -> {} units before mapping, {} after ({} layers fused, {} elided)",
+        g.name,
+        g.len(),
+        before.unit_count(),
+        after.unit_count(),
+        after.units.iter().map(|u| u.members.len()).sum::<usize>(),
+        after.elided.len(),
+    );
+
+    println!("\n{:<6} {:<22} {:<28}", "unit", "root", "fused members");
+    for (ui, unit) in after.units.iter().enumerate() {
+        let members = if unit.members.is_empty() {
+            "-".to_string()
+        } else {
+            unit.members
+                .iter()
+                .map(|&m| g.layers[m].name.clone())
+                .collect::<Vec<_>>()
+                .join(" + ")
+        };
+        println!("{ui:<6} {:<22} {members:<28}", g.layers[unit.root].name);
+    }
+    println!(
+        "\nelided: {}",
+        after
+            .elided
+            .iter()
+            .map(|&id| g.layers[id].name.clone())
+            .collect::<Vec<_>>()
+            .join(", ")
+    );
+}

@@ -2,11 +2,13 @@
 //!
 //! [`run_campaign`] sweeps micro-kernel configurations (single-layer graphs
 //! covering the channel / input-channel / spatial axes per layer class) across
-//! a pool of worker threads, then runs multi-layer fusion probes serially.
-//! The result is a [`BenchData`] document: the layer data + mapping data that
-//! the model generator fits platform models from. Results are deterministic
-//! regardless of thread count: every configuration derives its measurement
-//! seed from its index, not from scheduling order.
+//! a pool of worker threads, then runs multi-layer mapping probes serially:
+//! pairwise fusion probes, length-3 chain probes (producer → bn → act), and
+//! elision probes for reshape-class operators. The result is a [`BenchData`]
+//! document: the layer data + mapping data that the model generator fits
+//! platform models (including the [`crate::mapping::MappingModel`]) from.
+//! Results are deterministic regardless of thread count: every configuration
+//! derives its measurement seed from its index, not from scheduling order.
 
 use std::fs;
 use std::path::Path;
@@ -17,7 +19,47 @@ use crate::hw::device::Device;
 use crate::json::Value;
 use crate::rng::PHI;
 
-pub const FORMAT: &str = "annette-bench.v1";
+pub const FORMAT: &str = "annette-bench.v2";
+/// Previous bench format, still accepted by [`BenchData::from_value`]
+/// (documents without chain / elision probes load with those lists empty).
+pub const FORMAT_V1: &str = "annette-bench.v1";
+
+/// Fraction of a consumer's *standalone* cost that may survive in a chain
+/// for the probe to still call the chain fused. A pairwise probe compares
+/// `t_chain < t_producer + FUSION_RESIDUAL_FRACTION · t_consumer_solo`: the
+/// consumer must have (mostly) disappeared into the producer's unit. Chain
+/// probes use the *cheapest* chained consumer's solo time as the yardstick
+/// ([`chain_probe_fused`]), so a chain in which even one consumer survives
+/// standalone sits a full solo-cost above the threshold — far outside
+/// measurement noise — while a fully folded chain sits half a solo-cost
+/// below it.
+pub const FUSION_RESIDUAL_FRACTION: f64 = 0.5;
+
+/// Ceiling (milliseconds) under which an elision probe declares an operator
+/// free on the target: reshape-class ops a compiler removes measure as
+/// exactly zero on the simulators; real silicon would report timer noise.
+pub const ELISION_EPSILON_MS: f64 = 1e-6;
+
+/// Pairwise probe verdict: did `consumer` fold into `producer`'s unit?
+#[inline]
+pub fn pair_probe_fused(t_chain_ms: f64, t_producer_ms: f64, t_consumer_solo_ms: f64) -> bool {
+    t_chain_ms < t_producer_ms + FUSION_RESIDUAL_FRACTION * t_consumer_solo_ms
+}
+
+/// Chain probe verdict: did *every* chained consumer fold into the
+/// producer's unit? The residual over the producer's solo time must stay
+/// below [`FUSION_RESIDUAL_FRACTION`] of the cheapest consumer's solo time;
+/// any surviving consumer costs at least one full solo time.
+#[inline]
+pub fn chain_probe_fused(
+    t_chain_ms: f64,
+    t_producer_ms: f64,
+    t_consumers_solo_ms: &[f64],
+) -> bool {
+    let cheapest = t_consumers_solo_ms.iter().copied().fold(f64::INFINITY, f64::min);
+    cheapest.is_finite()
+        && t_chain_ms < t_producer_ms + FUSION_RESIDUAL_FRACTION * cheapest
+}
 
 /// One micro-kernel measurement.
 #[derive(Clone, Debug)]
@@ -35,7 +77,7 @@ pub struct MicroRecord {
     pub us: f64,
 }
 
-/// One fusion probe: does `producer → consumer` execute as one unit?
+/// One pairwise fusion probe: does `producer → consumer` execute as one unit?
 #[derive(Clone, Debug)]
 pub struct FusionProbe {
     pub producer: String,
@@ -46,16 +88,44 @@ pub struct FusionProbe {
     pub fused: bool,
 }
 
+/// One multi-op chain probe: does the whole `producer → consumers…` sequence
+/// collapse into a single execution unit?
+#[derive(Clone, Debug)]
+pub struct ChainProbe {
+    /// Producer layer class name.
+    pub producer: String,
+    /// Ordered consumer fusion keys of the probed chain.
+    pub consumers: Vec<String>,
+    pub t_producer_ms: f64,
+    /// Standalone cost of each consumer, on the producer's output shape.
+    pub t_consumers_ms: Vec<f64>,
+    pub t_chain_ms: f64,
+    pub fused: bool,
+}
+
+/// One elision probe: does the operator cost anything at all on the target?
+#[derive(Clone, Debug)]
+pub struct ElisionProbe {
+    /// Operator name ([`crate::graph::LayerKind::op_name`]).
+    pub op: String,
+    pub t_solo_ms: f64,
+    pub elided: bool,
+}
+
 /// Micro-kernel sweep results (per-layer data).
 #[derive(Clone, Debug, Default)]
 pub struct MicroData {
     pub records: Vec<MicroRecord>,
 }
 
-/// Fusion probe results (mapping data).
+/// Mapping probe results: pairwise fusion probes, multi-op chain probes,
+/// and elision probes — the raw material of the learned
+/// [`crate::mapping::MappingModel`].
 #[derive(Clone, Debug, Default)]
 pub struct MappingData {
     pub samples: Vec<FusionProbe>,
+    pub chains: Vec<ChainProbe>,
+    pub elisions: Vec<ElisionProbe>,
 }
 
 /// Everything a benchmark campaign produced.
@@ -289,10 +359,15 @@ fn measure_micro<D: Device + ?Sized>(
 
 const PROBE_PRODUCERS: [&str; 5] = ["conv", "dwconv", "fc", "pool", "add"];
 const PROBE_CONSUMERS: [&str; 2] = ["batchnorm", "act"];
+/// The consumer sequence of the length-3 chain probes (`producer → bn → act`
+/// — the ubiquitous fused triple).
+const PROBE_CHAIN: [&str; 2] = ["batchnorm", "act"];
+/// Operators the elision probes measure standalone.
+const PROBE_ELISIONS: [&str; 1] = ["flatten"];
 
-fn build_probe_graph(producer: &str, consumer: Option<&str>) -> Graph {
+fn build_probe_graph(producer: &str, consumers: &[&str]) -> Graph {
     let mut b = GraphBuilder::new("probe");
-    let x = match producer {
+    let mut x = match producer {
         "conv" => {
             let i = b.input(28, 28, 32);
             b.conv(i, 32, 3, 1)
@@ -315,17 +390,24 @@ fn build_probe_graph(producer: &str, consumer: Option<&str>) -> Graph {
         }
         other => panic!("unknown probe producer `{other}`"),
     };
-    match consumer {
-        Some("batchnorm") => {
-            b.batchnorm(x);
-        }
-        Some("act") => {
-            b.relu(x);
-        }
-        Some(other) => panic!("unknown probe consumer `{other}`"),
-        None => {}
+    for consumer in consumers {
+        x = match *consumer {
+            "batchnorm" => b.batchnorm(x),
+            "act" => b.relu(x),
+            other => panic!("unknown probe consumer `{other}`"),
+        };
     }
     b.finish().expect("probe graph is valid")
+}
+
+fn build_elision_graph(op: &str) -> Graph {
+    let mut b = GraphBuilder::new("probe-elide");
+    let i = b.input(8, 8, 8);
+    match op {
+        "flatten" => b.flatten(i),
+        other => panic!("unknown elision probe op `{other}`"),
+    };
+    b.finish().expect("elision probe graph is valid")
 }
 
 fn build_consumer_solo(consumer: &str, producer: &str) -> Graph {
@@ -348,10 +430,11 @@ fn build_consumer_solo(consumer: &str, producer: &str) -> Graph {
     b.finish().expect("probe graph is valid")
 }
 
-fn run_fusion_probes<D: Device + ?Sized>(dev: &D, runs: usize) -> Vec<FusionProbe> {
+fn run_mapping_probes<D: Device + ?Sized>(dev: &D, runs: usize) -> MappingData {
     let mut samples = Vec::new();
+    let mut chains = Vec::new();
     for producer in PROBE_PRODUCERS {
-        let gp = build_probe_graph(producer, None);
+        let gp = build_probe_graph(producer, &[]);
         let tp = dev.profile(&gp, runs, 0xFACE).total_ms();
         let pclass = gp
             .layers
@@ -360,14 +443,16 @@ fn run_fusion_probes<D: Device + ?Sized>(dev: &D, runs: usize) -> Vec<FusionProb
             .class()
             .as_str()
             .to_string();
+        let mut solo_ms = Vec::with_capacity(PROBE_CONSUMERS.len());
         for consumer in PROBE_CONSUMERS {
-            let gc = build_probe_graph(producer, Some(consumer));
+            let gc = build_probe_graph(producer, &[consumer]);
             let tc = dev.profile(&gc, runs, 0xFACE ^ 7).total_ms();
             let gs = build_consumer_solo(consumer, producer);
             let ts = dev.profile(&gs, runs, 0xFACE ^ 13).total_ms();
-            // Fused iff the chain costs clearly less than running both ops:
+            solo_ms.push(ts);
+            // Fused iff the pair costs clearly less than running both ops:
             // the consumer must have (mostly) disappeared.
-            let fused = tc < tp + 0.5 * ts;
+            let fused = pair_probe_fused(tc, tp, ts);
             samples.push(FusionProbe {
                 producer: pclass.clone(),
                 consumer: consumer.to_string(),
@@ -377,12 +462,51 @@ fn run_fusion_probes<D: Device + ?Sized>(dev: &D, runs: usize) -> Vec<FusionProb
                 fused,
             });
         }
+        // Length-3 chain probe: producer → bn → act as one graph. Fused only
+        // when *every* consumer disappeared (see `chain_probe_fused`). The
+        // chained ops sit on the producer's output shape, so their solo
+        // times are exactly the pairwise measurements above — reused, not
+        // re-profiled.
+        let gc3 = build_probe_graph(producer, &PROBE_CHAIN);
+        let tc3 = dev.profile(&gc3, runs, 0xFACE ^ 21).total_ms();
+        let solos: Vec<f64> = PROBE_CHAIN
+            .iter()
+            .map(|&chained| {
+                let idx = PROBE_CONSUMERS
+                    .iter()
+                    .position(|&c| c == chained)
+                    .expect("every chained consumer is probed pairwise");
+                solo_ms[idx]
+            })
+            .collect();
+        let fused = chain_probe_fused(tc3, tp, &solos);
+        chains.push(ChainProbe {
+            producer: pclass,
+            consumers: PROBE_CHAIN.iter().map(|c| c.to_string()).collect(),
+            t_producer_ms: tp,
+            t_consumers_ms: solos,
+            t_chain_ms: tc3,
+            fused,
+        });
     }
-    samples
+    let elisions = PROBE_ELISIONS
+        .iter()
+        .map(|&op| {
+            let g = build_elision_graph(op);
+            let t = dev.profile(&g, runs, 0xFACE ^ 34).total_ms();
+            ElisionProbe {
+                op: op.to_string(),
+                t_solo_ms: t,
+                elided: t < ELISION_EPSILON_MS,
+            }
+        })
+        .collect();
+    MappingData { samples, chains, elisions }
 }
 
 /// Run the full benchmark campaign: micro-kernel sweeps (multi-threaded) plus
-/// fusion probes. `runs` is the repetition count per measurement.
+/// mapping probes (pairwise fusion, length-3 chains, elision). `runs` is the
+/// repetition count per measurement.
 pub fn run_campaign<D: Device + ?Sized>(dev: &D, runs: usize, threads: usize) -> BenchData {
     let configs = micro_configs();
     let runs = runs.max(1);
@@ -405,11 +529,11 @@ pub fn run_campaign<D: Device + ?Sized>(dev: &D, runs: usize, threads: usize) ->
         .into_iter()
         .map(|s| s.expect("worker filled every slot"))
         .collect();
-    let samples = run_fusion_probes(dev, runs);
+    let mapping = run_mapping_probes(dev, runs);
     BenchData {
         device: dev.spec().name,
         micro: MicroData { records },
-        mapping: MappingData { samples },
+        mapping,
     }
 }
 
@@ -468,6 +592,82 @@ impl FusionProbe {
     }
 }
 
+impl ChainProbe {
+    fn to_value(&self) -> Value {
+        Value::Obj(vec![
+            ("producer".to_string(), Value::str(self.producer.clone())),
+            (
+                "consumers".to_string(),
+                Value::Arr(self.consumers.iter().map(|c| Value::str(c.clone())).collect()),
+            ),
+            ("t_producer_ms".to_string(), Value::num(self.t_producer_ms)),
+            (
+                "t_consumers_ms".to_string(),
+                Value::Arr(self.t_consumers_ms.iter().map(|&t| Value::num(t)).collect()),
+            ),
+            ("t_chain_ms".to_string(), Value::num(self.t_chain_ms)),
+            ("fused".to_string(), Value::Bool(self.fused)),
+        ])
+    }
+
+    fn from_value(v: &Value) -> Result<ChainProbe> {
+        let consumers: Vec<String> = v
+            .req_arr("consumers")?
+            .iter()
+            .map(|c| {
+                c.as_str()
+                    .map(str::to_string)
+                    .ok_or_else(|| Error::Json("chain consumer is not a string".to_string()))
+            })
+            .collect::<Result<_>>()?;
+        let t_consumers_ms: Vec<f64> = v
+            .req_arr("t_consumers_ms")?
+            .iter()
+            .map(|t| {
+                t.as_f64()
+                    .ok_or_else(|| Error::Json("chain solo time is not a number".to_string()))
+            })
+            .collect::<Result<_>>()?;
+        if consumers.len() != t_consumers_ms.len() {
+            return Err(Error::Json(
+                "chain probe has mismatched consumers / t_consumers_ms lengths".to_string(),
+            ));
+        }
+        Ok(ChainProbe {
+            producer: v.req_str("producer")?.to_string(),
+            consumers,
+            t_producer_ms: v.req_f64("t_producer_ms")?,
+            t_consumers_ms,
+            t_chain_ms: v.req_f64("t_chain_ms")?,
+            fused: v
+                .req("fused")?
+                .as_bool()
+                .ok_or_else(|| Error::Json("field `fused` is not a bool".to_string()))?,
+        })
+    }
+}
+
+impl ElisionProbe {
+    fn to_value(&self) -> Value {
+        Value::Obj(vec![
+            ("op".to_string(), Value::str(self.op.clone())),
+            ("t_solo_ms".to_string(), Value::num(self.t_solo_ms)),
+            ("elided".to_string(), Value::Bool(self.elided)),
+        ])
+    }
+
+    fn from_value(v: &Value) -> Result<ElisionProbe> {
+        Ok(ElisionProbe {
+            op: v.req_str("op")?.to_string(),
+            t_solo_ms: v.req_f64("t_solo_ms")?,
+            elided: v
+                .req("elided")?
+                .as_bool()
+                .ok_or_else(|| Error::Json("field `elided` is not a bool".to_string()))?,
+        })
+    }
+}
+
 impl BenchData {
     pub fn to_value(&self) -> Value {
         Value::Obj(vec![
@@ -481,16 +681,43 @@ impl BenchData {
                 "mapping".to_string(),
                 Value::Arr(self.mapping.samples.iter().map(|p| p.to_value()).collect()),
             ),
+            (
+                "chains".to_string(),
+                Value::Arr(self.mapping.chains.iter().map(|p| p.to_value()).collect()),
+            ),
+            (
+                "elisions".to_string(),
+                Value::Arr(self.mapping.elisions.iter().map(|p| p.to_value()).collect()),
+            ),
         ])
     }
 
     pub fn from_value(v: &Value) -> Result<BenchData> {
         let format = v.req_str("format")?;
-        if format != FORMAT {
+        if format != FORMAT && format != FORMAT_V1 {
             return Err(Error::Json(format!(
                 "unsupported bench format `{format}` (expected `{FORMAT}`)"
             )));
         }
+        // v1 documents predate chain / elision probes; load them empty.
+        let chains = match v.get("chains") {
+            Some(cv) => cv
+                .as_arr()
+                .ok_or_else(|| Error::Json("`chains` is not an array".to_string()))?
+                .iter()
+                .map(ChainProbe::from_value)
+                .collect::<Result<_>>()?,
+            None => Vec::new(),
+        };
+        let elisions = match v.get("elisions") {
+            Some(ev) => ev
+                .as_arr()
+                .ok_or_else(|| Error::Json("`elisions` is not an array".to_string()))?
+                .iter()
+                .map(ElisionProbe::from_value)
+                .collect::<Result<_>>()?,
+            None => Vec::new(),
+        };
         Ok(BenchData {
             device: v.req_str("device")?.to_string(),
             micro: MicroData {
@@ -506,6 +733,8 @@ impl BenchData {
                     .iter()
                     .map(FusionProbe::from_value)
                     .collect::<Result<_>>()?,
+                chains,
+                elisions,
             },
         })
     }
@@ -549,6 +778,8 @@ mod tests {
             );
         }
         assert_eq!(data.mapping.samples.len(), 10);
+        assert_eq!(data.mapping.chains.len(), 5, "one chain probe per producer");
+        assert_eq!(data.mapping.elisions.len(), 1);
     }
 
     #[test]
@@ -568,6 +799,47 @@ mod tests {
     }
 
     #[test]
+    fn dpu_chain_and_elision_probes_match_the_hidden_mapping() {
+        let dev = DpuDevice::zcu102();
+        let data = run_campaign(&dev, 3, default_threads());
+        // conv/dwconv/fc → bn → act all collapse on the DPU; pool and add
+        // chains leave the bn standing and must NOT register as chains.
+        let verdict = |producer: &str| {
+            data.mapping
+                .chains
+                .iter()
+                .find(|c| c.producer == producer)
+                .unwrap_or_else(|| panic!("no chain probe for {producer}"))
+                .fused
+        };
+        assert!(verdict("conv") && verdict("dwconv") && verdict("fc"));
+        assert!(!verdict("pool") && !verdict("elem"));
+        // Flatten measures as free and registers as elided.
+        let flat = &data.mapping.elisions[0];
+        assert_eq!(flat.op, "flatten");
+        assert!(flat.elided, "flatten cost {} ms", flat.t_solo_ms);
+    }
+
+    #[test]
+    fn probe_threshold_boundaries_are_exact() {
+        // The named constant, not a magic 0.5: a consumer surviving at
+        // exactly FUSION_RESIDUAL_FRACTION of its solo cost is NOT fused
+        // (strict less-than); epsilon below is.
+        let (tp, ts) = (10.0, 4.0);
+        let boundary = tp + FUSION_RESIDUAL_FRACTION * ts;
+        assert!(!pair_probe_fused(boundary, tp, ts));
+        assert!(pair_probe_fused(boundary - 1e-12, tp, ts));
+        assert!(!pair_probe_fused(boundary + 1e-12, tp, ts));
+        // Chain verdicts are gated on the *cheapest* consumer's solo cost.
+        let solos = [3.0, 5.0];
+        let chain_boundary = tp + FUSION_RESIDUAL_FRACTION * 3.0;
+        assert!(!chain_probe_fused(chain_boundary, tp, &solos));
+        assert!(chain_probe_fused(chain_boundary - 1e-12, tp, &solos));
+        // Degenerate: a chain with no consumers is never "fused".
+        assert!(!chain_probe_fused(0.0, tp, &[]));
+    }
+
+    #[test]
     fn bench_data_roundtrips_through_json() {
         let dev = DpuDevice::zcu102();
         let data = run_campaign(&dev, 1, 2);
@@ -577,5 +849,40 @@ mod tests {
         assert_eq!(back.micro.records.len(), data.micro.records.len());
         assert_eq!(back.micro.records[0].us, data.micro.records[0].us);
         assert_eq!(back.mapping.samples.len(), data.mapping.samples.len());
+        assert_eq!(back.mapping.chains.len(), data.mapping.chains.len());
+        assert_eq!(back.mapping.chains[0].t_chain_ms, data.mapping.chains[0].t_chain_ms);
+        assert_eq!(back.mapping.chains[0].consumers, data.mapping.chains[0].consumers);
+        assert_eq!(back.mapping.elisions.len(), data.mapping.elisions.len());
+        // A corrupted chain probe (solo-time list shorter than the consumer
+        // list) is rejected loudly instead of loading inconsistently.
+        let text = data
+            .to_value()
+            .to_string()
+            .replacen("\"t_consumers_ms\":[", "\"t_consumers_ms\":[99.5,", 1);
+        let err = BenchData::from_value(&Value::parse(&text).unwrap());
+        assert!(err.is_err(), "mismatched chain probe lengths must not load");
+    }
+
+    #[test]
+    fn v1_bench_documents_still_load_without_probe_extensions() {
+        let dev = DpuDevice::zcu102();
+        let data = run_campaign(&dev, 1, 2);
+        // Rewrite the document as a v1 reader would have produced it.
+        let text = data
+            .to_value()
+            .to_string()
+            .replace("annette-bench.v2", "annette-bench.v1");
+        let back = BenchData::from_value(&Value::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.micro.records.len(), data.micro.records.len());
+        assert_eq!(back.mapping.samples.len(), data.mapping.samples.len());
+        // (chains/elisions still present in the doc → still parsed; a true
+        // v1 doc simply lacks them.)
+        let mut stripped = String::from("{\"format\":\"annette-bench.v1\",\"device\":\"d\",");
+        stripped.push_str("\"micro\":[],\"mapping\":[]}");
+        let old = BenchData::from_value(&Value::parse(&stripped).unwrap()).unwrap();
+        assert!(old.mapping.chains.is_empty() && old.mapping.elisions.is_empty());
+        // Unknown formats still fail loudly.
+        let bad = text.replace("annette-bench.v1", "annette-bench.v9");
+        assert!(BenchData::from_value(&Value::parse(&bad).unwrap()).is_err());
     }
 }

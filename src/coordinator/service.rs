@@ -10,7 +10,10 @@
 //! * `{"op":"models"}` — list the served devices and model families.
 //! * `{"op":"estimate","network":<graph>,"kind":"mixed"}` — estimate a
 //!   network description graph; `kind` is optional and defaults to mixed.
-//!   Optional fields:
+//!   Verbose responses report the mapped execution-unit structure: each
+//!   unit carries its `root` layer id and the `members` layer ids the
+//!   mapping pass fused into it, and an `elided` array lists the zero-cost
+//!   layer ids. Optional fields:
 //!   * `"device":"<label>"` — route to that target (default: the first).
 //!   * `"fleet":true` — answer with per-device totals for *every* target
 //!     plus the predicted-fastest one (mutually exclusive with `device`).
@@ -235,13 +238,34 @@ impl Service {
                 }
                 out.push_str("{\"name\":");
                 write_json_str(out, &graph.layers[unit.root].name);
+                out.push_str(",\"root\":");
+                write_json_usize(out, unit.root);
                 out.push_str(",\"class\":");
                 write_json_str(out, unit.class);
                 out.push_str(",\"ms\":");
                 write_json_f64(out, unit.ms);
                 out.push_str(",\"fused\":");
                 write_json_usize(out, unit.fused);
+                // The fused member layer ids, so clients can reconstruct the
+                // mapped execution-unit graph, not just count collapsed ops.
+                out.push_str(",\"members\":[");
+                if unit.fused > 0 {
+                    for (j, &member) in cg.unit_members(i).iter().enumerate() {
+                        if j > 0 {
+                            out.push(',');
+                        }
+                        write_json_usize(out, member as usize);
+                    }
+                }
+                out.push(']');
                 out.push('}');
+            }
+            out.push_str("],\"elided\":[");
+            for (j, &id) in cg.elided(kind).iter().enumerate() {
+                if j > 0 {
+                    out.push(',');
+                }
+                write_json_usize(out, id as usize);
             }
             out.push(']');
         }
@@ -347,8 +371,23 @@ mod tests {
         assert!(!resp.req_arr("units").unwrap().is_empty());
         let unit = &resp.req_arr("units").unwrap()[0];
         assert!(unit.get("name").is_some());
+        assert!(unit.get("root").is_some());
         assert!(unit.get("class").is_some());
         assert!(unit.get("fused").is_some());
+        assert!(unit.get("members").is_some());
+        // The conv unit reports its fused member layer ids, not just a count.
+        let conv = resp
+            .req_arr("units")
+            .unwrap()
+            .iter()
+            .find(|u| u.req_str("class").unwrap() == "conv")
+            .expect("conv unit");
+        let members = conv.req_arr("members").unwrap();
+        assert_eq!(members.len(), conv.req_usize("fused").unwrap());
+        assert_eq!(members.len(), 2, "bn + relu fold into the conv");
+        // And the elided (zero-cost) layers are listed: at least the input.
+        let elided = resp.req_arr("elided").unwrap();
+        assert!(elided.iter().any(|v| v.as_usize() == Some(0)));
     }
 
     #[test]

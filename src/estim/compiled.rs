@@ -7,13 +7,14 @@
 //! 1. [`CompiledModel::compile`] runs once per fitted [`PlatformModel`]
 //!    (service startup, estimator construction). It flattens the per-class
 //!    coefficient lookup (`Vec<ClassModel>` + string compare) into a dense
-//!    `[CompiledClass; NUM_CLASSES]` table and the learned fusion-rule list
-//!    into a `NUM_CLASSES × NUM_FUSION_KEYS` boolean table.
+//!    `[CompiledClass; NUM_CLASSES]` table and carries the learned
+//!    [`MappingModel`] for the graph-compile step.
 //! 2. [`CompiledGraph::compile`] runs once per distinct graph. It derives
 //!    every feature an estimate needs — per-layer class ids, flops, ideal
-//!    compute/memory microseconds, PE-utilization corrections, fusion roots,
-//!    and CSR member lists — and bakes the per-layer unit latencies of all
-//!    four model families, plus their totals. Repeated estimates of the same
+//!    compute/memory microseconds, PE-utilization corrections, and the
+//!    execution units of the [`crate::mapping::apply`] rewrite pass baked
+//!    into CSR member lists — plus the per-layer unit latencies of all
+//!    four model families and their totals. Repeated estimates of the same
 //!    graph (the NAS-search / batch-zoo scenario) then reduce to a cache
 //!    lookup keyed by the graph's structural fingerprint.
 //!
@@ -27,8 +28,9 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
-use crate::graph::{assign_units, Graph, LayerClass, LayerKind, NUM_CLASSES, NUM_FUSION_KEYS};
+use crate::graph::{Graph, LayerClass, LayerKind, NUM_CLASSES};
 use crate::hw::device::{class_utils, DeviceSpec};
+use crate::mapping::{self, MappingModel};
 use crate::models::layer::ModelKind;
 use crate::models::platform::PlatformModel;
 
@@ -52,9 +54,6 @@ pub struct CompiledClass {
     pub align_out: usize,
     pub align_in: usize,
     pub align_w: usize,
-    /// Learned fusion rules: `fuse[k]` says a consumer with fusion-key index
-    /// `k` folds into a unit rooted at this class.
-    pub fuse: [bool; NUM_FUSION_KEYS],
 }
 
 impl CompiledClass {
@@ -66,7 +65,6 @@ impl CompiledClass {
             align_out: 1,
             align_in: 1,
             align_w: 1,
-            fuse: [false; NUM_FUSION_KEYS],
         }
     }
 }
@@ -86,6 +84,11 @@ pub struct CompiledModel {
     pub spec: DeviceSpec,
     /// Dense per-class table indexed by [`LayerClass::index`].
     pub classes: [CompiledClass; NUM_CLASSES],
+    /// The learned mapping model the graph-compile step rewrites units
+    /// with. Rule matching runs once per *distinct* graph (inside
+    /// [`CompiledGraph::compile`]), never on the per-estimate hot path, so
+    /// the rules stay in their source form rather than a flattened table.
+    pub mapping: MappingModel,
 }
 
 impl CompiledModel {
@@ -94,8 +97,8 @@ impl CompiledModel {
         self.id
     }
 
-    /// Flatten a fitted platform model. O(classes + fusion rules); never on
-    /// the hot path.
+    /// Flatten a fitted platform model. O(classes + mapping rules); never
+    /// on the hot path.
     pub fn compile(model: &PlatformModel) -> CompiledModel {
         let mut classes = [CompiledClass::absent(); NUM_CLASSES];
         for cm in &model.classes {
@@ -106,7 +109,6 @@ impl CompiledModel {
                 // lookup effectively did.
                 _ => continue,
             };
-            let fuse = classes[idx].fuse;
             classes[idx] = CompiledClass {
                 present: true,
                 stat: cm.stat,
@@ -114,40 +116,22 @@ impl CompiledModel {
                 align_out: cm.align_out,
                 align_in: cm.align_in,
                 align_w: cm.align_w,
-                fuse,
             };
-        }
-        for (producer, consumer) in &model.fusion {
-            let pidx = match LayerClass::parse(producer) {
-                Some(c) if c != LayerClass::None => c.index(),
-                _ => continue,
-            };
-            let kidx = match consumer.as_str() {
-                "batchnorm" => 0,
-                "act" => 1,
-                _ => continue,
-            };
-            classes[pidx].fuse[kidx] = true;
         }
         CompiledModel {
             id: NEXT_MODEL_ID.fetch_add(1, Ordering::Relaxed),
             spec: model.spec.clone(),
             classes,
+            mapping: model.mapping.clone(),
         }
     }
 
-    /// The learned fusion predicate as two array indexings — equivalent to
-    /// [`PlatformModel::fusable`]'s linear scan over string pairs.
+    /// The learned pairwise fusion predicate — equivalent to
+    /// [`PlatformModel::fusable`]. Chain and elision rules act through
+    /// [`crate::mapping::apply`] at graph-compile time.
     #[inline]
     pub fn fusable(&self, producer: LayerClass, consumer: &LayerKind) -> bool {
-        let pidx = producer.index();
-        if pidx >= NUM_CLASSES {
-            return false;
-        }
-        match consumer.fusion_key_index() {
-            Some(kidx) => self.classes[pidx].fuse[kidx],
-            None => false,
-        }
+        self.mapping.pair_fusable(producer, consumer)
     }
 }
 
@@ -192,7 +176,8 @@ pub struct CompiledGraph {
     /// Every costed layer id, ascending — the units of the analytical
     /// baselines, which have no mapping model.
     solo_units: Vec<u32>,
-    /// Fusion-root layer ids, ascending — the units of the fitted families.
+    /// Mapped-unit root layer ids, ascending — the units of the fitted
+    /// families, from the [`crate::mapping::apply`] pass.
     fused_units: Vec<u32>,
     /// CSR offsets into `members`: unit `i` of the fused path owns
     /// `members[member_start[i]..member_start[i+1]]`.
@@ -200,6 +185,13 @@ pub struct CompiledGraph {
     /// Fused member layer ids (excluding roots), grouped per unit in layer
     /// order.
     members: Vec<u32>,
+    /// Layer ids the mapping pass elided (uncosted IR ops + rule-elided
+    /// operators), ascending — the zero-cost set of the fitted families.
+    elided_mapped: Vec<u32>,
+    /// Uncosted layer ids (IR classes with no cost model), ascending — the
+    /// zero-cost set of the analytical baselines, which have no mapping
+    /// model to elide anything further.
+    uncosted: Vec<u32>,
 }
 
 impl CompiledGraph {
@@ -217,9 +209,11 @@ impl CompiledGraph {
             vec![0.0f64; n],
         ];
         let mut solo_units: Vec<u32> = Vec::new();
+        let mut uncosted: Vec<u32> = Vec::new();
         for lay in &g.layers {
             let class = lay.class();
             if class == LayerClass::None {
+                uncosted.push(lay.id as u32);
                 continue;
             }
             let ci = class.index();
@@ -256,40 +250,18 @@ impl CompiledGraph {
             };
         }
 
-        // Fusion roots under the learned mapping model (union-find flavored:
-        // producers precede consumers, so one forward pass resolves roots).
-        let roots = assign_units(g, |p, k| model.fusable(p, k));
-        let fused_units: Vec<u32> = g
-            .layers
-            .iter()
-            .filter(|lay| roots[lay.id] == lay.id && class_idx[lay.id] != UNCOSTED)
-            .map(|lay| lay.id as u32)
-            .collect();
-        // Root layer id → fused-unit index, then CSR member lists.
-        let mut unit_of_root = vec![u32::MAX; n];
-        for (ui, &root) in fused_units.iter().enumerate() {
-            unit_of_root[root as usize] = ui as u32;
+        // Execution units under the learned mapping model: the one rewrite
+        // pass every mapping consumer shares, baked into CSR member lists.
+        let mapped = mapping::apply(&model.mapping, g);
+        let fused_units: Vec<u32> = mapped.units.iter().map(|u| u.root as u32).collect();
+        let mut member_start = Vec::with_capacity(mapped.units.len() + 1);
+        member_start.push(0u32);
+        let mut members: Vec<u32> = Vec::new();
+        for unit in &mapped.units {
+            members.extend(unit.members.iter().map(|&m| m as u32));
+            member_start.push(members.len() as u32);
         }
-        let mut member_start = vec![0u32; fused_units.len() + 1];
-        for lay in &g.layers {
-            let root = roots[lay.id];
-            if root != lay.id && unit_of_root[root] != u32::MAX {
-                member_start[unit_of_root[root] as usize + 1] += 1;
-            }
-        }
-        for i in 1..member_start.len() {
-            member_start[i] += member_start[i - 1];
-        }
-        let mut cursor: Vec<u32> = member_start[..member_start.len() - 1].to_vec();
-        let mut members = vec![0u32; *member_start.last().unwrap() as usize];
-        for lay in &g.layers {
-            let root = roots[lay.id];
-            if root != lay.id && unit_of_root[root] != u32::MAX {
-                let ui = unit_of_root[root] as usize;
-                members[cursor[ui] as usize] = lay.id as u32;
-                cursor[ui] += 1;
-            }
-        }
+        let elided_mapped: Vec<u32> = mapped.elided.iter().map(|&id| id as u32).collect();
 
         // Per-family totals, accumulated in unit order so the sums are
         // bit-identical to `Estimate::total_ms` over the reference path.
@@ -316,6 +288,8 @@ impl CompiledGraph {
             fused_units,
             member_start,
             members,
+            elided_mapped,
+            uncosted,
         }
     }
 
@@ -370,6 +344,18 @@ impl CompiledGraph {
     /// the root), in layer order.
     pub fn unit_members(&self, ui: usize) -> &[u32] {
         &self.members[self.member_start[ui] as usize..self.member_start[ui + 1] as usize]
+    }
+
+    /// Zero-cost layer ids under `kind`, ascending. The fitted families
+    /// report the mapping pass's elision set (uncosted IR ops plus
+    /// rule-elided operators); the analytical baselines, which carry no
+    /// mapping model, report only the IR-uncosted layers.
+    pub fn elided(&self, kind: ModelKind) -> &[u32] {
+        if kind.uses_fusion() {
+            &self.elided_mapped
+        } else {
+            &self.uncosted
+        }
     }
 }
 
@@ -501,6 +487,10 @@ mod tests {
             covered += 1 + cg.unit_members(ui).len();
         }
         assert_eq!(covered, costed);
+        // The elided set is the exact complement, for every family.
+        for kind in ModelKind::ALL {
+            assert_eq!(cg.elided(kind).len(), g.len() - costed);
+        }
         // Totals are the sums of their unit views.
         for kind in ModelKind::ALL {
             let sum: f64 = cg.units(kind).map(|u| u.ms).sum();

@@ -14,8 +14,9 @@
 use std::sync::Arc;
 
 use crate::estim::compiled::{CompiledGraph, CompiledModel, GraphCache};
-use crate::graph::{assign_units, Graph, LayerClass};
+use crate::graph::{Graph, LayerClass};
 use crate::hw::device::class_utils;
+use crate::mapping;
 use crate::models::layer::ModelKind;
 use crate::models::platform::PlatformModel;
 
@@ -37,12 +38,18 @@ pub struct UnitEstimate {
     pub ms: f64,
 }
 
-/// A layer-wise latency estimate for one network.
+/// A layer-wise latency estimate for one network: the mapped execution-unit
+/// structure (units with their fused members, plus the elided zero-cost
+/// layers) with a predicted latency per unit.
 #[derive(Clone, Debug)]
 pub struct Estimate {
     pub network: String,
     pub kind: ModelKind,
     pub units: Vec<UnitEstimate>,
+    /// Layer ids that produce no execution unit and no cost, ascending. For
+    /// the fitted families this is the mapping pass's elision set; the
+    /// analytical baselines report the IR-uncosted layers.
+    pub elided: Vec<usize>,
 }
 
 impl Estimate {
@@ -117,6 +124,7 @@ impl<'a> Estimator<'a> {
             network: graph.name.clone(),
             kind,
             units,
+            elided: cg.elided(kind).iter().map(|&id| id as usize).collect(),
         }
     }
 
@@ -135,18 +143,27 @@ impl<'a> Estimator<'a> {
     pub fn estimate_uncompiled_with(&self, graph: &Graph, kind: ModelKind) -> Estimate {
         let spec = &self.model.spec;
         // The analytical baselines have no mapping model: every layer is its
-        // own unit. The fitted families reconstruct fusion.
-        let roots = match kind {
-            ModelKind::Roofline | ModelKind::RefinedRoofline => {
-                (0..graph.layers.len()).collect::<Vec<usize>>()
-            }
+        // own unit and only IR-uncosted layers are free. The fitted families
+        // run the graph through the learned mapping pass.
+        let (roots, elided) = match kind {
+            ModelKind::Roofline | ModelKind::RefinedRoofline => (
+                (0..graph.layers.len()).collect::<Vec<usize>>(),
+                graph
+                    .layers
+                    .iter()
+                    .filter(|lay| lay.class() == LayerClass::None)
+                    .map(|lay| lay.id)
+                    .collect::<Vec<usize>>(),
+            ),
             ModelKind::Statistical | ModelKind::Mixed => {
-                assign_units(graph, |p, k| self.model.fusable(p, k))
+                let mapped = mapping::apply(&self.model.mapping, graph);
+                (mapped.root_of, mapped.elided)
             }
         };
+        let is_elided = |id: usize| elided.binary_search(&id).is_ok();
         let mut units: Vec<UnitEstimate> = Vec::new();
         for lay in &graph.layers {
-            if roots[lay.id] != lay.id || lay.class() == LayerClass::None {
+            if roots[lay.id] != lay.id || is_elided(lay.id) {
                 continue;
             }
             let class = lay.class();
@@ -211,6 +228,7 @@ impl<'a> Estimator<'a> {
             network: graph.name.clone(),
             kind,
             units,
+            elided,
         }
     }
 
@@ -290,9 +308,12 @@ mod tests {
         assert!(est.units.len() < g.len());
         let conv_unit = est.units.iter().find(|u| u.class == "conv").unwrap();
         assert_eq!(conv_unit.members.len(), 2);
+        // The input layer is elided (zero cost, no unit) in every family.
+        assert!(est.elided.contains(&0));
         // Analytical roofline has no mapping model: one unit per costed layer.
         let roof = Estimator::new(&model).estimate_with(&g, ModelKind::Roofline);
         assert!(roof.units.len() > est.units.len());
+        assert!(roof.elided.contains(&0));
     }
 
     #[test]

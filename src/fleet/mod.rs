@@ -274,7 +274,7 @@ mod tests {
             let device = (m.entry.build)();
             let bench = run_campaign(device.as_ref(), 1, default_threads());
             let solo = PlatformModel::fit(&device.spec(), &bench);
-            assert_eq!(solo.fusion, m.model.fusion, "{}", m.entry.id);
+            assert_eq!(solo.mapping, m.model.mapping, "{}", m.entry.id);
             assert_eq!(solo.classes.len(), m.model.classes.len());
             for (a, b) in solo.classes.iter().zip(&m.model.classes) {
                 assert_eq!(a.class, b.class);
@@ -305,5 +305,6 @@ mod tests {
         assert!(dir.join("tpu-edge/bench.json").exists());
         let loaded = PlatformModel::load(dir.join("tpu-edge/model.json")).unwrap();
         assert_eq!(loaded.spec, fleet.members()[0].model.spec);
+        assert_eq!(loaded.mapping, fleet.members()[0].model.mapping);
     }
 }

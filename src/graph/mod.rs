@@ -116,8 +116,9 @@ impl LayerKind {
     }
 
     /// The fusion-rule key of a foldable consumer op, or `None` when this
-    /// operator can never be folded into a producer's unit. The simulator and
-    /// the learned mapping model both key their fusion tables on this.
+    /// operator can never be folded into a producer's unit. The simulator's
+    /// hidden mapping and the learned [`crate::mapping::MappingModel`] both
+    /// key their fuse/chain rules on this.
     pub fn fusion_key(&self) -> Option<&'static str> {
         match self {
             LayerKind::BatchNorm => Some("batchnorm"),
@@ -125,20 +126,7 @@ impl LayerKind {
             _ => None,
         }
     }
-
-    /// Dense index of [`Self::fusion_key`] (0 = batchnorm, 1 = act), used by
-    /// the compiled fusion table on the estimation hot path.
-    pub fn fusion_key_index(&self) -> Option<usize> {
-        match self {
-            LayerKind::BatchNorm => Some(0),
-            LayerKind::Activation { .. } => Some(1),
-            _ => None,
-        }
-    }
 }
-
-/// Number of distinct fusion keys [`LayerKind::fusion_key_index`] can return.
-pub const NUM_FUSION_KEYS: usize = 2;
 
 /// Modeling class a layer belongs to. Mapping and layer models are fitted per
 /// class, not per operator: all elementwise ops share one cost structure, and
@@ -587,30 +575,6 @@ impl Graph {
     }
 }
 
-/// Assign every layer to an execution unit under a fusion predicate.
-///
-/// Returns, per layer, the id of the unit root it executes in. A layer joins
-/// its producer's unit when it is a single-input foldable op and
-/// `fusable(root_class, consumer_kind)` holds; the mapping model supplies the
-/// predicate at estimation time, the simulator at profile time.
-pub fn assign_units<F>(g: &Graph, fusable: F) -> Vec<usize>
-where
-    F: Fn(LayerClass, &LayerKind) -> bool,
-{
-    let mut roots = vec![0usize; g.layers.len()];
-    for lay in &g.layers {
-        roots[lay.id] = lay.id;
-        if lay.inputs.len() == 1 {
-            let root = roots[lay.inputs[0]];
-            let producer = &g.layers[root];
-            if producer.class() != LayerClass::None && fusable(producer.class(), &lay.kind) {
-                roots[lay.id] = root;
-            }
-        }
-    }
-    roots
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -682,19 +646,5 @@ mod tests {
         assert_ne!(g.fingerprint(), rekinded.fingerprint());
         // The two lanes are independent.
         assert_ne!(g.structural_hash(0), g.structural_hash(0x5bd1_e995));
-    }
-
-    #[test]
-    fn fusion_assigns_bn_relu_to_conv_unit() {
-        let g = small_graph();
-        let roots = assign_units(&g, |pc, kind| {
-            pc == LayerClass::Conv
-                && matches!(kind, LayerKind::BatchNorm | LayerKind::Activation { .. })
-        });
-        // input, conv, bn, relu, gap, fc, softmax
-        assert_eq!(roots[1], 1);
-        assert_eq!(roots[2], 1);
-        assert_eq!(roots[3], 1);
-        assert_eq!(roots[4], 4);
     }
 }

@@ -13,8 +13,8 @@ pub struct DpuDevice {
 impl DpuDevice {
     pub fn zcu102() -> Self {
         DpuDevice {
-            sim: SimDevice {
-                spec: DeviceSpec {
+            sim: SimDevice::new(
+                DeviceSpec {
                     name: "ZCU102-DPU-sim".to_string(),
                     peak_gops: 2400.0,
                     bandwidth_gbs: 19.2,
@@ -25,13 +25,13 @@ impl DpuDevice {
                 },
                 // Hidden silicon behavior — learnable only through benchmarks.
                 // Order: [conv, dwconv, pool, fc, elem, mem]
-                params: SimParams {
+                SimParams {
                     base_eff: [0.82, 0.30, 0.55, 0.60, 0.35, 0.90],
                     mem_eff: [0.60, 0.50, 0.85, 0.80, 0.85, 0.90],
                     overhead_us: [35.0, 35.0, 25.0, 30.0, 18.0, 12.0],
                     noise_sigma: 0.01,
                 },
-                fused: vec![
+                vec![
                     (LayerClass::Conv, "batchnorm"),
                     (LayerClass::Conv, "act"),
                     (LayerClass::DwConv, "batchnorm"),
@@ -41,8 +41,8 @@ impl DpuDevice {
                     (LayerClass::Elem, "act"),
                 ],
                 // Weights stream from DDR each run anyway; no resident buffer.
-                spill: None,
-            },
+                None,
+            ),
         }
     }
 }

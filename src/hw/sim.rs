@@ -25,8 +25,9 @@
 //! *non-linear* effect the fitted models can only approximate, exactly like
 //! real accelerator cliffs.
 
-use crate::graph::{assign_units, Graph, LayerClass, LayerKind};
+use crate::graph::{Graph, LayerClass};
 use crate::hw::device::{class_utils, Device, DeviceSpec, LayerTiming, Profile};
+use crate::mapping::{self, MappingModel, MappingRule};
 use crate::rng::{Rng, PHI};
 
 /// Hidden (non-datasheet) characteristics, indexed by `LayerClass::index()`:
@@ -60,14 +61,46 @@ pub struct SimDevice {
     pub fused: Vec<FusedPair>,
     /// Present on devices whose weights normally stay on-chip.
     pub spill: Option<SpillModel>,
+    /// Hidden mapping model, derived from `fused` on first profile (the
+    /// capability table is fixed at construction) and cached: profiling is
+    /// called hundreds of times per campaign.
+    mapping: std::sync::OnceLock<MappingModel>,
 }
 
 impl SimDevice {
-    fn fusable(&self, producer: LayerClass, consumer: &LayerKind) -> bool {
-        match consumer.fusion_key() {
-            Some(key) => self.fused.iter().any(|(p, c)| *p == producer && *c == key),
-            None => false,
+    pub fn new(
+        spec: DeviceSpec,
+        params: SimParams,
+        fused: Vec<FusedPair>,
+        spill: Option<SpillModel>,
+    ) -> SimDevice {
+        SimDevice {
+            spec,
+            params,
+            fused,
+            spill,
+            mapping: std::sync::OnceLock::new(),
         }
+    }
+
+    /// The device's *hidden* mapping model — the ground truth the benchmark
+    /// probes have to rediscover. Pairwise fold rules from the capability
+    /// table plus the reshape elisions every simulated compiler performs,
+    /// applied through the same [`crate::mapping::apply`] pass the
+    /// estimation side uses (single source of mapping semantics).
+    fn mapping(&self) -> &MappingModel {
+        self.mapping.get_or_init(|| {
+            let mut rules: Vec<MappingRule> = self
+                .fused
+                .iter()
+                .map(|&(p, c)| MappingRule::Fuse {
+                    producer: p.as_str().to_string(),
+                    consumer: c.to_string(),
+                })
+                .collect();
+            rules.push(MappingRule::Elide { op: "flatten".to_string() });
+            MappingModel { rules }
+        })
     }
 
     /// Noise-free unit latency in microseconds.
@@ -109,16 +142,16 @@ impl Device for SimDevice {
 
     fn profile(&self, graph: &Graph, runs: usize, seed: u64) -> Profile {
         let runs = runs.max(1);
-        let roots = assign_units(graph, |p, k| self.fusable(p, k));
+        let mapped = mapping::apply(self.mapping(), graph);
         let mut layers = Vec::with_capacity(graph.layers.len());
         for lay in &graph.layers {
-            let fused = roots[lay.id] != lay.id;
-            if fused || lay.class() == LayerClass::None {
+            let fused = mapped.is_fused(lay.id);
+            if fused || mapped.is_elided(lay.id) {
                 layers.push(LayerTiming {
                     layer_id: lay.id,
                     name: lay.name.clone(),
                     ms: 0.0,
-                    fused_into: if fused { Some(roots[lay.id]) } else { None },
+                    fused_into: if fused { Some(mapped.root_of[lay.id]) } else { None },
                 });
                 continue;
             }

@@ -34,8 +34,8 @@ pub struct TpuDevice {
 impl TpuDevice {
     pub fn edge() -> Self {
         TpuDevice {
-            sim: SimDevice {
-                spec: DeviceSpec {
+            sim: SimDevice::new(
+                DeviceSpec {
                     name: "EdgeTPU-SA-sim".to_string(),
                     peak_gops: 4000.0,
                     bandwidth_gbs: 25.6,
@@ -46,7 +46,7 @@ impl TpuDevice {
                 },
                 // Hidden silicon behavior — learnable only through benchmarks.
                 // Order: [conv, dwconv, pool, fc, elem, mem]
-                params: SimParams {
+                SimParams {
                     base_eff: [0.92, 0.12, 0.40, 0.70, 0.25, 0.85],
                     mem_eff: [0.78, 0.50, 0.80, 0.85, 0.75, 0.92],
                     overhead_us: [15.0, 20.0, 12.0, 14.0, 8.0, 6.0],
@@ -54,7 +54,7 @@ impl TpuDevice {
                 },
                 // The compiler folds BN and activations into any MAC-array
                 // producer; elementwise/pool units run standalone.
-                fused: vec![
+                vec![
                     (LayerClass::Conv, "batchnorm"),
                     (LayerClass::Conv, "act"),
                     (LayerClass::DwConv, "batchnorm"),
@@ -62,11 +62,11 @@ impl TpuDevice {
                     (LayerClass::Fc, "batchnorm"),
                     (LayerClass::Fc, "act"),
                 ],
-                spill: Some(SpillModel {
+                Some(SpillModel {
                     buffer_bytes: ON_CHIP_BUFFER_BYTES,
                     mem_penalty: 3.0,
                 }),
-            },
+            ),
         }
     }
 

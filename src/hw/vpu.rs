@@ -13,8 +13,8 @@ pub struct VpuDevice {
 impl VpuDevice {
     pub fn ncs2() -> Self {
         VpuDevice {
-            sim: SimDevice {
-                spec: DeviceSpec {
+            sim: SimDevice::new(
+                DeviceSpec {
                     name: "NCS2-VPU-sim".to_string(),
                     peak_gops: 1000.0,
                     bandwidth_gbs: 10.0,
@@ -25,13 +25,13 @@ impl VpuDevice {
                 },
                 // Hidden silicon behavior — learnable only through benchmarks.
                 // Order: [conv, dwconv, pool, fc, elem, mem]
-                params: SimParams {
+                SimParams {
                     base_eff: [0.65, 0.50, 0.50, 0.55, 0.40, 0.85],
                     mem_eff: [0.70, 0.55, 0.80, 0.85, 0.80, 0.90],
                     overhead_us: [150.0, 140.0, 90.0, 110.0, 60.0, 40.0],
                     noise_sigma: 0.015,
                 },
-                fused: vec![
+                vec![
                     (LayerClass::Conv, "batchnorm"),
                     (LayerClass::Conv, "act"),
                     (LayerClass::DwConv, "batchnorm"),
@@ -39,8 +39,8 @@ impl VpuDevice {
                     (LayerClass::Fc, "act"),
                 ],
                 // Weights stream over USB/DDR each run; no resident buffer.
-                spill: None,
-            },
+                None,
+            ),
         }
     }
 }

@@ -11,15 +11,19 @@
 //!    resolved through the [`hw::registry`] (simulated ZCU102 DPU, NCS2
 //!    VPU, and an Edge-TPU-class systolic array), and
 //!    [`models::PlatformModel::fit`] generates the stacked platform model:
-//!    mapping models (fusion rules, PE-alignment) plus per-layer-class
-//!    roofline / refined-roofline / statistical / mixed latency models.
+//!    a [`mapping::MappingModel`] of graph-rewrite rules (pairwise fusion,
+//!    multi-op chains, elision — learned from dedicated probes) plus
+//!    per-layer-class roofline / refined-roofline / statistical / mixed
+//!    latency models with detected PE-alignment.
 //!    [`fleet::Fleet`] runs this for every registered device in parallel
 //!    and answers cross-device queries (per-device estimates, best-device
 //!    selection, full latency matrices).
 //! 2. **Estimation phase** — [`estim::Estimator`] predicts layer-wise
 //!    latency for a network description [`graph::Graph`] without compiling
-//!    or executing it, reconstructing the execution-unit graph from the
-//!    learned fusion rules. The estimator runs on a compiled hot path
+//!    or executing it. The [`mapping::apply`] rewrite pass — the single
+//!    source of mapping truth shared with the simulators — turns the graph
+//!    into an explicit [`mapping::MappedGraph`] of execution units under
+//!    the learned rules. The estimator runs on a compiled hot path
 //!    ([`estim::CompiledModel`] / [`estim::CompiledGraph`]): platform models
 //!    flatten to index-addressed coefficient tables at construction, graphs
 //!    compile once into struct-of-arrays feature form cached by structural
@@ -39,6 +43,7 @@ pub mod fleet;
 pub mod graph;
 pub mod hw;
 pub mod json;
+pub mod mapping;
 pub mod metrics;
 pub mod models;
 pub mod par;
@@ -63,7 +68,8 @@ pub mod prelude {
     pub use crate::hw::registry::{self, DeviceEntry};
     pub use crate::hw::tpu::TpuDevice;
     pub use crate::hw::vpu::VpuDevice;
-    pub use crate::metrics::{mae, mape, spearman_rho};
+    pub use crate::mapping::{MappedGraph, MappedUnit, MappingModel, MappingRule};
+    pub use crate::metrics::{mae, mape, mape_defined, spearman_rho};
     pub use crate::models::layer::ModelKind;
     pub use crate::models::platform::PlatformModel;
     pub use crate::par::fan_indexed;

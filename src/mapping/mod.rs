@@ -1,0 +1,36 @@
+//! The mapping pass: rule-based graph rewriting from a frontend [`Graph`]
+//! to an explicit [`MappedGraph`] of execution units.
+//!
+//! ANNETTE's Fig. 2 stacks a *mapping model* — the graph transformations a
+//! target compiler applies (operator fusion, elision of zero-cost reshapes) —
+//! underneath the per-layer latency models. This module is that layer made
+//! first-class: a [`MappingModel`] holds benchmark-derived rewrite rules, and
+//! [`apply`] is the **single** pass that turns a graph into execution units.
+//! Every mapping consumer — the device simulators' hidden truth
+//! ([`crate::hw::sim::SimDevice`]), the fit pipeline
+//! ([`crate::models::PlatformModel::fit`]), the compiled estimator
+//! ([`crate::estim::CompiledGraph`]), the fleet, and the line-JSON service —
+//! goes through it; nothing else re-implements unit assignment.
+//!
+//! Three rule kinds, in increasing specificity:
+//!
+//! * [`MappingRule::Fuse`] — the pairwise table: a consumer with a given
+//!   fusion key folds into any unit rooted at a given producer class,
+//!   regardless of what the unit has already absorbed. This is the
+//!   degenerate case the original implementation supported; a model holding
+//!   only `Fuse` rules maps bit-identically to the old pairwise predicate.
+//! * [`MappingRule::Chain`] — a learned multi-op chain: a unit rooted at a
+//!   producer class absorbs exactly an ordered sequence of consumer fusion
+//!   keys (each prefix is absorbable). Learned from the orchestrator's
+//!   length-3 probes; expresses compilers that fold `conv→bn→act` as one
+//!   unit even where no pairwise closure would predict it.
+//! * [`MappingRule::Elide`] — an operator the target compiler removes
+//!   entirely (reshape-class ops): zero cost, no execution unit.
+//!
+//! [`Graph`]: crate::graph::Graph
+
+pub mod pass;
+pub mod rules;
+
+pub use pass::{apply, MappedGraph, MappedUnit};
+pub use rules::{MappingModel, MappingRule, FORMAT};

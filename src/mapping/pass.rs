@@ -1,0 +1,235 @@
+//! The graph-rewrite pass: apply a [`MappingModel`]'s rules to a [`Graph`]
+//! and produce the explicit [`MappedGraph`] execution-unit artifact.
+
+use crate::graph::{Graph, LayerClass};
+use crate::mapping::rules::MappingModel;
+
+/// One execution unit: a costed root layer plus the consumers the mapping
+/// rules folded into it (in layer order, excluding the root).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MappedUnit {
+    pub root: usize,
+    pub members: Vec<usize>,
+}
+
+/// The mapping pass's output: a partition of the graph's layers into
+/// execution units, fused members, and elided (zero-cost) layers. Every
+/// layer appears in exactly one of the three roles.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MappedGraph {
+    /// Per layer, the id of the unit root it executes in (its own id for
+    /// roots and for elided layers). Idempotent: `root_of[root_of[i]] ==
+    /// root_of[i]`.
+    pub root_of: Vec<usize>,
+    /// Execution units, ascending by root id.
+    pub units: Vec<MappedUnit>,
+    /// Layers that produce no execution unit and no cost (uncosted IR ops
+    /// such as `input`, plus operators removed by elision rules), ascending.
+    pub elided: Vec<usize>,
+}
+
+impl MappedGraph {
+    /// Number of execution units.
+    pub fn unit_count(&self) -> usize {
+        self.units.len()
+    }
+
+    /// Whether layer `id` was elided (no unit, zero cost).
+    pub fn is_elided(&self, id: usize) -> bool {
+        self.elided.binary_search(&id).is_ok()
+    }
+
+    /// Whether layer `id` was fused into another layer's unit.
+    pub fn is_fused(&self, id: usize) -> bool {
+        self.root_of[id] != id
+    }
+}
+
+/// Rewrite `g` under `model`'s rules: the single source of mapping truth.
+///
+/// One forward pass over the (topologically ordered) layers. A layer joins
+/// its producer's unit when it has exactly one producer and the model admits
+/// the absorption ([`MappingModel`]'s pairwise or chain rules, tracked
+/// against the fusion-key sequence the unit has absorbed so far). Uncosted
+/// IR ops and rule-elided operators become `elided`: no unit, no cost, and
+/// nothing can fuse *into* them.
+///
+/// With a pairwise-only model this reproduces the original
+/// `assign_units(g, fusable)` fold exactly, layer for layer.
+pub fn apply(model: &MappingModel, g: &Graph) -> MappedGraph {
+    let n = g.layers.len();
+    let mut root_of: Vec<usize> = (0..n).collect();
+    // Fusion-key sequence absorbed so far, tracked per unit root.
+    let mut absorbed: Vec<Vec<&'static str>> = vec![Vec::new(); n];
+    let mut elided_flag = vec![false; n];
+    for lay in &g.layers {
+        let zero_cost = lay.class() == LayerClass::None || model.elides(&lay.kind);
+        elided_flag[lay.id] = zero_cost;
+        if zero_cost || lay.inputs.len() != 1 {
+            continue;
+        }
+        let root = root_of[lay.inputs[0]];
+        if elided_flag[root] {
+            continue;
+        }
+        let producer_class = g.layers[root].class();
+        if model.fusable_at(producer_class, &absorbed[root], &lay.kind) {
+            root_of[lay.id] = root;
+            if let Some(key) = lay.kind.fusion_key() {
+                absorbed[root].push(key);
+            }
+        }
+    }
+    let mut units: Vec<MappedUnit> = Vec::new();
+    let mut unit_of_root = vec![usize::MAX; n];
+    let mut elided = Vec::new();
+    for lay in &g.layers {
+        if elided_flag[lay.id] {
+            elided.push(lay.id);
+        } else if root_of[lay.id] == lay.id {
+            unit_of_root[lay.id] = units.len();
+            units.push(MappedUnit { root: lay.id, members: Vec::new() });
+        }
+    }
+    for lay in &g.layers {
+        let root = root_of[lay.id];
+        if root != lay.id {
+            units[unit_of_root[root]].members.push(lay.id);
+        }
+    }
+    MappedGraph { root_of, units, elided }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+    use crate::mapping::rules::MappingRule;
+
+    fn pairwise_model() -> MappingModel {
+        MappingModel::from_pairs(vec![
+            ("conv".to_string(), "batchnorm".to_string()),
+            ("conv".to_string(), "act".to_string()),
+        ])
+    }
+
+    fn small_graph() -> crate::graph::Graph {
+        let mut b = GraphBuilder::new("t");
+        let i = b.input(8, 8, 3);
+        let x = b.conv_bn_relu(i, 16, 3, 1);
+        b.classifier(x, 10);
+        b.finish().unwrap()
+    }
+
+    #[test]
+    fn pairwise_rules_assign_bn_relu_to_conv_unit() {
+        // input(0), conv(1), bn(2), relu(3), gap(4), fc(5), softmax(6)
+        let g = small_graph();
+        let mapped = apply(&pairwise_model(), &g);
+        assert_eq!(mapped.root_of[1], 1);
+        assert_eq!(mapped.root_of[2], 1);
+        assert_eq!(mapped.root_of[3], 1);
+        assert_eq!(mapped.root_of[4], 4);
+        let conv_unit = &mapped.units[0];
+        assert_eq!(conv_unit.root, 1);
+        assert_eq!(conv_unit.members, vec![2, 3]);
+        assert_eq!(mapped.elided, vec![0]);
+        assert_eq!(mapped.unit_count(), 4);
+        assert!(mapped.is_fused(2) && !mapped.is_fused(4));
+    }
+
+    #[test]
+    fn chain_rule_folds_where_no_pair_would() {
+        // A chain rule on pool admits bn then act, though no pair rule does.
+        let mut b = GraphBuilder::new("chain");
+        let i = b.input(8, 8, 4);
+        let p = b.maxpool(i, 2, 2);
+        let bn = b.batchnorm(p);
+        b.relu(bn);
+        let g = b.finish().unwrap();
+        let pairwise = apply(&MappingModel::default(), &g);
+        assert_eq!(pairwise.unit_count(), 3, "no rules: every costed layer solo");
+        let chain = MappingModel {
+            rules: vec![MappingRule::Chain {
+                producer: "pool".to_string(),
+                consumers: vec!["batchnorm".to_string(), "act".to_string()],
+            }],
+        };
+        let mapped = apply(&chain, &g);
+        assert_eq!(mapped.unit_count(), 1);
+        assert_eq!(mapped.units[0].root, 1);
+        assert_eq!(mapped.units[0].members, vec![2, 3]);
+        // The chain is exact: a second act after the chain stays solo.
+        let mut b = GraphBuilder::new("chain2");
+        let i = b.input(8, 8, 4);
+        let p = b.maxpool(i, 2, 2);
+        let bn = b.batchnorm(p);
+        let r = b.relu(bn);
+        b.relu(r);
+        let g2 = b.finish().unwrap();
+        let mapped2 = apply(&chain, &g2);
+        assert_eq!(mapped2.unit_count(), 2);
+        assert_eq!(mapped2.root_of[4], 4, "over-length chain must not absorb");
+    }
+
+    #[test]
+    fn elide_rules_remove_ops_and_block_fusion_into_them() {
+        let elide_softmax = MappingModel {
+            rules: vec![
+                MappingRule::Elide { op: "softmax".to_string() },
+                MappingRule::Fuse {
+                    producer: "elem".to_string(),
+                    consumer: "act".to_string(),
+                },
+            ],
+        };
+        let mut b = GraphBuilder::new("e");
+        let i = b.input(1, 1, 10);
+        let s = b.softmax(i);
+        b.relu(s);
+        let g = b.finish().unwrap();
+        let mapped = apply(&elide_softmax, &g);
+        // softmax (1) is elided; relu (2) cannot fuse into an elided layer.
+        assert_eq!(mapped.elided, vec![0, 1]);
+        assert_eq!(mapped.unit_count(), 1);
+        assert_eq!(mapped.units[0].root, 2);
+    }
+
+    #[test]
+    fn branched_consumers_both_fold_under_pairwise_rules() {
+        // Two parallel relus off one conv: pairwise rules are depth-free, so
+        // both fold — matching the original assign_units behavior.
+        let mut b = GraphBuilder::new("branch");
+        let i = b.input(8, 8, 4);
+        let c = b.conv(i, 8, 3, 1);
+        b.relu(c);
+        b.relu(c);
+        let g = b.finish().unwrap();
+        let mapped = apply(&pairwise_model(), &g);
+        assert_eq!(mapped.unit_count(), 1);
+        assert_eq!(mapped.units[0].members, vec![2, 3]);
+    }
+
+    #[test]
+    fn apply_partitions_and_is_idempotent() {
+        let g = small_graph();
+        let mapped = apply(&pairwise_model(), &g);
+        // Every layer in exactly one role.
+        let mut seen = vec![0usize; g.len()];
+        for u in &mapped.units {
+            seen[u.root] += 1;
+            for &m in &u.members {
+                seen[m] += 1;
+            }
+        }
+        for &e in &mapped.elided {
+            seen[e] += 1;
+        }
+        assert!(seen.iter().all(|&c| c == 1), "{seen:?}");
+        // Root assignment is idempotent and the pass is deterministic.
+        for lay in &g.layers {
+            assert_eq!(mapped.root_of[mapped.root_of[lay.id]], mapped.root_of[lay.id]);
+        }
+        assert_eq!(apply(&pairwise_model(), &g), mapped);
+    }
+}

@@ -1,0 +1,270 @@
+//! The learned mapping model: a schema-versioned list of graph-rewrite
+//! rules, serialized inside the platform model.
+
+use crate::error::{Error, Result};
+use crate::graph::{LayerClass, LayerKind};
+use crate::json::Value;
+
+/// Serialization format tag of a [`MappingModel`] document.
+pub const FORMAT: &str = "annette-mapping.v1";
+
+/// One benchmark-derived graph-rewrite rule.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum MappingRule {
+    /// Pairwise fold: a consumer whose [`LayerKind::fusion_key`] is
+    /// `consumer` joins a unit rooted at class `producer`, at any depth.
+    Fuse { producer: String, consumer: String },
+    /// Multi-op chain: a unit rooted at class `producer` absorbs this exact
+    /// ordered sequence of consumer fusion keys; every prefix of the chain
+    /// is absorbable on the way there.
+    Chain { producer: String, consumers: Vec<String> },
+    /// The target compiler removes this operator entirely: it costs nothing
+    /// and owns no execution unit. Keyed on [`LayerKind::op_name`].
+    Elide { op: String },
+}
+
+impl MappingRule {
+    fn to_value(&self) -> Value {
+        match self {
+            MappingRule::Fuse { producer, consumer } => Value::Obj(vec![
+                ("rule".to_string(), Value::str("fuse")),
+                ("producer".to_string(), Value::str(producer.clone())),
+                ("consumer".to_string(), Value::str(consumer.clone())),
+            ]),
+            MappingRule::Chain { producer, consumers } => Value::Obj(vec![
+                ("rule".to_string(), Value::str("chain")),
+                ("producer".to_string(), Value::str(producer.clone())),
+                (
+                    "consumers".to_string(),
+                    Value::Arr(consumers.iter().map(|c| Value::str(c.clone())).collect()),
+                ),
+            ]),
+            MappingRule::Elide { op } => Value::Obj(vec![
+                ("rule".to_string(), Value::str("elide")),
+                ("op".to_string(), Value::str(op.clone())),
+            ]),
+        }
+    }
+
+    fn from_value(v: &Value) -> Result<MappingRule> {
+        match v.req_str("rule")? {
+            "fuse" => Ok(MappingRule::Fuse {
+                producer: v.req_str("producer")?.to_string(),
+                consumer: v.req_str("consumer")?.to_string(),
+            }),
+            "chain" => {
+                let consumers = v
+                    .req_arr("consumers")?
+                    .iter()
+                    .map(|c| {
+                        c.as_str().map(str::to_string).ok_or_else(|| {
+                            Error::Json("chain consumer is not a string".to_string())
+                        })
+                    })
+                    .collect::<Result<Vec<String>>>()?;
+                if consumers.is_empty() {
+                    return Err(Error::Json("chain rule has no consumers".to_string()));
+                }
+                Ok(MappingRule::Chain {
+                    producer: v.req_str("producer")?.to_string(),
+                    consumers,
+                })
+            }
+            "elide" => Ok(MappingRule::Elide {
+                op: v.req_str("op")?.to_string(),
+            }),
+            other => Err(Error::Json(format!("unknown mapping rule kind `{other}`"))),
+        }
+    }
+}
+
+/// A benchmark-derived mapping model: the ordered rule list the mapping pass
+/// ([`crate::mapping::apply`]) rewrites graphs with.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct MappingModel {
+    pub rules: Vec<MappingRule>,
+}
+
+impl MappingModel {
+    /// The degenerate pairwise model: only [`MappingRule::Fuse`] entries.
+    /// Applying it reproduces the original pairwise fusion predicate exactly.
+    pub fn from_pairs<I>(pairs: I) -> MappingModel
+    where
+        I: IntoIterator<Item = (String, String)>,
+    {
+        MappingModel {
+            rules: pairs
+                .into_iter()
+                .map(|(producer, consumer)| MappingRule::Fuse { producer, consumer })
+                .collect(),
+        }
+    }
+
+    /// The pairwise fusion table as `(producer class, consumer key)` pairs,
+    /// in rule order — the degenerate projection of this model.
+    pub fn pairs(&self) -> Vec<(String, String)> {
+        self.rules
+            .iter()
+            .filter_map(|r| match r {
+                MappingRule::Fuse { producer, consumer } => {
+                    Some((producer.clone(), consumer.clone()))
+                }
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// The pairwise predicate: can `consumer` fold into a unit rooted at a
+    /// layer of `producer` class under a [`MappingRule::Fuse`] rule alone?
+    pub fn pair_fusable(&self, producer: LayerClass, consumer: &LayerKind) -> bool {
+        let key = match consumer.fusion_key() {
+            Some(key) => key,
+            None => return false,
+        };
+        let pname = producer.as_str();
+        self.rules.iter().any(|r| {
+            matches!(r, MappingRule::Fuse { producer: p, consumer: c } if p == pname && c == key)
+        })
+    }
+
+    /// Full absorption predicate used by the mapping pass: can a unit rooted
+    /// at class `producer`, having already absorbed the fusion-key sequence
+    /// `absorbed`, absorb `consumer` next? True under a pairwise rule (depth
+    /// free) or a chain rule whose prefix matches the absorbed sequence.
+    pub(crate) fn fusable_at(
+        &self,
+        producer: LayerClass,
+        absorbed: &[&'static str],
+        consumer: &LayerKind,
+    ) -> bool {
+        let key = match consumer.fusion_key() {
+            Some(key) => key,
+            None => return false,
+        };
+        let pname = producer.as_str();
+        self.rules.iter().any(|r| match r {
+            MappingRule::Fuse { producer: p, consumer: c } => p == pname && c == key,
+            MappingRule::Chain { producer: p, consumers } => {
+                p == pname
+                    && consumers.len() > absorbed.len()
+                    && consumers[absorbed.len()] == key
+                    && consumers.iter().zip(absorbed).all(|(c, a)| c == a)
+            }
+            MappingRule::Elide { .. } => false,
+        })
+    }
+
+    /// Whether an [`MappingRule::Elide`] rule removes this operator.
+    pub fn elides(&self, kind: &LayerKind) -> bool {
+        let name = kind.op_name();
+        self.rules
+            .iter()
+            .any(|r| matches!(r, MappingRule::Elide { op } if op == name))
+    }
+
+    pub fn to_value(&self) -> Value {
+        Value::Obj(vec![
+            ("format".to_string(), Value::str(FORMAT)),
+            (
+                "rules".to_string(),
+                Value::Arr(self.rules.iter().map(|r| r.to_value()).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_value(v: &Value) -> Result<MappingModel> {
+        let format = v.req_str("format")?;
+        if format != FORMAT {
+            return Err(Error::Json(format!(
+                "unsupported mapping format `{format}` (expected `{FORMAT}`)"
+            )));
+        }
+        Ok(MappingModel {
+            rules: v
+                .req_arr("rules")?
+                .iter()
+                .map(MappingRule::from_value)
+                .collect::<Result<_>>()?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Act;
+
+    fn model() -> MappingModel {
+        MappingModel {
+            rules: vec![
+                MappingRule::Fuse {
+                    producer: "conv".to_string(),
+                    consumer: "batchnorm".to_string(),
+                },
+                MappingRule::Chain {
+                    producer: "pool".to_string(),
+                    consumers: vec!["batchnorm".to_string(), "act".to_string()],
+                },
+                MappingRule::Elide { op: "flatten".to_string() },
+            ],
+        }
+    }
+
+    #[test]
+    fn pairwise_predicate_sees_only_fuse_rules() {
+        let m = model();
+        assert!(m.pair_fusable(LayerClass::Conv, &LayerKind::BatchNorm));
+        assert!(!m.pair_fusable(LayerClass::Conv, &LayerKind::Activation { act: Act::Relu }));
+        // The chain rule does not leak into the pairwise table.
+        assert!(!m.pair_fusable(LayerClass::Pool, &LayerKind::BatchNorm));
+        assert_eq!(m.pairs(), vec![("conv".to_string(), "batchnorm".to_string())]);
+    }
+
+    #[test]
+    fn chain_rules_match_by_prefix() {
+        let m = model();
+        let bn = LayerKind::BatchNorm;
+        let relu = LayerKind::Activation { act: Act::Relu };
+        // Empty prefix: the chain admits its first consumer.
+        assert!(m.fusable_at(LayerClass::Pool, &[], &bn));
+        // After bn, the chain admits act — but not another bn.
+        assert!(m.fusable_at(LayerClass::Pool, &["batchnorm"], &relu));
+        assert!(!m.fusable_at(LayerClass::Pool, &["batchnorm"], &bn));
+        // Out-of-order or over-length sequences do not match.
+        assert!(!m.fusable_at(LayerClass::Pool, &[], &relu));
+        assert!(!m.fusable_at(LayerClass::Pool, &["batchnorm", "act"], &relu));
+        // Pairwise rules stay depth-free.
+        assert!(m.fusable_at(LayerClass::Conv, &["batchnorm", "batchnorm"], &bn));
+    }
+
+    #[test]
+    fn elide_rules_match_op_names() {
+        let m = model();
+        assert!(m.elides(&LayerKind::Flatten));
+        assert!(!m.elides(&LayerKind::Softmax));
+        assert!(!MappingModel::default().elides(&LayerKind::Flatten));
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_all_rule_kinds() {
+        let m = model();
+        let back = MappingModel::from_value(&m.to_value()).unwrap();
+        assert_eq!(back, m);
+        // Unknown rule kinds and bumped formats fail loudly.
+        let text = m.to_value().to_string().replace("\"fuse\"", "\"teleport\"");
+        assert!(MappingModel::from_value(&Value::parse(&text).unwrap()).is_err());
+        let text = m.to_value().to_string().replace("annette-mapping.v1", "annette-mapping.v9");
+        assert!(MappingModel::from_value(&Value::parse(&text).unwrap()).is_err());
+    }
+
+    #[test]
+    fn from_pairs_is_the_degenerate_projection() {
+        let pairs = vec![
+            ("conv".to_string(), "batchnorm".to_string()),
+            ("fc".to_string(), "act".to_string()),
+        ];
+        let m = MappingModel::from_pairs(pairs.clone());
+        assert_eq!(m.pairs(), pairs);
+        assert_eq!(m.rules.len(), 2);
+    }
+}

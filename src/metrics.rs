@@ -17,9 +17,26 @@ pub fn mae(pred: &[f64], truth: &[f64]) -> f64 {
 /// Mean absolute percentage error, in percent. Entries whose ground truth is
 /// exactly zero are skipped; empty (or all-skipped) input yields 0.
 ///
+/// **Edge case:** when *every* truth entry is zero (or the slices are
+/// empty), no entry contributes and the result is a silent `0.0` — which
+/// reads as a *perfect* score. Comparisons such as "mixed MAPE ≤ statistical
+/// MAPE" are then vacuously true of `0 ≤ 0`. Assertions that must not pass
+/// vacuously should use [`mape_defined`], which makes the degenerate case
+/// explicit instead of sentinel-valued.
+///
 /// # Panics
 /// Panics when the slices have different lengths.
 pub fn mape(pred: &[f64], truth: &[f64]) -> f64 {
+    mape_defined(pred, truth).unwrap_or(0.0)
+}
+
+/// [`mape`] with the degenerate case made explicit: returns `None` when no
+/// entry has a nonzero ground truth (empty input or an all-zero truth
+/// vector), instead of silently reporting a perfect 0%.
+///
+/// # Panics
+/// Panics when the slices have different lengths.
+pub fn mape_defined(pred: &[f64], truth: &[f64]) -> Option<f64> {
     assert_eq!(pred.len(), truth.len(), "mape: length mismatch");
     let mut acc = 0.0;
     let mut n = 0usize;
@@ -30,9 +47,9 @@ pub fn mape(pred: &[f64], truth: &[f64]) -> f64 {
         }
     }
     if n == 0 {
-        0.0
+        None
     } else {
-        100.0 * acc / n as f64
+        Some(100.0 * acc / n as f64)
     }
 }
 

@@ -1,5 +1,6 @@
-//! Model generation and the fitted platform model: mapping models (fusion,
-//! PE alignment) stacked with per-layer-class latency models.
+//! Model generation and the fitted platform model: the learned mapping
+//! model (fuse/chain/elide rewrite rules, PE alignment) stacked with
+//! per-layer-class latency models.
 
 pub mod fitting;
 pub mod layer;

@@ -1,6 +1,6 @@
-//! The stacked platform model: learned mapping models (fusion rules +
-//! PE-alignment) and per-class layer models, fitted from one benchmark
-//! campaign and persisted as a versioned JSON document.
+//! The stacked platform model: the learned mapping model (fuse / chain /
+//! elide rewrite rules + PE-alignment) and per-class layer models, fitted
+//! from one benchmark campaign and persisted as a versioned JSON document.
 
 use std::fs;
 use std::path::Path;
@@ -10,16 +10,23 @@ use crate::error::{Error, Result};
 use crate::graph::{LayerClass, LayerKind};
 use crate::hw::device::DeviceSpec;
 use crate::json::Value;
+use crate::mapping::{MappingModel, MappingRule};
 use crate::models::fitting::{fit_class, ClassModel};
 
-pub const FORMAT: &str = "annette-model.v1";
+pub const FORMAT: &str = "annette-model.v2";
+/// Previous model format: a pairwise `fusion` table instead of the
+/// schema-versioned mapping model. Still accepted by
+/// [`PlatformModel::from_value`] (pairs load as the degenerate rule set).
+pub const FORMAT_V1: &str = "annette-model.v1";
 
 /// A fitted platform model for one device.
 #[derive(Clone, Debug)]
 pub struct PlatformModel {
     pub spec: DeviceSpec,
-    /// Learned fusion rules: (producer class name, consumer op name).
-    pub fusion: Vec<(String, String)>,
+    /// The learned mapping model: graph-rewrite rules
+    /// ([`crate::mapping::apply`] consumes them) extracted from the
+    /// campaign's pairwise, chain, and elision probes.
+    pub mapping: MappingModel,
     /// Per-class layer models.
     pub classes: Vec<ClassModel>,
 }
@@ -27,7 +34,8 @@ pub struct PlatformModel {
 impl PlatformModel {
     /// Generate the platform model from benchmark data (ANNETTE's model
     /// generator): group micro records per class, fit mapping + layer models,
-    /// and adopt the fusion rules the probes discovered.
+    /// and adopt the rewrite rules the probes discovered — pairwise fusion
+    /// first (the degenerate table), then multi-op chains, then elisions.
     pub fn fit(spec: &DeviceSpec, data: &BenchData) -> PlatformModel {
         let mut class_names: Vec<&str> = Vec::new();
         for r in &data.micro.records {
@@ -47,16 +55,32 @@ impl PlatformModel {
                 fit_class(spec, &records, name)
             })
             .collect();
-        let fusion = data
+        let mut rules: Vec<MappingRule> = data
             .mapping
             .samples
             .iter()
             .filter(|p| p.fused)
-            .map(|p| (p.producer.clone(), p.consumer.clone()))
+            .map(|p| MappingRule::Fuse {
+                producer: p.producer.clone(),
+                consumer: p.consumer.clone(),
+            })
             .collect();
+        rules.extend(data.mapping.chains.iter().filter(|c| c.fused).map(|c| {
+            MappingRule::Chain {
+                producer: c.producer.clone(),
+                consumers: c.consumers.clone(),
+            }
+        }));
+        rules.extend(
+            data.mapping
+                .elisions
+                .iter()
+                .filter(|e| e.elided)
+                .map(|e| MappingRule::Elide { op: e.op.clone() }),
+        );
         PlatformModel {
             spec: spec.clone(),
-            fusion,
+            mapping: MappingModel { rules },
             classes,
         }
     }
@@ -67,16 +91,12 @@ impl PlatformModel {
         self.classes.iter().find(|c| c.class == name)
     }
 
-    /// The learned fusion predicate: can `consumer` fold into a unit rooted
-    /// at a layer of `producer` class?
+    /// The learned *pairwise* fusion predicate: can `consumer` fold into a
+    /// unit rooted at a layer of `producer` class under a pair rule? The
+    /// full rewrite semantics (chains, elision) live in
+    /// [`crate::mapping::apply`].
     pub fn fusable(&self, producer: LayerClass, consumer: &LayerKind) -> bool {
-        match consumer.fusion_key() {
-            Some(key) => {
-                let pname = producer.as_str();
-                self.fusion.iter().any(|(p, c)| p == pname && c == key)
-            }
-            None => false,
-        }
+        self.mapping.pair_fusable(producer, consumer)
     }
 
     pub fn to_value(&self) -> Value {
@@ -100,43 +120,46 @@ impl PlatformModel {
                 ])
             })
             .collect();
-        let fusion: Vec<Value> = self
-            .fusion
-            .iter()
-            .map(|(p, c)| Value::Arr(vec![Value::str(p.clone()), Value::str(c.clone())]))
-            .collect();
         Value::Obj(vec![
             ("format".to_string(), Value::str(FORMAT)),
             ("spec".to_string(), self.spec.to_value()),
-            ("fusion".to_string(), Value::Arr(fusion)),
+            ("mapping".to_string(), self.mapping.to_value()),
             ("classes".to_string(), Value::Arr(classes)),
         ])
     }
 
     pub fn from_value(v: &Value) -> Result<PlatformModel> {
         let format = v.req_str("format")?;
-        if format != FORMAT {
-            return Err(Error::Json(format!(
-                "unsupported model format `{format}` (expected `{FORMAT}`)"
-            )));
-        }
-        let spec = DeviceSpec::from_value(v.req("spec")?)?;
-        let mut fusion = Vec::new();
-        for pair in v.req_arr("fusion")? {
-            let xs = pair
-                .as_arr()
-                .ok_or_else(|| Error::Json("fusion entry is not a pair".to_string()))?;
-            if xs.len() != 2 {
-                return Err(Error::Json("fusion entry is not a pair".to_string()));
+        let mapping = match format {
+            FORMAT => MappingModel::from_value(v.req("mapping")?)?,
+            // v1: a pairwise `fusion` table — load it as the degenerate
+            // rule set so old persisted models keep estimating identically.
+            FORMAT_V1 => {
+                let mut pairs = Vec::new();
+                for pair in v.req_arr("fusion")? {
+                    let xs = pair
+                        .as_arr()
+                        .ok_or_else(|| Error::Json("fusion entry is not a pair".to_string()))?;
+                    if xs.len() != 2 {
+                        return Err(Error::Json("fusion entry is not a pair".to_string()));
+                    }
+                    let p = xs[0].as_str().ok_or_else(|| {
+                        Error::Json("fusion producer is not a string".to_string())
+                    })?;
+                    let c = xs[1].as_str().ok_or_else(|| {
+                        Error::Json("fusion consumer is not a string".to_string())
+                    })?;
+                    pairs.push((p.to_string(), c.to_string()));
+                }
+                MappingModel::from_pairs(pairs)
             }
-            let p = xs[0]
-                .as_str()
-                .ok_or_else(|| Error::Json("fusion producer is not a string".to_string()))?;
-            let c = xs[1]
-                .as_str()
-                .ok_or_else(|| Error::Json("fusion consumer is not a string".to_string()))?;
-            fusion.push((p.to_string(), c.to_string()));
-        }
+            other => {
+                return Err(Error::Json(format!(
+                    "unsupported model format `{other}` (expected `{FORMAT}`)"
+                )))
+            }
+        };
+        let spec = DeviceSpec::from_value(v.req("spec")?)?;
         let mut classes = Vec::new();
         for cv in v.req_arr("classes")? {
             let coeffs = |key: &str| -> Result<[f64; 3]> {
@@ -163,7 +186,7 @@ impl PlatformModel {
         }
         Ok(PlatformModel {
             spec,
-            fusion,
+            mapping,
             classes,
         })
     }
@@ -198,6 +221,18 @@ mod tests {
         assert_eq!(conv.align_w, 8);
         assert!(model.fusable(LayerClass::Conv, &LayerKind::BatchNorm));
         assert!(!model.fusable(LayerClass::Pool, &LayerKind::BatchNorm));
+        // The probes also learn the conv→bn→act chain and flatten elision.
+        use crate::mapping::MappingRule;
+        assert!(model.mapping.rules.iter().any(|r| matches!(
+            r,
+            MappingRule::Chain { producer, consumers }
+                if producer == "conv" && consumers == &["batchnorm", "act"]
+        )));
+        assert!(model
+            .mapping
+            .rules
+            .iter()
+            .any(|r| matches!(r, MappingRule::Elide { op } if op == "flatten")));
         // Fitted inverse efficiency must be physical.
         assert!(conv.mixed[0] > 0.0);
         assert!(conv.mixed[2] > 0.0);
@@ -210,7 +245,7 @@ mod tests {
         let model = PlatformModel::fit(&dev.spec(), &data);
         let back = PlatformModel::from_value(&model.to_value()).unwrap();
         assert_eq!(back.spec, model.spec);
-        assert_eq!(back.fusion, model.fusion);
+        assert_eq!(back.mapping, model.mapping);
         assert_eq!(back.classes.len(), model.classes.len());
         for (a, b) in back.classes.iter().zip(&model.classes) {
             assert_eq!(a.class, b.class);

@@ -33,6 +33,11 @@ fn check_equivalence(model: &PlatformModel, nets: &[Graph]) {
                 "{} / {kind:?}: unit count mismatch",
                 g.name
             );
+            assert_eq!(
+                fast.elided, slow.elided,
+                "{} / {kind:?}: elided sets diverged",
+                g.name
+            );
             for (a, b) in fast.units.iter().zip(&slow.units) {
                 assert_eq!(a.root, b.root, "{} / {kind:?}: root mismatch", g.name);
                 assert_eq!(a.name, b.name);

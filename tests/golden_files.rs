@@ -10,9 +10,12 @@
 
 use annette::hw::device::DeviceSpec;
 use annette::json::Value;
+use annette::mapping::{MappingModel, MappingRule, FORMAT as MAPPING_FORMAT};
 use annette::models::platform::{PlatformModel, FORMAT as MODEL_FORMAT};
 
-const MODEL_GOLDEN: &str = include_str!("golden/platform_model.v1.json");
+const MODEL_GOLDEN_V1: &str = include_str!("golden/platform_model.v1.json");
+const MODEL_GOLDEN: &str = include_str!("golden/platform_model.v2.json");
+const MAPPING_GOLDEN: &str = include_str!("golden/mapping_rules.v1.json");
 const SPEC_GOLDEN: &str = include_str!("golden/device_spec.v1.json");
 
 /// Compare two canonical JSON strings; on mismatch, panic with the first
@@ -51,8 +54,21 @@ fn platform_model_golden_file_still_loads_and_round_trips() {
     assert_eq!(model.spec.name, "golden-device");
     assert_eq!(model.spec.peak_gops, 2400.0);
     assert_eq!(model.spec.bandwidth_gbs, 19.2);
-    assert_eq!(model.fusion.len(), 3);
-    assert_eq!(model.fusion[0], ("conv".to_string(), "batchnorm".to_string()));
+    assert_eq!(model.mapping.rules.len(), 5);
+    assert_eq!(
+        model.mapping.pairs()[0],
+        ("conv".to_string(), "batchnorm".to_string())
+    );
+    assert!(model.mapping.rules.iter().any(|r| matches!(
+        r,
+        MappingRule::Chain { producer, consumers }
+            if producer == "conv" && consumers == &["batchnorm", "act"]
+    )));
+    assert!(model
+        .mapping
+        .rules
+        .iter()
+        .any(|r| matches!(r, MappingRule::Elide { op } if op == "flatten")));
     assert_eq!(model.classes.len(), 2);
     let conv = &model.classes[0];
     assert_eq!(conv.class, "conv");
@@ -65,6 +81,68 @@ fn platform_model_golden_file_still_loads_and_round_trips() {
         &canonical(MODEL_GOLDEN),
         "PlatformModel",
     );
+}
+
+#[test]
+fn v1_platform_models_still_load_as_the_degenerate_rule_set() {
+    // Persisted v1 documents (pairwise `fusion` table) must keep loading:
+    // the pairs become `Fuse` rules and nothing else, so estimates under a
+    // reloaded old model are unchanged.
+    let v = Value::parse(MODEL_GOLDEN_V1).unwrap();
+    let model = PlatformModel::from_value(&v)
+        .expect("the v1 platform-model fixture no longer loads — back-compat broke");
+    assert_eq!(model.spec.name, "golden-device");
+    assert_eq!(model.mapping.rules.len(), 3);
+    assert!(model
+        .mapping
+        .rules
+        .iter()
+        .all(|r| matches!(r, MappingRule::Fuse { .. })));
+    assert_eq!(
+        model.mapping.pairs(),
+        vec![
+            ("conv".to_string(), "batchnorm".to_string()),
+            ("conv".to_string(), "act".to_string()),
+            ("fc".to_string(), "act".to_string()),
+        ]
+    );
+    // Saving it re-serializes as v2 with the same rule content.
+    let back = PlatformModel::from_value(&model.to_value()).unwrap();
+    assert_eq!(back.mapping, model.mapping);
+}
+
+#[test]
+fn mapping_rules_golden_file_still_loads_and_round_trips() {
+    let v = Value::parse(MAPPING_GOLDEN).unwrap();
+    let mapping = MappingModel::from_value(&v)
+        .expect("the checked-in mapping-rules fixture no longer loads — schema drifted");
+    assert_eq!(mapping.rules.len(), 9);
+    assert_eq!(mapping.pairs().len(), 6);
+    assert_eq!(
+        mapping
+            .rules
+            .iter()
+            .filter(|r| matches!(r, MappingRule::Chain { .. }))
+            .count(),
+        2
+    );
+    assert_eq!(
+        mapping
+            .rules
+            .iter()
+            .filter(|r| matches!(r, MappingRule::Elide { .. }))
+            .count(),
+        1
+    );
+    assert_canonical_eq(
+        &mapping.to_value().to_string(),
+        &canonical(MAPPING_GOLDEN),
+        "MappingModel",
+    );
+    // The version string is pinned; bumped documents are rejected.
+    assert_eq!(MAPPING_FORMAT, "annette-mapping.v1");
+    let bumped = MAPPING_GOLDEN.replace("annette-mapping.v1", "annette-mapping.v2");
+    assert!(MappingModel::from_value(&Value::parse(&bumped).unwrap()).is_err());
 }
 
 #[test]
@@ -86,10 +164,14 @@ fn device_spec_golden_file_still_loads_and_round_trips() {
 #[test]
 fn model_format_version_is_pinned() {
     // Renaming the version string orphans persisted models; make it loud.
-    assert_eq!(MODEL_FORMAT, "annette-model.v1");
-    // A version-bumped document must be rejected, not half-parsed.
-    let bumped = MODEL_GOLDEN.replace("annette-model.v1", "annette-model.v2");
+    assert_eq!(MODEL_FORMAT, "annette-model.v2");
+    // An unknown-version document must be rejected, not half-parsed.
+    let bumped = MODEL_GOLDEN.replace("annette-model.v2", "annette-model.v3");
     let v = Value::parse(&bumped).unwrap();
+    assert!(PlatformModel::from_value(&v).is_err());
+    // A v2 label on a v1-shaped body (no `mapping` object) is also rejected.
+    let mislabeled = MODEL_GOLDEN_V1.replace("annette-model.v1", "annette-model.v2");
+    let v = Value::parse(&mislabeled).unwrap();
     assert!(PlatformModel::from_value(&v).is_err());
 }
 
@@ -104,7 +186,7 @@ fn golden_model_survives_a_disk_round_trip() {
     model.save(&path).unwrap();
     let back = PlatformModel::load(&path).unwrap();
     assert_eq!(back.spec, model.spec);
-    assert_eq!(back.fusion, model.fusion);
+    assert_eq!(back.mapping, model.mapping);
     for (a, b) in back.classes.iter().zip(&model.classes) {
         assert_eq!(a.class, b.class);
         assert_eq!(a.mixed, b.mixed);

@@ -1,0 +1,127 @@
+//! Integration tests for the first-class mapping pass: chain fusion folds
+//! `conv → bn → act` into one unit on the DPU, the learned chain/elide rules
+//! are exactly redundant with the pairwise table on the simulated devices
+//! (so every fitted estimate is **bit-identical** to the pairwise-degenerate
+//! model — the pre-refactor semantics), and the estimator's reconstructed
+//! units agree with the simulator's ground-truth fusion.
+
+use annette::estim::estimator::Estimator;
+use annette::graph::GraphBuilder;
+use annette::hw::device::Device;
+use annette::hw::registry;
+use annette::mapping::{self, MappingModel, MappingRule};
+use annette::models::layer::ModelKind;
+use annette::models::platform::PlatformModel;
+use annette::repro::campaign::fit_device;
+use annette::zoo;
+
+#[test]
+fn conv_bn_act_chain_folds_into_a_single_unit_on_the_dpu() {
+    let fitted = fit_device("dpu-zcu102", 3, None).expect("campaign");
+    // The campaign's length-3 probes must have learned the chain rule…
+    assert!(
+        fitted.model.mapping.rules.iter().any(|r| matches!(
+            r,
+            MappingRule::Chain { producer, consumers }
+                if producer == "conv" && consumers == &["batchnorm", "act"]
+        )),
+        "no conv→bn→act chain rule learned: {:?}",
+        fitted.model.mapping.rules
+    );
+    // …and applying the model folds the triple into one unit.
+    let mut b = GraphBuilder::new("triple");
+    let i = b.input(28, 28, 16);
+    let x = b.conv_bn_relu(i, 32, 3, 1);
+    b.classifier(x, 10);
+    let g = b.finish().unwrap();
+    let mapped = mapping::apply(&fitted.model.mapping, &g);
+    assert_eq!(mapped.root_of[2], 1, "bn folds into the conv");
+    assert_eq!(mapped.root_of[3], 1, "act folds into the conv");
+    assert_eq!(mapped.units[0].root, 1);
+    assert_eq!(mapped.units[0].members, vec![2, 3]);
+    // The estimator reports the same unit structure.
+    let est = Estimator::new(&fitted.model).estimate(&g);
+    let conv_unit = est.units.iter().find(|u| u.root == 1).expect("conv unit");
+    assert_eq!(conv_unit.members, vec![2, 3]);
+    // Even with *only* the chain rule (pairwise table stripped), the triple
+    // still folds: chains are real rules, not decoration.
+    let chain_only = MappingModel {
+        rules: fitted
+            .model
+            .mapping
+            .rules
+            .iter()
+            .filter(|r| matches!(r, MappingRule::Chain { .. } | MappingRule::Elide { .. }))
+            .cloned()
+            .collect(),
+    };
+    let chain_mapped = mapping::apply(&chain_only, &g);
+    assert_eq!(chain_mapped.units[0].members, vec![2, 3]);
+}
+
+#[test]
+fn learned_rules_degenerate_to_the_pairwise_table_on_every_device() {
+    // On the simulated devices every learned chain is implied by the learned
+    // pairs and every elided op is already IR-uncosted, so a model reduced
+    // to its pairwise table must produce bit-identical estimates — this is
+    // the "fits stay numerically identical to pre-refactor" guarantee.
+    for id in registry::ids() {
+        let fitted = fit_device(id, 1, None).expect("campaign");
+        let pairwise = PlatformModel {
+            spec: fitted.model.spec.clone(),
+            mapping: MappingModel::from_pairs(fitted.model.mapping.pairs()),
+            classes: fitted.model.classes.clone(),
+        };
+        let full = Estimator::new(&fitted.model);
+        let degenerate = Estimator::new(&pairwise);
+        let mut nets: Vec<annette::graph::Graph> =
+            zoo::table2().into_iter().map(|e| e.graph).collect();
+        nets.extend(zoo::nasbench::sample_networks(20, 99));
+        for g in &nets {
+            for kind in ModelKind::ALL {
+                let a = full.estimate_with(g, kind);
+                let b = degenerate.estimate_with(g, kind);
+                assert_eq!(
+                    a.total_ms().to_bits(),
+                    b.total_ms().to_bits(),
+                    "{id} / {} / {kind:?}: chain/elide rules changed the estimate",
+                    g.name
+                );
+                assert_eq!(a.units.len(), b.units.len(), "{id} / {}", g.name);
+                for (ua, ub) in a.units.iter().zip(&b.units) {
+                    assert_eq!(ua.root, ub.root);
+                    assert_eq!(ua.members, ub.members);
+                    assert_eq!(ua.ms.to_bits(), ub.ms.to_bits());
+                }
+                assert_eq!(a.elided, b.elided);
+            }
+        }
+    }
+}
+
+#[test]
+fn estimator_units_match_simulator_ground_truth_fusion() {
+    // Single source of mapping truth, learned end to end: the unit structure
+    // the estimator predicts equals the fusion the simulator actually
+    // performed (same layers fused into the same roots).
+    for id in registry::ids() {
+        let fitted = fit_device(id, 3, None).expect("campaign");
+        let g = zoo::mobilenet::mobilenet_v1(224, 1000);
+        let profile = fitted.device.profile(&g, 1, 7);
+        let mapped = mapping::apply(&fitted.model.mapping, &g);
+        for timing in &profile.layers {
+            match timing.fused_into {
+                Some(root) => assert_eq!(
+                    mapped.root_of[timing.layer_id], root,
+                    "{id}: layer {} fused into {} on silicon but {} in the model",
+                    timing.layer_id, root, mapped.root_of[timing.layer_id]
+                ),
+                None => assert_eq!(
+                    mapped.root_of[timing.layer_id], timing.layer_id,
+                    "{id}: layer {} predicted fused but ran standalone",
+                    timing.layer_id
+                ),
+            }
+        }
+    }
+}

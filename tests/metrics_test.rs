@@ -1,7 +1,7 @@
 //! Unit tests for the evaluation metrics: known rankings for Spearman's rho,
 //! edge cases (empty, tied, zero-truth) for MAPE/MAE.
 
-use annette::metrics::{mae, mape, spearman_rho};
+use annette::metrics::{mae, mape, mape_defined, spearman_rho};
 
 #[test]
 fn mae_known_values() {
@@ -42,6 +42,30 @@ fn mape_skips_zero_truth_entries() {
 #[test]
 fn mape_empty_is_zero() {
     assert_eq!(mape(&[], &[]), 0.0);
+}
+
+#[test]
+fn mape_defined_distinguishes_the_vacuous_cases() {
+    // The documented trap: an all-zero truth vector makes mape() report a
+    // *perfect* 0%, so "a ≤ b" model-ordering assertions pass vacuously.
+    // mape_defined surfaces exactly those cases as None…
+    assert_eq!(mape_defined(&[1.0, 2.0], &[0.0, 0.0]), None);
+    assert_eq!(mape_defined(&[], &[]), None);
+    // …and agrees with mape() whenever any entry contributes.
+    let m = mape_defined(&[3.0, 8.0], &[0.0, 10.0]).unwrap();
+    assert!((m - 20.0).abs() < 1e-12, "mape_defined = {m}");
+    assert_eq!(
+        mape_defined(&[110.0, 80.0], &[100.0, 100.0]).unwrap(),
+        mape(&[110.0, 80.0], &[100.0, 100.0])
+    );
+    // A genuinely perfect score is Some(0.0), not None.
+    assert_eq!(mape_defined(&[5.0], &[5.0]), Some(0.0));
+}
+
+#[test]
+#[should_panic]
+fn mape_defined_length_mismatch_panics() {
+    mape_defined(&[1.0], &[1.0, 2.0]);
 }
 
 #[test]

@@ -10,7 +10,7 @@
 use annette::estim::estimator::Estimator;
 use annette::graph::LayerClass;
 use annette::hw::device::Device;
-use annette::metrics::{mape, spearman_rho};
+use annette::metrics::{mape, mape_defined, spearman_rho};
 use annette::models::layer::ModelKind;
 use annette::repro::campaign::fit_device;
 use annette::zoo;
@@ -29,7 +29,10 @@ fn model_families_order_by_accuracy_on_dpu() {
             .iter()
             .map(|e| est.estimate_with(&e.graph, kind).total_ms())
             .collect();
-        mape(&pred, &truth)
+        // mape() returns a silent 0 on an all-zero truth vector, which would
+        // make every ordering assertion below vacuously true; fail loudly
+        // instead if the ground truth ever degenerates.
+        mape_defined(&pred, &truth).expect("zoo ground-truth latencies must be nonzero")
     };
     let roofline = mape_of(ModelKind::Roofline);
     let refined = mape_of(ModelKind::RefinedRoofline);
@@ -85,7 +88,10 @@ fn vpu_ordering_holds_too() {
             .iter()
             .map(|e| est.estimate_with(&e.graph, kind).total_ms())
             .collect();
-        mape(&pred, &truth)
+        // mape() returns a silent 0 on an all-zero truth vector, which would
+        // make every ordering assertion below vacuously true; fail loudly
+        // instead if the ground truth ever degenerates.
+        mape_defined(&pred, &truth).expect("zoo ground-truth latencies must be nonzero")
     };
     let mixed = mape_of(ModelKind::Mixed);
     let statistical = mape_of(ModelKind::Statistical);
@@ -123,7 +129,10 @@ fn tpu_ordering_holds_despite_cliffs_and_spill() {
             .iter()
             .map(|e| est.estimate_with(&e.graph, kind).total_ms())
             .collect();
-        mape(&pred, &truth)
+        // mape() returns a silent 0 on an all-zero truth vector, which would
+        // make every ordering assertion below vacuously true; fail loudly
+        // instead if the ground truth ever degenerates.
+        mape_defined(&pred, &truth).expect("zoo ground-truth latencies must be nonzero")
     };
     let roofline = mape_of(ModelKind::Roofline);
     let refined = mape_of(ModelKind::RefinedRoofline);

@@ -181,6 +181,61 @@ fn cache_is_not_poisoned_by_in_band_errors_or_cross_device_traffic() {
 }
 
 #[test]
+fn verbose_units_report_fused_member_ids_and_elided_layers() {
+    // A verbose response must expose the mapped unit structure — the fused
+    // member *layer ids* per unit (not just a count) and the elided layers —
+    // and they must agree exactly with the Estimator's own Estimate.
+    let dev = DpuDevice::zcu102();
+    let data = run_campaign(&dev, 1, 4);
+    let model = PlatformModel::fit(&dev.spec(), &data);
+    let svc = Service::new(model.clone());
+    let est = annette::estim::estimator::Estimator::new(&model);
+    let g = zoo::mobilenet::mobilenet_v1(224, 1000);
+    let req = format!(
+        "{{\"op\":\"estimate\",\"kind\":\"mixed\",\"network\":{}}}",
+        graph_to_value(&g)
+    );
+    let resp = Value::parse(&svc.handle(&req)).unwrap();
+    assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(true));
+    let expect = est.estimate(&g);
+    let units = resp.req_arr("units").unwrap();
+    assert_eq!(units.len(), expect.units.len());
+    let mut fused_units_seen = 0;
+    for (uv, eu) in units.iter().zip(&expect.units) {
+        assert_eq!(uv.req_usize("root").unwrap(), eu.root);
+        assert_eq!(uv.req_str("name").unwrap(), eu.name);
+        let members: Vec<usize> = uv
+            .req_arr("members")
+            .unwrap()
+            .iter()
+            .map(|m| m.as_usize().expect("member ids are integers"))
+            .collect();
+        assert_eq!(members, eu.members, "unit {} member ids", eu.root);
+        assert_eq!(uv.req_usize("fused").unwrap(), eu.members.len());
+        if !members.is_empty() {
+            fused_units_seen += 1;
+            // Members really are the bn/act layers of the live graph.
+            for &m in &members {
+                assert!(
+                    matches!(g.layers[m].kind.op_name(), "batchnorm" | "act"),
+                    "unexpected fused member op `{}`",
+                    g.layers[m].kind.op_name()
+                );
+            }
+        }
+    }
+    assert!(fused_units_seen > 10, "MobileNet must fuse many conv/dw units");
+    let elided: Vec<usize> = resp
+        .req_arr("elided")
+        .unwrap()
+        .iter()
+        .map(|v| v.as_usize().unwrap())
+        .collect();
+    assert_eq!(elided, expect.elided);
+    assert!(elided.contains(&0), "the input layer is always elided");
+}
+
+#[test]
 fn repeated_graphs_hit_the_compiled_cache_consistently() {
     // The same graph sent many times (the zoo-serving scenario) must return
     // the identical response line every time, across thread counts.

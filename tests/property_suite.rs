@@ -3,10 +3,14 @@
 //!
 //! 1. the compiled estimation path is bit-exact against the uncompiled
 //!    reference (`estimate_uncompiled_with`) for all four model families —
-//!    totals, unit roots, fused member lists, per-unit f64 bits;
-//! 2. the structural hash / fingerprint is stable under layer renaming
+//!    totals, unit roots, fused member lists, elided sets, per-unit f64
+//!    bits;
+//! 2. the mapping pass obeys its laws: deterministic, root assignment
+//!    idempotent (`root_of ∘ root_of = root_of`), and units + members +
+//!    elided partition the layers (each layer in exactly one role);
+//! 3. the structural hash / fingerprint is stable under layer renaming
 //!    (labels are not structure);
-//! 3. JSON serialization round-trips to an identical graph with an
+//! 4. JSON serialization round-trips to an identical graph with an
 //!    identical fingerprint.
 //!
 //! Failures shrink by prefix truncation (see `prop::shrink_to_minimal`) and
@@ -70,12 +74,49 @@ fn check_graph(est: &Estimator, g: &Graph) -> Option<String> {
                 ));
             }
         }
+        if fast.elided != slow.elided {
+            return Some(format!(
+                "{kind:?}: elided sets diverged ({:?} vs {:?})",
+                fast.elided, slow.elided
+            ));
+        }
         if est.total_ms(g, kind).to_bits() != fast.total_ms().to_bits() {
             return Some(format!("{kind:?}: total-only fast path diverged"));
         }
     }
 
-    // Property 2: layer labels are not structure.
+    // Property 2: the mapping pass obeys its laws.
+    let mapped = annette::mapping::apply(&est.model().mapping, g);
+    if annette::mapping::apply(&est.model().mapping, g) != mapped {
+        return Some("mapping pass is not deterministic".to_string());
+    }
+    let mut roles = vec![0usize; g.len()];
+    for unit in &mapped.units {
+        roles[unit.root] += 1;
+        for &m in &unit.members {
+            roles[m] += 1;
+            if mapped.root_of[m] != unit.root {
+                return Some(format!("member {m} disagrees with root_of"));
+            }
+        }
+    }
+    for &e in &mapped.elided {
+        roles[e] += 1;
+    }
+    if let Some(id) = roles.iter().position(|&c| c != 1) {
+        return Some(format!(
+            "mapping partition violated: layer {id} plays {} roles",
+            roles[id]
+        ));
+    }
+    for lay in &g.layers {
+        let root = mapped.root_of[lay.id];
+        if mapped.root_of[root] != root {
+            return Some(format!("root assignment not idempotent at layer {}", lay.id));
+        }
+    }
+
+    // Property 3: layer labels are not structure.
     let mut relabeled = g.clone();
     for lay in &mut relabeled.layers {
         lay.name = format!("relabeled_{}", lay.id);
@@ -89,7 +130,7 @@ fn check_graph(est: &Estimator, g: &Graph) -> Option<String> {
         return Some("fingerprint moved under layer renaming".to_string());
     }
 
-    // Property 3: Graph → JSON → Graph is the identity (same fingerprint).
+    // Property 4: Graph → JSON → Graph is the identity (same fingerprint).
     let text = serial::graph_to_value(g).to_string();
     let back = match Value::parse(&text).and_then(|v| serial::graph_from_value(&v)) {
         Ok(back) => back,
