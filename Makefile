@@ -1,10 +1,13 @@
 # Convenience targets for the annette reproduction.
 
-.PHONY: build test lint examples fleet-demo map-demo prop-extended bench bench-smoke artifacts clean
+.PHONY: build test lint doc examples fleet-demo map-demo explore-demo prop-extended bench bench-smoke artifacts clean
 
 build:
 	cargo build --release
 
+# Tier-1 tests. `cargo test` also runs the library doctests, so the runnable
+# examples in the API docs (Estimator, Fleet, MappingModel::apply, Explorer)
+# are exercised on every run.
 test:
 	cargo test -q
 
@@ -12,6 +15,12 @@ test:
 lint:
 	cargo fmt --check
 	cargo clippy --all-targets -- -D warnings
+
+# API docs with broken intra-doc links (and any other rustdoc warning)
+# promoted to errors — the same check the CI doc job runs. The rendered
+# docs land in target/doc/annette/.
+doc:
+	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 
 # Run every example end to end (the tier-1 demo flow).
 examples: build
@@ -22,6 +31,7 @@ examples: build
 	cargo run --release --example nas_search
 	cargo run --release --example fleet_compare
 	cargo run --release --example map_demo
+	cargo run --release --example explore_demo
 
 # Fit the whole device fleet, print the 12-network x 3-device latency
 # matrix with best-device placement, and demo the fleet service protocol.
@@ -32,6 +42,12 @@ fleet-demo: build
 # before and after the rewrite pass (fused chains + elided layers).
 map-demo: build
 	cargo run --release --example map_demo
+
+# Design-space exploration: fit the fleet, search the NASBench-style space
+# under per-device latency budgets, print per-device + fleet-robust Pareto
+# fronts, and validate front fidelity against simulator ground truth.
+explore-demo: build
+	cargo run --release --example explore_demo
 
 # Long randomized property run (the nightly CI job). Tier-1 always runs the
 # 200-graph fixed-seed pass via `cargo test`.

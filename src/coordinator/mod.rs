@@ -1,4 +1,14 @@
-//! Benchmark orchestration and the resident estimation service.
+//! Benchmark orchestration and the resident estimation service — the two
+//! ends of the pipeline.
+//!
+//! [`orchestrator`] is ANNETTE's benchmark phase: [`run_campaign`] sweeps
+//! micro-kernel configurations and mapping probes over a device and
+//! produces the [`BenchData`] document the model generator fits from.
+//! [`service`] is the deployment form of the estimation phase: a resident
+//! [`Service`] answering line-delimited JSON requests (`models`,
+//! `estimate`, `explore`) for one device or a whole fleet, with in-band
+//! errors and deterministic, input-ordered parallel batch serving. The full
+//! wire protocol is specified in `docs/ARCHITECTURE.md`.
 
 pub mod orchestrator;
 pub mod service;

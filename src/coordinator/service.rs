@@ -19,6 +19,19 @@
 //!     plus the predicted-fastest one (mutually exclusive with `device`).
 //!   * `"total_only":true` — skip the per-unit breakdown (the NAS
 //!     screening fast path; implied by fleet mode).
+//! * `{"op":"explore","candidates":64,"generations":4,...}` — run a
+//!   design-space exploration ([`crate::explore::Explorer`]) over the
+//!   NASBench-style space and answer with the latency × cost Pareto front.
+//!   All fields are optional and capped ([`EXPLORE_MAX_CANDIDATES`] and
+//!   friends keep one request a bounded unit of work): `seed`,
+//!   `candidates` (initial population), `generations`, `children` (per
+//!   generation), `kind`, `cost` (`"params"` or `"macs"`), and `budget_ms`
+//!   (a per-device latency budget). Routing mirrors `estimate`: `device`
+//!   runs the search against that device alone (default: the first target)
+//!   and returns its front, while `"fleet":true` scores every device and
+//!   returns per-device fronts plus the fleet-robust front over worst-case
+//!   latency. The engine is deterministic, so a front is reproducible from
+//!   the request alone.
 //!
 //! The service compiles each platform model **once** at construction
 //! ([`crate::estim::CompiledModel`]), caches compiled graphs in one shared
@@ -28,13 +41,27 @@
 //! [`Service::serve_lines`] fans a batch of request lines across worker
 //! threads with deterministic, input-ordered output.
 
+use crate::coordinator::orchestrator::default_threads;
 use crate::error::{Error, Result};
 use crate::estim::compiled::{CompiledModel, GraphCache};
+use crate::explore::{CostProxy, ExploreConfig, Explorer, NasBenchSpace, SearchSpace};
 use crate::graph::serial;
 use crate::json::{write_json_f64, write_json_str, write_json_usize, Value};
 use crate::models::layer::ModelKind;
 use crate::models::platform::PlatformModel;
 use crate::par::fan_indexed;
+
+/// Most initial candidates one `explore` request may ask for.
+pub const EXPLORE_MAX_CANDIDATES: usize = 512;
+/// Most mutation generations one `explore` request may ask for.
+pub const EXPLORE_MAX_GENERATIONS: usize = 32;
+/// Most children per generation one `explore` request may ask for.
+pub const EXPLORE_MAX_CHILDREN: usize = 256;
+/// Request-side default generation count — deliberately smaller than
+/// [`ExploreConfig::default`]'s, so a bare `{"op":"explore"}` stays a quick
+/// request. Seed / population / children defaults come from the config
+/// itself.
+const EXPLORE_DEFAULT_GENERATIONS: usize = 4;
 
 /// One served device: routing label plus the compiled platform model.
 struct Target {
@@ -47,6 +74,12 @@ struct Target {
 pub struct Service {
     targets: Vec<Target>,
     cache: GraphCache,
+    /// Fleet-wide explorer (scores every target; robust-front selection).
+    explorer: Explorer<NasBenchSpace>,
+    /// One single-target explorer per device, in target order: a
+    /// device-routed explore request searches under *that* device's
+    /// objective only, and pays for scoring only that device.
+    device_explorers: Vec<Explorer<NasBenchSpace>>,
 }
 
 impl Service {
@@ -84,7 +117,7 @@ impl Service {
                 return Err(Error::Invalid(format!("duplicate device label `{label}`")));
             }
         }
-        let targets = targets
+        let targets: Vec<Target> = targets
             .into_iter()
             .map(|(label, model)| {
                 let compiled = CompiledModel::compile(&model);
@@ -95,9 +128,26 @@ impl Service {
                 }
             })
             .collect();
+        let explorer = Explorer::new(
+            NasBenchSpace,
+            targets
+                .iter()
+                .map(|t| (t.label.clone(), t.compiled.clone()))
+                .collect(),
+        )
+        .expect("service target labels are validated above");
+        let device_explorers = targets
+            .iter()
+            .map(|t| {
+                Explorer::new(NasBenchSpace, vec![(t.label.clone(), t.compiled.clone())])
+                    .expect("service target labels are validated above")
+            })
+            .collect();
         Ok(Service {
             targets,
             cache: GraphCache::new(),
+            explorer,
+            device_explorers,
         })
     }
 
@@ -152,6 +202,7 @@ impl Service {
                 Ok(())
             }
             "estimate" => self.estimate(&req, out),
+            "explore" => self.explore(&req, out),
             other => Err(Error::Invalid(format!("unknown op `{other}`"))),
         }
     }
@@ -173,11 +224,11 @@ impl Service {
             }
             write_json_str(out, kind.as_str());
         }
-        out.push_str("]}");
+        out.push_str("],\"ops\":[\"models\",\"estimate\",\"explore\"]}");
     }
 
-    fn target(&self, label: &str) -> Result<&Target> {
-        self.targets.iter().find(|t| t.label == label).ok_or_else(|| {
+    fn target_index(&self, label: &str) -> Result<usize> {
+        self.targets.iter().position(|t| t.label == label).ok_or_else(|| {
             Error::Invalid(format!(
                 "unknown device `{label}` (serving: {})",
                 self.device_labels().join(", ")
@@ -185,17 +236,27 @@ impl Service {
         })
     }
 
-    fn estimate(&self, req: &Value, out: &mut String) -> Result<()> {
-        let kind = match req.get("kind") {
+    fn target(&self, label: &str) -> Result<&Target> {
+        Ok(&self.targets[self.target_index(label)?])
+    }
+
+    /// The `kind` request field, defaulting to the mixed model.
+    fn req_kind(req: &Value) -> Result<ModelKind> {
+        match req.get("kind") {
             Some(v) => {
                 let s = v
                     .as_str()
                     .ok_or_else(|| Error::Invalid("`kind` must be a string".to_string()))?;
                 ModelKind::parse(s)
-                    .ok_or_else(|| Error::Invalid(format!("unknown model kind `{s}`")))?
+                    .ok_or_else(|| Error::Invalid(format!("unknown model kind `{s}`")))
             }
-            None => ModelKind::Mixed,
-        };
+            None => Ok(ModelKind::Mixed),
+        }
+    }
+
+    /// The routing fields shared by `estimate` and `explore`: `fleet` mode
+    /// and/or an explicit `device` label (mutually exclusive).
+    fn req_routing<'r>(req: &'r Value) -> Result<(bool, Option<&'r str>)> {
         let fleet = matches!(req.get("fleet"), Some(Value::Bool(true)));
         let device = match req.get("device") {
             Some(v) => Some(
@@ -209,6 +270,28 @@ impl Service {
                 "`fleet` answers for every device; drop the `device` field".to_string(),
             ));
         }
+        Ok((fleet, device))
+    }
+
+    /// An optional integer request field, bounded inclusively.
+    fn req_bounded(req: &Value, key: &str, default: usize, lo: usize, hi: usize) -> Result<usize> {
+        let v = match req.get(key) {
+            Some(v) => v.as_usize().ok_or_else(|| {
+                Error::Invalid(format!("`{key}` must be a non-negative integer"))
+            })?,
+            None => default,
+        };
+        if v < lo || v > hi {
+            return Err(Error::Invalid(format!(
+                "`{key}` must be between {lo} and {hi}"
+            )));
+        }
+        Ok(v)
+    }
+
+    fn estimate(&self, req: &Value, out: &mut String) -> Result<()> {
+        let kind = Service::req_kind(req)?;
+        let (fleet, device) = Service::req_routing(req)?;
         let target = match device {
             Some(label) => self.target(label)?,
             None => &self.targets[0],
@@ -311,6 +394,164 @@ impl Service {
         out.push_str(",\"total_ms\":");
         write_json_f64(out, bms);
         out.push_str("}}");
+        Ok(())
+    }
+
+    /// Run a bounded design-space exploration and answer with the Pareto
+    /// front(s). Deterministic: equal requests produce byte-identical
+    /// responses, so fronts are reproducible from the request alone.
+    fn explore(&self, req: &Value, out: &mut String) -> Result<()> {
+        let defaults = ExploreConfig::default();
+        let kind = Service::req_kind(req)?;
+        let (fleet, device) = Service::req_routing(req)?;
+        let population = Service::req_bounded(
+            req,
+            "candidates",
+            defaults.population,
+            1,
+            EXPLORE_MAX_CANDIDATES,
+        )?;
+        let generations = Service::req_bounded(
+            req,
+            "generations",
+            EXPLORE_DEFAULT_GENERATIONS,
+            0,
+            EXPLORE_MAX_GENERATIONS,
+        )?;
+        let children =
+            Service::req_bounded(req, "children", defaults.children, 0, EXPLORE_MAX_CHILDREN)?;
+        let seed = match req.get("seed") {
+            Some(v) => v.as_usize().ok_or_else(|| {
+                Error::Invalid("`seed` must be a non-negative integer".to_string())
+            })? as u64,
+            None => defaults.seed,
+        };
+        let cost = match req.get("cost") {
+            Some(v) => {
+                let s = v
+                    .as_str()
+                    .ok_or_else(|| Error::Invalid("`cost` must be a string".to_string()))?;
+                CostProxy::parse(s)
+                    .ok_or_else(|| Error::Invalid(format!("unknown cost proxy `{s}`")))?
+            }
+            None => CostProxy::Params,
+        };
+        // A scalar budget constrains the routed device, or — in fleet mode —
+        // every device at once.
+        let mut budgets_ms: Vec<(String, f64)> = Vec::new();
+        if let Some(v) = req.get("budget_ms") {
+            let b = v
+                .as_f64()
+                .ok_or_else(|| Error::Invalid("`budget_ms` must be a number".to_string()))?;
+            if fleet {
+                budgets_ms = self.targets.iter().map(|t| (t.label.clone(), b)).collect();
+            } else {
+                let label = device.unwrap_or(self.targets[0].label.as_str());
+                budgets_ms.push((label.to_string(), b));
+            }
+        }
+        // Resolve the routed device before running anything (and let the
+        // explorer validate the budget values themselves).
+        let ti = match device {
+            Some(label) => self.target_index(label)?,
+            None => 0,
+        };
+        let cfg = ExploreConfig {
+            seed,
+            population,
+            generations,
+            children,
+            kind,
+            cost,
+            budgets_ms,
+            threads: default_threads(),
+        };
+        // Fleet mode searches all targets under the robust objective; a
+        // device-routed request searches that device alone.
+        let result = if fleet {
+            self.explorer.run(&cfg)?
+        } else {
+            self.device_explorers[ti].run(&cfg)?
+        };
+
+        let front_member = |out: &mut String, index: usize, latency_key: &str, latency: f64| {
+            let e = &result.archive[index];
+            out.push_str("{\"name\":");
+            write_json_str(out, &e.name);
+            out.push_str(",\"cost\":");
+            write_json_f64(out, e.cost);
+            out.push_str(",\"");
+            out.push_str(latency_key);
+            out.push_str("\":");
+            write_json_f64(out, latency);
+            out.push('}');
+        };
+        out.push_str("{\"ok\":true,\"op\":\"explore\",\"space\":");
+        write_json_str(out, self.explorer.space().name());
+        out.push_str(",\"kind\":");
+        write_json_str(out, kind.as_str());
+        out.push_str(",\"seed\":");
+        write_json_usize(out, seed as usize);
+        out.push_str(",\"evaluated\":");
+        write_json_usize(out, result.evaluated());
+        if !fleet {
+            out.push_str(",\"device\":");
+            write_json_str(out, &self.targets[ti].label);
+            out.push_str(",\"front\":[");
+            for (i, p) in result.per_device[0].iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                front_member(out, p.index, "latency_ms", p.latency_ms);
+            }
+            out.push_str("]}");
+            return Ok(());
+        }
+        out.push_str(",\"devices\":[");
+        for (i, t) in self.targets.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            write_json_str(out, &t.label);
+        }
+        out.push_str("],\"fronts\":[");
+        for (t, front) in result.per_device.iter().enumerate() {
+            if t > 0 {
+                out.push(',');
+            }
+            out.push_str("{\"device\":");
+            write_json_str(out, &self.targets[t].label);
+            out.push_str(",\"front\":[");
+            for (i, p) in front.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                front_member(out, p.index, "latency_ms", p.latency_ms);
+            }
+            out.push_str("]}");
+        }
+        out.push_str("],\"robust\":[");
+        for (i, p) in result.robust.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let e = &result.archive[p.index];
+            out.push_str("{\"name\":");
+            write_json_str(out, &e.name);
+            out.push_str(",\"cost\":");
+            write_json_f64(out, e.cost);
+            out.push_str(",\"worst_ms\":");
+            write_json_f64(out, p.latency_ms);
+            out.push_str(",\"latency_ms\":[");
+            for (j, ms) in e.latency_ms.iter().enumerate() {
+                if j > 0 {
+                    out.push(',');
+                }
+                write_json_f64(out, *ms);
+            }
+            out.push_str("]}");
+        }
+        out.push_str("]}");
         Ok(())
     }
 }
@@ -509,6 +750,92 @@ mod tests {
         );
         let resp = Value::parse(&svc.handle(&conflicted)).unwrap();
         assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(false));
+    }
+
+    #[test]
+    fn explore_op_returns_a_front_and_is_deterministic() {
+        let svc = service();
+        let req = r#"{"op":"explore","candidates":12,"generations":2,"children":6,"seed":7}"#;
+        let first = svc.handle(req);
+        let resp = Value::parse(&first).unwrap();
+        assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(true));
+        assert_eq!(resp.req_str("device").unwrap(), "ZCU102-DPU-sim");
+        assert_eq!(resp.req_str("space").unwrap(), "nasbench");
+        assert!(resp.req_usize("evaluated").unwrap() >= 12);
+        let front = resp.req_arr("front").unwrap();
+        assert!(!front.is_empty());
+        for m in front {
+            assert!(m.get("name").is_some());
+            assert!(m.req_f64("cost").unwrap() > 0.0);
+            assert!(m.req_f64("latency_ms").unwrap() > 0.0);
+        }
+        // Deterministic: the identical request reproduces the bytes.
+        assert_eq!(svc.handle(req), first);
+        // A different seed explores a different stream.
+        let other = svc
+            .handle(r#"{"op":"explore","candidates":12,"generations":2,"children":6,"seed":8}"#);
+        assert_ne!(other, first);
+    }
+
+    #[test]
+    fn explore_op_respects_budgets_and_caps() {
+        let svc = service();
+        let resp = Value::parse(&svc.handle(
+            r#"{"op":"explore","candidates":16,"generations":1,"children":4,"budget_ms":2.0}"#,
+        ))
+        .unwrap();
+        assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(true));
+        for m in resp.req_arr("front").unwrap() {
+            assert!(m.req_f64("latency_ms").unwrap() <= 2.0);
+        }
+        // Over-cap, zero, malformed, and conflicting requests fail in-band.
+        for bad in [
+            r#"{"op":"explore","candidates":100000}"#.to_string(),
+            r#"{"op":"explore","candidates":0}"#.to_string(),
+            r#"{"op":"explore","generations":999}"#.to_string(),
+            r#"{"op":"explore","children":99999}"#.to_string(),
+            r#"{"op":"explore","seed":"lucky"}"#.to_string(),
+            r#"{"op":"explore","cost":"flops"}"#.to_string(),
+            r#"{"op":"explore","budget_ms":-1.0}"#.to_string(),
+            r#"{"op":"explore","device":"gpu-h100"}"#.to_string(),
+            r#"{"op":"explore","fleet":true,"device":"x"}"#.to_string(),
+        ] {
+            let resp = Value::parse(&svc.handle(&bad)).unwrap();
+            assert_eq!(
+                resp.get("ok").and_then(|v| v.as_bool()),
+                Some(false),
+                "request {bad} must fail in-band"
+            );
+        }
+    }
+
+    #[test]
+    fn explore_fleet_mode_reports_per_device_and_robust_fronts() {
+        let svc = fleet_service();
+        let resp = Value::parse(&svc.handle(
+            r#"{"op":"explore","fleet":true,"candidates":10,"generations":1,"children":4}"#,
+        ))
+        .unwrap();
+        assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(true));
+        assert_eq!(resp.req_arr("devices").unwrap().len(), 3);
+        let fronts = resp.req_arr("fronts").unwrap();
+        assert_eq!(fronts.len(), 3);
+        for f in fronts {
+            assert!(f.get("device").is_some());
+            assert!(!f.req_arr("front").unwrap().is_empty());
+        }
+        let robust = resp.req_arr("robust").unwrap();
+        assert!(!robust.is_empty());
+        for m in robust {
+            let per_dev = m.req_arr("latency_ms").unwrap();
+            assert_eq!(per_dev.len(), 3);
+            let worst = m.req_f64("worst_ms").unwrap();
+            let max = per_dev
+                .iter()
+                .map(|v| v.as_f64().unwrap())
+                .fold(f64::NEG_INFINITY, f64::max);
+            assert_eq!(worst.to_bits(), max.to_bits());
+        }
     }
 
     #[test]

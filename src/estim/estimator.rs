@@ -61,6 +61,31 @@ impl Estimate {
 
 /// Estimates network latency from a fitted [`PlatformModel`] without
 /// compiling or executing the network.
+///
+/// ```
+/// use annette::prelude::*;
+///
+/// // Benchmark phase: profile the (simulated) device and fit its model.
+/// let dev = DpuDevice::zcu102();
+/// let bench = run_campaign(&dev, 1, 2);
+/// let model = PlatformModel::fit(&dev.spec(), &bench);
+///
+/// // Estimation phase: predict a network the device never executed.
+/// let est = Estimator::new(&model);
+/// let mut b = GraphBuilder::new("doc-net");
+/// let i = b.input(16, 16, 3);
+/// let x = b.conv_bn_relu(i, 8, 3, 1);
+/// b.classifier(x, 10);
+/// let g = b.finish().unwrap();
+/// let estimate = est.estimate(&g);
+/// assert!(estimate.total_ms() > 0.0);
+/// // conv + bn + relu collapse into one execution unit under the learned
+/// // mapping model, so there are fewer units than layers.
+/// assert!(estimate.units.len() < g.len());
+/// // The total-only fast path agrees bit-for-bit with the breakdown.
+/// let fast = est.total_ms(&g, ModelKind::Mixed);
+/// assert_eq!(fast.to_bits(), estimate.total_ms().to_bits());
+/// ```
 pub struct Estimator<'a> {
     model: &'a PlatformModel,
     compiled: CompiledModel,

@@ -1,0 +1,555 @@
+//! Hardware-aware design-space exploration: architecture search under
+//! latency constraints, against one device or the whole fleet.
+//!
+//! ANNETTE's stated purpose is to *decouple architecture search from the
+//! target hardware* — the estimator exists so that NAS can be driven by
+//! predicted latency instead of on-device measurement (§7.5 validates
+//! exactly this on NASBench samples). This module composes everything the
+//! crate has built toward that promise into an actual search engine:
+//!
+//! * a [`SearchSpace`] ([`space`]) separates candidate **genotypes** from
+//!   their realization as graphs, so candidates can be seeded, sampled, and
+//!   locally mutated — [`NasBenchSpace`] generalizes the
+//!   [`crate::zoo::nasbench`] sampler;
+//! * a [`pareto`] module keeps the latency × cost [`pareto_front`] with
+//!   deterministic `total_cmp` tie-breaking;
+//! * [`Explorer::run`] drives an evolutionary loop: seed a population,
+//!   score every candidate on every target through the
+//!   [`crate::estim::CompiledModel`] total-only fast path (fanned across
+//!   worker threads via [`crate::par::fan_indexed`]), then repeatedly mutate
+//!   parents drawn from the current front. Per-device latency budgets
+//!   constrain which candidates are feasible, and the result carries one
+//!   front per device plus a **fleet-robust** front (Pareto-optimal under
+//!   worst-case latency across all targets).
+//!
+//! The whole run is deterministic under its [`ExploreConfig::seed`]:
+//! sampling, mutation, scoring, and front extraction are all seeded or
+//! exact, so a front can be reproduced — and served — from the
+//! configuration alone. The [`crate::coordinator::Service`] exposes this
+//! engine as the line-JSON `explore` request.
+
+pub mod pareto;
+pub mod space;
+
+pub use pareto::{dominates, pareto_front, ParetoPoint};
+pub use space::{NasBenchSpace, SearchSpace};
+
+use std::collections::HashSet;
+
+use crate::coordinator::orchestrator::default_threads;
+use crate::error::{Error, Result};
+use crate::estim::compiled::{CompiledModel, GraphCache};
+use crate::fleet::Fleet;
+use crate::graph::Graph;
+use crate::models::layer::ModelKind;
+use crate::models::platform::PlatformModel;
+use crate::par::fan_indexed;
+use crate::rng::Rng;
+
+/// Fixed seed of the structural dedup hash. Candidate graphs carry unique
+/// names, so dedup hashes a name-cleared copy: two candidates are "the same"
+/// iff they are structurally identical. A fixed (rather than per-process)
+/// seed keeps explore runs reproducible across processes.
+const DEDUP_SEED: u64 = 0x0DED_0B5E_55ED_5EED;
+
+/// How many mutation attempts may be spent per child slot before the slot is
+/// forfeited (every attempt that lands on an already-seen structure retries
+/// with a fresh parent and mutation seed).
+const MUTATION_ATTEMPTS: usize = 4;
+
+/// The hardware-independent cost objective candidates trade against latency.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CostProxy {
+    /// Parameter count: the sum of every layer's weight elements.
+    Params,
+    /// MAC count: the summed operation counts at 2 ops per MAC
+    /// (Σ [`crate::graph::Layer::flops`] / 2).
+    Macs,
+}
+
+impl CostProxy {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            CostProxy::Params => "params",
+            CostProxy::Macs => "macs",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<CostProxy> {
+        match s {
+            "params" => Some(CostProxy::Params),
+            "macs" => Some(CostProxy::Macs),
+            _ => None,
+        }
+    }
+}
+
+/// The cost objective of `g` under `proxy`.
+pub fn cost_of(g: &Graph, proxy: CostProxy) -> f64 {
+    match proxy {
+        CostProxy::Params => g.layers.iter().map(|l| l.weight_elems()).sum(),
+        CostProxy::Macs => g.layers.iter().map(|l| l.flops()).sum::<f64>() / 2.0,
+    }
+}
+
+/// Configuration of one exploration run. All fields are plain data: two runs
+/// with equal configurations (and the same explorer targets) produce
+/// bit-identical results, regardless of `threads`.
+#[derive(Clone, Debug)]
+pub struct ExploreConfig {
+    /// Master seed: drives sampling, parent selection, and mutation.
+    pub seed: u64,
+    /// Size of the seeded initial population (generation 0).
+    pub population: usize,
+    /// Number of mutation generations after the initial population.
+    pub generations: usize,
+    /// Child candidates derived per generation.
+    pub children: usize,
+    /// Model family candidates are scored with.
+    pub kind: ModelKind,
+    /// Cost objective traded against latency.
+    pub cost: CostProxy,
+    /// Per-device latency budgets `(device label, budget in ms)`: a
+    /// candidate is feasible for a device's front only at or under that
+    /// device's budget, and for the robust front only under **all** budgets.
+    /// Devices without an entry are unconstrained.
+    pub budgets_ms: Vec<(String, f64)>,
+    /// Worker threads for scoring (results are thread-count invariant).
+    pub threads: usize,
+}
+
+impl Default for ExploreConfig {
+    fn default() -> Self {
+        ExploreConfig {
+            seed: 0xA11E77E,
+            population: 64,
+            generations: 8,
+            children: 32,
+            kind: ModelKind::Mixed,
+            cost: CostProxy::Params,
+            budgets_ms: Vec::new(),
+            threads: default_threads(),
+        }
+    }
+}
+
+/// One scored candidate in the exploration archive.
+#[derive(Clone, Debug)]
+pub struct Evaluated {
+    /// Candidate name (`<space>-<index>`, stable under a fixed seed).
+    pub name: String,
+    /// The realized network description.
+    pub graph: Graph,
+    /// Cost objective ([`cost_of`] under the run's [`CostProxy`]).
+    pub cost: f64,
+    /// Predicted latency per target, in explorer target order.
+    pub latency_ms: Vec<f64>,
+}
+
+impl Evaluated {
+    /// Worst-case latency across all targets — the robust-front objective.
+    pub fn worst_ms(&self) -> f64 {
+        self.latency_ms.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+}
+
+/// The outcome of one [`Explorer::run`]: every scored candidate plus the
+/// per-device and fleet-robust Pareto fronts (as [`ParetoPoint`]s indexing
+/// into the archive).
+#[derive(Clone, Debug)]
+pub struct ExploreResult {
+    /// Target labels, in explorer order (`latency_ms` and `per_device`
+    /// parallel this).
+    pub targets: Vec<String>,
+    /// Every candidate the run scored, in evaluation order.
+    pub archive: Vec<Evaluated>,
+    /// Per-device Pareto fronts over `(latency on that device, cost)`,
+    /// restricted to candidates meeting that device's budget.
+    pub per_device: Vec<Vec<ParetoPoint>>,
+    /// The fleet-robust front over `(worst-case latency, cost)`, restricted
+    /// to candidates meeting **every** budget.
+    pub robust: Vec<ParetoPoint>,
+}
+
+impl ExploreResult {
+    /// Number of candidates scored.
+    pub fn evaluated(&self) -> usize {
+        self.archive.len()
+    }
+
+    /// The archive entry a front point refers to.
+    pub fn member(&self, p: &ParetoPoint) -> &Evaluated {
+        &self.archive[p.index]
+    }
+}
+
+/// The design-space exploration engine: an evolutionary search over a
+/// [`SearchSpace`], scored against one or more compiled platform models.
+///
+/// ```
+/// use annette::explore::{ExploreConfig, Explorer, NasBenchSpace};
+/// use annette::prelude::*;
+///
+/// let dev = DpuDevice::zcu102();
+/// let bench = run_campaign(&dev, 1, 2);
+/// let model = PlatformModel::fit(&dev.spec(), &bench);
+/// let explorer = Explorer::for_device(NasBenchSpace, "dpu-zcu102", &model).unwrap();
+/// let cfg = ExploreConfig {
+///     population: 8,
+///     generations: 1,
+///     children: 4,
+///     ..ExploreConfig::default()
+/// };
+/// let result = explorer.run(&cfg).unwrap();
+/// assert!(!result.per_device[0].is_empty());
+/// // Deterministic: the same configuration reproduces the same front.
+/// assert_eq!(result.robust, explorer.run(&cfg).unwrap().robust);
+/// ```
+pub struct Explorer<S: SearchSpace> {
+    space: S,
+    targets: Vec<(String, CompiledModel)>,
+    cache: GraphCache,
+}
+
+impl<S: SearchSpace> Explorer<S> {
+    /// Build an explorer over already-compiled targets. Labels must be
+    /// non-empty and unique (they key budgets and result fronts).
+    pub fn new(space: S, targets: Vec<(String, CompiledModel)>) -> Result<Explorer<S>> {
+        if targets.is_empty() {
+            return Err(Error::Invalid(
+                "an explorer needs at least one target model".to_string(),
+            ));
+        }
+        for (i, (label, _)) in targets.iter().enumerate() {
+            if label.is_empty() {
+                return Err(Error::Invalid("empty explorer target label".to_string()));
+            }
+            if targets[..i].iter().any(|(l, _)| l == label) {
+                return Err(Error::Invalid(format!(
+                    "duplicate explorer target `{label}`"
+                )));
+            }
+        }
+        Ok(Explorer {
+            space,
+            targets,
+            cache: GraphCache::new(),
+        })
+    }
+
+    /// Explore against a single fitted platform model.
+    pub fn for_device(space: S, label: &str, model: &PlatformModel) -> Result<Explorer<S>> {
+        Explorer::new(space, vec![(label.to_string(), CompiledModel::compile(model))])
+    }
+
+    /// Explore against every member of a fitted [`Fleet`] (labels are the
+    /// registry ids, in fleet order).
+    pub fn for_fleet(space: S, fleet: &Fleet) -> Explorer<S> {
+        let targets = fleet
+            .members()
+            .iter()
+            .map(|m| (m.entry.id.to_string(), CompiledModel::compile(&m.model)))
+            .collect();
+        Explorer::new(space, targets)
+            .expect("fleet construction guarantees non-empty, unique device ids")
+    }
+
+    /// Target labels, in scoring order.
+    pub fn targets(&self) -> Vec<&str> {
+        self.targets.iter().map(|(l, _)| l.as_str()).collect()
+    }
+
+    /// The search space this explorer samples from.
+    pub fn space(&self) -> &S {
+        &self.space
+    }
+
+    /// Run the evolutionary search: seed `population` candidates, then for
+    /// each generation mutate parents drawn from the current robust front
+    /// and score the children, all through the compiled total-only fast
+    /// path. Returns the archive and its Pareto fronts.
+    ///
+    /// Deterministic under `cfg.seed` for a given explorer: every random
+    /// decision derives from the config, scoring is exact, and
+    /// [`crate::par::fan_indexed`] makes thread count unobservable.
+    pub fn run(&self, cfg: &ExploreConfig) -> Result<ExploreResult> {
+        if cfg.population == 0 {
+            return Err(Error::Invalid(
+                "explore population must be at least 1".to_string(),
+            ));
+        }
+        let budgets = self.resolve_budgets(cfg)?;
+        let mut rng = Rng::new(cfg.seed ^ 0xE8A1_0E5E);
+        let mut archive: Vec<Evaluated> = Vec::new();
+        let mut points: Vec<S::Point> = Vec::new();
+        let mut seen: HashSet<u64> = HashSet::new();
+
+        // Generation 0: the seeded population.
+        let mut batch: Vec<(S::Point, Graph)> = Vec::new();
+        for i in 0..cfg.population {
+            let point = self.space.sample(cfg.seed, i);
+            self.admit(point, &mut batch, archive.len(), &mut seen);
+        }
+        self.score_batch(batch, cfg, &mut archive, &mut points);
+
+        // Mutation generations: parents come from the current robust front.
+        for _gen in 0..cfg.generations {
+            let pool = self.selection_pool(&archive, &budgets);
+            if pool.is_empty() {
+                break; // empty archive: nothing to mutate from
+            }
+            let mut batch: Vec<(S::Point, Graph)> = Vec::new();
+            for _child in 0..cfg.children {
+                for _attempt in 0..MUTATION_ATTEMPTS {
+                    let parent = pool[rng.range(0, pool.len())];
+                    let child = self.space.mutate(&points[parent], rng.next_u64());
+                    if self.admit(child, &mut batch, archive.len(), &mut seen) {
+                        break;
+                    }
+                }
+            }
+            self.score_batch(batch, cfg, &mut archive, &mut points);
+        }
+
+        // Fronts: one per device under its own budget, plus the
+        // worst-case-latency robust front under all budgets.
+        let per_device = (0..self.targets.len())
+            .map(|t| {
+                let pts: Vec<ParetoPoint> = archive
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, e)| match budgets[t] {
+                        Some(b) => e.latency_ms[t] <= b,
+                        None => true,
+                    })
+                    .map(|(i, e)| ParetoPoint {
+                        index: i,
+                        latency_ms: e.latency_ms[t],
+                        cost: e.cost,
+                    })
+                    .collect();
+                pareto_front(&pts)
+            })
+            .collect();
+        let robust = pareto_front(&self.robust_points(&archive, &budgets, true));
+        Ok(ExploreResult {
+            targets: self.targets().iter().map(|s| s.to_string()).collect(),
+            archive,
+            per_device,
+            robust,
+        })
+    }
+
+    /// Validate the config's budget list against the target labels and
+    /// project it onto target order.
+    fn resolve_budgets(&self, cfg: &ExploreConfig) -> Result<Vec<Option<f64>>> {
+        let mut budgets: Vec<Option<f64>> = vec![None; self.targets.len()];
+        for (label, ms) in &cfg.budgets_ms {
+            let t = self
+                .targets
+                .iter()
+                .position(|(l, _)| l == label)
+                .ok_or_else(|| {
+                    Error::Invalid(format!(
+                        "budget names unknown device `{label}` (targets: {})",
+                        self.targets().join(", ")
+                    ))
+                })?;
+            if !ms.is_finite() || *ms <= 0.0 {
+                return Err(Error::Invalid(format!(
+                    "budget for `{label}` must be a positive latency in ms"
+                )));
+            }
+            if budgets[t].is_some() {
+                return Err(Error::Invalid(format!("duplicate budget for `{label}`")));
+            }
+            budgets[t] = Some(*ms);
+        }
+        Ok(budgets)
+    }
+
+    /// Realize `point` and admit it into `batch` unless its structure has
+    /// been seen before. Names are assigned by final archive position, so
+    /// they are stable under a fixed seed.
+    fn admit(
+        &self,
+        point: S::Point,
+        batch: &mut Vec<(S::Point, Graph)>,
+        scored: usize,
+        seen: &mut HashSet<u64>,
+    ) -> bool {
+        let name = format!("{}-{:05}", self.space.name(), scored + batch.len());
+        let graph = self.space.realize(&point, &name);
+        let mut keyed = graph.clone();
+        keyed.name.clear();
+        if !seen.insert(keyed.structural_hash(DEDUP_SEED)) {
+            return false;
+        }
+        batch.push((point, graph));
+        true
+    }
+
+    /// Score a batch of candidates on every target (the compiled total-only
+    /// fast path, fanned across workers) and append them to the archive.
+    fn score_batch(
+        &self,
+        batch: Vec<(S::Point, Graph)>,
+        cfg: &ExploreConfig,
+        archive: &mut Vec<Evaluated>,
+        points: &mut Vec<S::Point>,
+    ) {
+        let d = self.targets.len();
+        let lats = fan_indexed(batch.len() * d, cfg.threads, |i| {
+            let (_, graph) = &batch[i / d];
+            self.cache
+                .get_or_compile(&self.targets[i % d].1, graph)
+                .total_ms(cfg.kind)
+        });
+        for (ci, (point, graph)) in batch.into_iter().enumerate() {
+            archive.push(Evaluated {
+                name: graph.name.clone(),
+                cost: cost_of(&graph, cfg.cost),
+                latency_ms: lats[ci * d..(ci + 1) * d].to_vec(),
+                graph,
+            });
+            points.push(point);
+        }
+    }
+
+    /// Archive indices parents are drawn from: the robust front over
+    /// budget-feasible candidates, falling back to the unconstrained robust
+    /// front when no candidate is feasible yet (the search still needs
+    /// parents to walk toward the feasible region).
+    fn selection_pool(&self, archive: &[Evaluated], budgets: &[Option<f64>]) -> Vec<usize> {
+        let feasible = pareto_front(&self.robust_points(archive, budgets, true));
+        let front = if feasible.is_empty() {
+            pareto_front(&self.robust_points(archive, budgets, false))
+        } else {
+            feasible
+        };
+        front.iter().map(|p| p.index).collect()
+    }
+
+    /// Robust-objective projection of the archive: worst-case latency across
+    /// targets vs. cost, optionally restricted to budget-feasible
+    /// candidates.
+    fn robust_points(
+        &self,
+        archive: &[Evaluated],
+        budgets: &[Option<f64>],
+        enforce_budgets: bool,
+    ) -> Vec<ParetoPoint> {
+        archive
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| {
+                !enforce_budgets
+                    || budgets.iter().enumerate().all(|(t, b)| match b {
+                        Some(b) => e.latency_ms[t] <= *b,
+                        None => true,
+                    })
+            })
+            .map(|(i, e)| ParetoPoint {
+                index: i,
+                latency_ms: e.worst_ms(),
+                cost: e.cost,
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::orchestrator::run_campaign;
+    use crate::hw::device::Device;
+    use crate::hw::dpu::DpuDevice;
+
+    fn dpu_model() -> PlatformModel {
+        let dev = DpuDevice::zcu102();
+        let bench = run_campaign(&dev, 1, 4);
+        PlatformModel::fit(&dev.spec(), &bench)
+    }
+
+    #[test]
+    fn explorer_rejects_bad_targets_and_configs() {
+        assert!(Explorer::<NasBenchSpace>::new(NasBenchSpace, vec![]).is_err());
+        let model = dpu_model();
+        let cm = CompiledModel::compile(&model);
+        assert!(Explorer::new(NasBenchSpace, vec![(String::new(), cm.clone())]).is_err());
+        assert!(Explorer::new(
+            NasBenchSpace,
+            vec![("a".to_string(), cm.clone()), ("a".to_string(), cm.clone())],
+        )
+        .is_err());
+        let explorer = Explorer::for_device(NasBenchSpace, "dpu", &model).unwrap();
+        assert_eq!(explorer.targets(), vec!["dpu"]);
+        let bad_pop = ExploreConfig { population: 0, ..ExploreConfig::default() };
+        assert!(explorer.run(&bad_pop).is_err());
+        for bad in [
+            vec![("gpu".to_string(), 1.0)], // unknown device
+            vec![("dpu".to_string(), 0.0)], // non-positive
+            vec![("dpu".to_string(), f64::NAN)], // NaN
+            vec![("dpu".to_string(), 1.0), ("dpu".to_string(), 2.0)], // duplicate
+        ] {
+            let cfg = ExploreConfig {
+                population: 2,
+                generations: 0,
+                budgets_ms: bad,
+                ..ExploreConfig::default()
+            };
+            assert!(explorer.run(&cfg).is_err());
+        }
+    }
+
+    #[test]
+    fn cost_proxies_are_positive_and_distinct() {
+        let g = crate::zoo::nasbench::sample_network(0, 7);
+        let params = cost_of(&g, CostProxy::Params);
+        let macs = cost_of(&g, CostProxy::Macs);
+        assert!(params > 0.0 && macs > 0.0);
+        assert_ne!(params, macs);
+        for proxy in [CostProxy::Params, CostProxy::Macs] {
+            assert_eq!(CostProxy::parse(proxy.as_str()), Some(proxy));
+        }
+        assert_eq!(CostProxy::parse("flops"), None);
+    }
+
+    #[test]
+    fn search_grows_the_archive_and_keeps_fronts_consistent() {
+        let model = dpu_model();
+        let explorer = Explorer::for_device(NasBenchSpace, "dpu", &model).unwrap();
+        let cfg = ExploreConfig {
+            seed: 11,
+            population: 16,
+            generations: 3,
+            children: 8,
+            ..ExploreConfig::default()
+        };
+        let result = explorer.run(&cfg).unwrap();
+        // Mutation generations added candidates beyond the seed population
+        // (dedup may eat a few, but not most).
+        assert!(result.evaluated() > 16, "{} evaluated", result.evaluated());
+        assert!(result.evaluated() <= 16 + 3 * 8);
+        // Single target: the robust front equals the device front.
+        assert_eq!(result.per_device.len(), 1);
+        assert_eq!(result.robust, result.per_device[0]);
+        // Front members are mutually non-dominating and really on file.
+        for front in result.per_device.iter().chain(std::iter::once(&result.robust)) {
+            assert!(!front.is_empty());
+            for a in front {
+                let e = result.member(a);
+                assert_eq!(e.latency_ms.len(), 1);
+                assert_eq!(a.latency_ms.to_bits(), e.latency_ms[0].to_bits());
+                assert_eq!(a.cost.to_bits(), e.cost.to_bits());
+                for b in front {
+                    assert!(!dominates(a, b));
+                }
+            }
+        }
+        // Candidate names are unique and archive-indexed.
+        let names: std::collections::HashSet<&str> =
+            result.archive.iter().map(|e| e.name.as_str()).collect();
+        assert_eq!(names.len(), result.evaluated());
+    }
+}

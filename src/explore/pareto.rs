@@ -1,0 +1,137 @@
+//! Multi-objective (latency × cost) dominance filtering.
+//!
+//! The exploration engine scores every candidate on two axes — predicted
+//! latency and a hardware-independent cost proxy — and keeps the
+//! **Pareto front**: the candidates no other candidate beats on both axes at
+//! once. [`pareto_front`] is the one implementation, with the laws the
+//! property suite pins down:
+//!
+//! * no front member dominates another front member;
+//! * every dominated candidate is excluded (membership ⇔ non-dominance);
+//! * the front's objective set is invariant under input order and candidate
+//!   relabeling (all comparisons go through [`f64::total_cmp`], and exact
+//!   objective duplicates are kept together — duplicates never dominate each
+//!   other);
+//! * candidates with a NaN objective never enter the front.
+
+/// One candidate projected onto the two exploration objectives. `index`
+/// refers back to the caller's candidate list (the explorer's archive).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ParetoPoint {
+    /// Index of the candidate in the caller's list.
+    pub index: usize,
+    /// Objective 1: predicted latency in milliseconds (lower is better).
+    /// For fleet-robust fronts this is the worst case across devices.
+    pub latency_ms: f64,
+    /// Objective 2: cost proxy, e.g. parameter or MAC count (lower is
+    /// better).
+    pub cost: f64,
+}
+
+/// Strict Pareto dominance: `a` is at least as good as `b` on both
+/// objectives and strictly better on at least one. Points with equal
+/// objectives do not dominate each other, and NaN never dominates or is
+/// required to be dominated (all comparisons with NaN are false).
+pub fn dominates(a: &ParetoPoint, b: &ParetoPoint) -> bool {
+    a.latency_ms <= b.latency_ms
+        && a.cost <= b.cost
+        && (a.latency_ms < b.latency_ms || a.cost < b.cost)
+}
+
+/// The non-dominated subset of `points`, sorted by ascending latency (cost
+/// and index break ties deterministically via [`f64::total_cmp`]).
+///
+/// Exact objective duplicates are mutually non-dominating, so every copy is
+/// kept. Points with a NaN objective are dropped up front: a NaN latency is
+/// not a latency, and `total_cmp` would otherwise rank it past +∞ and keep
+/// it forever. O(n log n): one sort, one sweep.
+pub fn pareto_front(points: &[ParetoPoint]) -> Vec<ParetoPoint> {
+    let mut pts: Vec<ParetoPoint> = points
+        .iter()
+        .filter(|p| !p.latency_ms.is_nan() && !p.cost.is_nan())
+        .copied()
+        .collect();
+    pts.sort_by(|a, b| {
+        a.latency_ms
+            .total_cmp(&b.latency_ms)
+            .then(a.cost.total_cmp(&b.cost))
+            .then(a.index.cmp(&b.index))
+    });
+    let mut front: Vec<ParetoPoint> = Vec::new();
+    let mut best_cost = f64::INFINITY;
+    let mut last: Option<(f64, f64)> = None;
+    for p in pts {
+        // In (latency, cost)-sorted order a point is non-dominated iff it
+        // improves on the cheapest cost seen so far, or exactly duplicates
+        // the previously kept objectives (duplicates never dominate).
+        let dup = matches!(last, Some((l, c)) if p.latency_ms == l && p.cost == c);
+        if p.cost < best_cost || dup {
+            last = Some((p.latency_ms, p.cost));
+            best_cost = best_cost.min(p.cost);
+            front.push(p);
+        }
+    }
+    front
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt(index: usize, latency_ms: f64, cost: f64) -> ParetoPoint {
+        ParetoPoint { index, latency_ms, cost }
+    }
+
+    #[test]
+    fn dominance_is_strict() {
+        assert!(dominates(&pt(0, 1.0, 1.0), &pt(1, 2.0, 2.0)));
+        assert!(dominates(&pt(0, 1.0, 1.0), &pt(1, 1.0, 2.0)));
+        assert!(dominates(&pt(0, 1.0, 1.0), &pt(1, 2.0, 1.0)));
+        // Equal points do not dominate each other.
+        assert!(!dominates(&pt(0, 1.0, 1.0), &pt(1, 1.0, 1.0)));
+        // A tradeoff dominates in neither direction.
+        assert!(!dominates(&pt(0, 1.0, 2.0), &pt(1, 2.0, 1.0)));
+        assert!(!dominates(&pt(1, 2.0, 1.0), &pt(0, 1.0, 2.0)));
+        // NaN neither dominates nor is dominated.
+        assert!(!dominates(&pt(0, f64::NAN, 0.0), &pt(1, 1.0, 1.0)));
+        assert!(!dominates(&pt(1, 1.0, 1.0), &pt(0, f64::NAN, 0.0)));
+    }
+
+    #[test]
+    fn front_keeps_the_staircase_and_drops_the_interior() {
+        let points = vec![
+            pt(0, 1.0, 100.0), // front
+            pt(1, 2.0, 50.0), // front
+            pt(2, 3.0, 50.0), // dominated by 1 (same cost, slower)
+            pt(3, 2.5, 80.0), // dominated by 1
+            pt(4, 4.0, 10.0), // front
+            pt(5, 0.5, 200.0), // front (fastest)
+        ];
+        let front = pareto_front(&points);
+        let idx: Vec<usize> = front.iter().map(|p| p.index).collect();
+        assert_eq!(idx, vec![5, 0, 1, 4], "ascending latency");
+        // No member dominates another.
+        for a in &front {
+            for b in &front {
+                assert!(!dominates(a, b), "{a:?} dominates {b:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn duplicates_survive_together_and_nan_is_dropped() {
+        let points = vec![
+            pt(0, 1.0, 5.0),
+            pt(1, 1.0, 5.0), // exact duplicate of 0: both stay
+            pt(2, 1.0, 6.0), // dominated by 0/1
+            pt(3, f64::NAN, 1.0),
+            pt(4, 0.1, f64::NAN),
+        ];
+        let front = pareto_front(&points);
+        let idx: Vec<usize> = front.iter().map(|p| p.index).collect();
+        assert_eq!(idx, vec![0, 1]);
+        assert!(pareto_front(&[]).is_empty());
+        // A single point is always its own front.
+        assert_eq!(pareto_front(&[pt(9, 3.0, 4.0)]).len(), 1);
+    }
+}

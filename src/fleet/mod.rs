@@ -45,6 +45,21 @@ pub struct DeviceLatency {
 
 /// Platform models for a set of registered devices, ready to estimate any
 /// network on all of them.
+///
+/// ```
+/// use annette::prelude::*;
+///
+/// // One campaign per device, run in parallel; ids come from the registry.
+/// let fleet = Fleet::fit(&["dpu-zcu102", "vpu-ncs2"], 1).unwrap();
+/// let net = annette::zoo::mobilenet::mobilenet_v1(224, 1000);
+/// let all = fleet.estimate_on_all(&net, ModelKind::Mixed);
+/// assert_eq!(all.len(), 2);
+/// assert!(all.iter().all(|d| d.total_ms > 0.0));
+/// // best_device is the deterministic argmin over those predictions.
+/// let best = fleet.best_device(&net, ModelKind::Mixed);
+/// let min = all.iter().map(|d| d.total_ms).fold(f64::INFINITY, f64::min);
+/// assert_eq!(best.total_ms.to_bits(), min.to_bits());
+/// ```
 pub struct Fleet {
     members: Vec<FleetMember>,
     compiled: Vec<CompiledModel>,

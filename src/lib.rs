@@ -31,14 +31,26 @@
 //!    [`coordinator::Service`] batch layer fans request lines across worker
 //!    threads with deterministic, input-ordered output.
 //!
+//! On top of the two phases sits the workload they exist for:
+//! **design-space exploration** ([`explore`]). An [`explore::Explorer`]
+//! searches an architecture space ([`explore::SearchSpace`], with a
+//! NASBench-style implementation) under per-device latency budgets, scoring
+//! every candidate through the compiled total-only fast path and keeping
+//! latency × cost Pareto fronts — per device and fleet-robust — so the
+//! estimator drives hardware-aware NAS instead of merely answering lookups.
+//! The service exposes it as the `explore` request.
+//!
 //! The crate is dependency-free by design (hand-rolled JSON in [`json`]) so
 //! it builds in hermetic environments. `make bench` runs the std-only
 //! benchmark harness (`benches/estimator_bench.rs`) and records the perf
-//! trajectory in `BENCH_estimator.json`.
+//! trajectory in `BENCH_estimator.json`. `docs/ARCHITECTURE.md` is the
+//! normative reference for the module map and every persisted / wire
+//! format.
 
 pub mod coordinator;
 pub mod error;
 pub mod estim;
+pub mod explore;
 pub mod fleet;
 pub mod graph;
 pub mod hw;
@@ -61,6 +73,10 @@ pub mod prelude {
     pub use crate::estim::batch::BatchEstimator;
     pub use crate::estim::compiled::{CompiledGraph, CompiledModel, GraphCache};
     pub use crate::estim::estimator::{Estimate, Estimator};
+    pub use crate::explore::{
+        CostProxy, ExploreConfig, ExploreResult, Explorer, NasBenchSpace, ParetoPoint,
+        SearchSpace,
+    };
     pub use crate::fleet::{DeviceLatency, Fleet, FleetMember};
     pub use crate::graph::{Graph, GraphBuilder, Layer, LayerClass, LayerKind, Shape};
     pub use crate::hw::device::{Device, DeviceSpec, Profile};

@@ -2,8 +2,9 @@
 //! rules, serialized inside the platform model.
 
 use crate::error::{Error, Result};
-use crate::graph::{LayerClass, LayerKind};
+use crate::graph::{Graph, LayerClass, LayerKind};
 use crate::json::Value;
+use crate::mapping::pass::{self, MappedGraph};
 
 /// Serialization format tag of a [`MappingModel`] document.
 pub const FORMAT: &str = "annette-mapping.v1";
@@ -86,6 +87,36 @@ pub struct MappingModel {
 }
 
 impl MappingModel {
+    /// Rewrite `g` under this model's rules — the method form of
+    /// [`crate::mapping::apply`], the single source of execution-unit
+    /// assignment.
+    ///
+    /// ```
+    /// use annette::graph::GraphBuilder;
+    /// use annette::mapping::MappingModel;
+    ///
+    /// let mut b = GraphBuilder::new("doc");
+    /// let i = b.input(8, 8, 3);
+    /// let x = b.conv_bn_relu(i, 8, 3, 1);
+    /// b.classifier(x, 10);
+    /// let g = b.finish().unwrap();
+    ///
+    /// let model = MappingModel::from_pairs(vec![
+    ///     ("conv".to_string(), "batchnorm".to_string()),
+    ///     ("conv".to_string(), "act".to_string()),
+    /// ]);
+    /// let mapped = model.apply(&g);
+    /// // bn (2) and relu (3) fold into the conv unit rooted at layer 1 …
+    /// assert_eq!(mapped.units[0].root, 1);
+    /// assert_eq!(mapped.units[0].members, vec![2, 3]);
+    /// // … the input is elided, and every layer has exactly one role.
+    /// assert_eq!(mapped.elided, vec![0]);
+    /// assert_eq!(mapped.root_of[2], 1);
+    /// ```
+    pub fn apply(&self, g: &Graph) -> MappedGraph {
+        pass::apply(self, g)
+    }
+
     /// The degenerate pairwise model: only [`MappingRule::Fuse`] entries.
     /// Applying it reproduces the original pairwise fusion predicate exactly.
     pub fn from_pairs<I>(pairs: I) -> MappingModel

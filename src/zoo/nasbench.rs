@@ -1,21 +1,87 @@
 //! NASBench-style architecture sampler (CIFAR-sized cell networks) used for
-//! the paper's fidelity evaluation (Spearman ρ over random architectures).
+//! the paper's fidelity evaluation (Spearman ρ over random architectures)
+//! and as the default search space of the exploration engine
+//! ([`crate::explore`]).
+//!
+//! Candidates are **genotypes** ([`NasGenotype`]): the decision vector the
+//! sampler draws — stem width, per-stack cell operators, and channel-growth
+//! offsets — separated from the [`decode`] step that realizes a genotype as
+//! a [`Graph`]. The split is what makes the space searchable: a genotype can
+//! be locally mutated ([`mutate_genotype`]) where a finished graph cannot,
+//! and decoding is deterministic, so every candidate an exploration run
+//! visits is reproducible from seeds alone.
+//!
+//! [`sample_network`] (= sample + decode) is the original sampling API and
+//! draws from the RNG in exactly the historical order, so the streams are
+//! unchanged.
 
 use crate::graph::{Graph, GraphBuilder};
 use crate::rng::{Rng, PHI};
 
-/// Deterministically sample candidate `i` of the stream identified by `seed`.
-pub fn sample_network(i: usize, seed: u64) -> Graph {
+/// Stem-convolution channel choices the sampler draws from.
+pub const STEM_CHOICES: [usize; 6] = [8, 12, 16, 24, 32, 48];
+
+/// Number of cell stacks (separated by stride-2 reduction points).
+pub const STACKS: usize = 3;
+
+/// Most cells a single stack can carry (the sampler draws 1..=3).
+pub const MAX_CELLS: usize = 3;
+
+/// Number of cell operator codes (see [`decode`] for their meaning).
+pub const NUM_OPS: usize = 4;
+
+/// The decision vector of one NASBench-style candidate. Everything the
+/// decoder needs to rebuild the network, and nothing else — two candidates
+/// with equal genotypes decode to structurally identical graphs.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct NasGenotype {
+    /// Stem convolution output channels (one of [`STEM_CHOICES`]).
+    pub stem: usize,
+    /// Cell operator codes per stack (`0..NUM_OPS`), 1..=[`MAX_CELLS`] each:
+    /// `0` = 3×3 conv, `1` = 1×1 conv, `2` = depthwise-separable block,
+    /// `3` = residual block.
+    pub cells: [Vec<u8>; STACKS],
+    /// Channel-growth offset (`0..9`) applied at each of the two reduction
+    /// points: `c ← clamp(2·c + growth, 4, 512)`.
+    pub growth: [usize; STACKS - 1],
+}
+
+/// Deterministically sample the genotype of candidate `i` of the stream
+/// identified by `seed`. Draws from the RNG in exactly the order the
+/// original graph sampler did, so `decode(sample_genotype(i, seed))` equals
+/// the historical [`sample_network`] output, layer for layer.
+pub fn sample_genotype(i: usize, seed: u64) -> NasGenotype {
     let mut rng = Rng::new(seed ^ ((i as u64 + 1).wrapping_mul(PHI)));
-    let mut b = GraphBuilder::new(&format!("nas-{i:04}"));
+    let stem = *rng.pick(&STEM_CHOICES);
+    let mut cells: [Vec<u8>; STACKS] = Default::default();
+    let mut growth = [0usize; STACKS - 1];
+    for stack in 0..STACKS {
+        let n = rng.range(1, MAX_CELLS + 1);
+        for _ in 0..n {
+            cells[stack].push(rng.range(0, NUM_OPS) as u8);
+        }
+        if stack < STACKS - 1 {
+            growth[stack] = rng.range(0, 9);
+        }
+    }
+    NasGenotype { stem, cells, growth }
+}
+
+/// Realize a genotype as a network description graph named `name`.
+///
+/// Deterministic (no randomness: the genotype *is* the decision record) and
+/// total over genotypes produced by [`sample_genotype`] / [`mutate_genotype`].
+/// Hand-built genotypes are tolerated defensively: operator codes are taken
+/// modulo [`NUM_OPS`] and the stem width is clamped to a buildable range.
+pub fn decode(genotype: &NasGenotype, name: &str) -> Graph {
+    let mut b = GraphBuilder::new(name);
     let mut x = b.input(32, 32, 3);
-    let c0 = *rng.pick(&[8usize, 12, 16, 24, 32, 48]);
+    let c0 = genotype.stem.clamp(4, 512);
     x = b.conv_bn_relu(x, c0, 3, 1);
     let mut c = c0;
-    for stack in 0..3 {
-        let cells = rng.range(1, 4);
-        for _ in 0..cells {
-            match rng.range(0, 4) {
+    for stack in 0..STACKS {
+        for &op in &genotype.cells[stack] {
+            match op as usize % NUM_OPS {
                 0 => {
                     x = b.conv_bn_relu(x, c, 3, 1);
                 }
@@ -35,16 +101,90 @@ pub fn sample_network(i: usize, seed: u64) -> Graph {
                 }
             }
         }
-        if stack < 2 {
+        if stack < STACKS - 1 {
             x = b.maxpool(x, 2, 2);
-            c = (2 * c + rng.range(0, 9)).clamp(4, 512);
+            c = (2 * c + genotype.growth[stack]).clamp(4, 512);
             x = b.conv_bn_relu(x, c, 1, 1);
         }
     }
     let x = b.global_pool(x);
     let x = b.fc(x, 10);
     b.softmax(x);
-    b.finish().expect("sampled network is valid")
+    b.finish().expect("decoded NASBench genotype is valid")
+}
+
+/// Derive a locally mutated neighbor of `parent`, deterministically from
+/// `seed`: exactly one decision changes — the stem width, one cell operator,
+/// a cell inserted or removed, or one growth offset — and the edit is
+/// guaranteed to differ from the parent's value. Structural edits that are
+/// impossible on this parent (inserting into full stacks, removing from
+/// single-cell stacks) deterministically fall back to a possible one.
+pub fn mutate_genotype(parent: &NasGenotype, seed: u64) -> NasGenotype {
+    let mut rng = Rng::new(seed);
+    let mut g = parent.clone();
+    match rng.range(0, 5) {
+        0 => mutate_stem(&mut g, &mut rng),
+        1 => mutate_op(&mut g, &mut rng),
+        2 => {
+            if !insert_cell(&mut g, &mut rng) {
+                mutate_op(&mut g, &mut rng);
+            }
+        }
+        3 => {
+            if !remove_cell(&mut g, &mut rng) && !insert_cell(&mut g, &mut rng) {
+                mutate_op(&mut g, &mut rng);
+            }
+        }
+        _ => {
+            let k = rng.range(0, STACKS - 1);
+            g.growth[k] = (g.growth[k] + rng.range(1, 9)) % 9;
+        }
+    }
+    g
+}
+
+fn mutate_stem(g: &mut NasGenotype, rng: &mut Rng) {
+    let cur = STEM_CHOICES.iter().position(|&c| c == g.stem).unwrap_or(0);
+    let step = rng.range(1, STEM_CHOICES.len());
+    g.stem = STEM_CHOICES[(cur + step) % STEM_CHOICES.len()];
+}
+
+fn mutate_op(g: &mut NasGenotype, rng: &mut Rng) {
+    let s = rng.range(0, STACKS);
+    if g.cells[s].is_empty() {
+        g.cells[s].push(rng.range(0, NUM_OPS) as u8);
+        return;
+    }
+    let j = rng.range(0, g.cells[s].len());
+    g.cells[s][j] = ((g.cells[s][j] as usize + rng.range(1, NUM_OPS)) % NUM_OPS) as u8;
+}
+
+fn insert_cell(g: &mut NasGenotype, rng: &mut Rng) -> bool {
+    let open: Vec<usize> = (0..STACKS).filter(|&s| g.cells[s].len() < MAX_CELLS).collect();
+    if open.is_empty() {
+        return false;
+    }
+    let s = open[rng.range(0, open.len())];
+    let pos = rng.range(0, g.cells[s].len() + 1);
+    let op = rng.range(0, NUM_OPS) as u8;
+    g.cells[s].insert(pos, op);
+    true
+}
+
+fn remove_cell(g: &mut NasGenotype, rng: &mut Rng) -> bool {
+    let full: Vec<usize> = (0..STACKS).filter(|&s| g.cells[s].len() > 1).collect();
+    if full.is_empty() {
+        return false;
+    }
+    let s = full[rng.range(0, full.len())];
+    let j = rng.range(0, g.cells[s].len());
+    g.cells[s].remove(j);
+    true
+}
+
+/// Deterministically sample candidate `i` of the stream identified by `seed`.
+pub fn sample_network(i: usize, seed: u64) -> Graph {
+    decode(&sample_genotype(i, seed), &format!("nas-{i:04}"))
 }
 
 /// Sample `n` candidate architectures from the stream identified by `seed`.
@@ -79,5 +219,45 @@ mod tests {
             assert!(g.validate().is_ok());
             assert_eq!(g.name, format!("nas-{i:04}"));
         }
+    }
+
+    #[test]
+    fn genotypes_respect_their_invariants() {
+        for i in 0..50 {
+            let g = sample_genotype(i, 99);
+            assert!(STEM_CHOICES.contains(&g.stem));
+            for cells in &g.cells {
+                assert!((1..=MAX_CELLS).contains(&cells.len()));
+                assert!(cells.iter().all(|&op| (op as usize) < NUM_OPS));
+            }
+            assert!(g.growth.iter().all(|&x| x < 9));
+        }
+    }
+
+    #[test]
+    fn mutation_changes_exactly_the_genotype_and_decodes_validly() {
+        let mut changed = 0;
+        for i in 0..40 {
+            let parent = sample_genotype(i, 7);
+            for m in 0..5 {
+                let child = mutate_genotype(&parent, 1000 + 5 * i as u64 + m);
+                assert_ne!(child, parent, "mutation must edit the genotype");
+                // Mutation preserves the genotype invariants.
+                for cells in &child.cells {
+                    assert!((1..=MAX_CELLS).contains(&cells.len()));
+                    assert!(cells.iter().all(|&op| (op as usize) < NUM_OPS));
+                }
+                let g = decode(&child, "mut");
+                assert!(g.validate().is_ok());
+                if g != decode(&parent, "mut") {
+                    changed += 1;
+                }
+                // Deterministic under its seed.
+                assert_eq!(child, mutate_genotype(&parent, 1000 + 5 * i as u64 + m));
+            }
+        }
+        // The overwhelming majority of genotype edits move the graph too
+        // (clamped growth edits on saturated channels are the exception).
+        assert!(changed > 150, "only {changed}/200 mutations moved the graph");
     }
 }

@@ -1,0 +1,179 @@
+//! Integration tests for the design-space exploration engine: seeded
+//! reproducibility of the NASBench sampler (the foundation the explorer's
+//! determinism rests on), determinism of `Explorer::run` itself, and budget
+//! feasibility of the returned fronts on all three registry devices.
+
+use annette::coordinator::orchestrator::run_campaign;
+use annette::explore::{dominates, CostProxy, ExploreConfig, Explorer, NasBenchSpace, SearchSpace};
+use annette::fleet::Fleet;
+use annette::hw::device::Device;
+use annette::hw::registry;
+use annette::models::layer::ModelKind;
+use annette::models::platform::PlatformModel;
+use annette::zoo::nasbench;
+
+/// Same seed → identical graphs; different seeds → different fingerprint
+/// streams. The explore engine's reproducibility rests on this.
+#[test]
+fn nasbench_sampling_is_seed_deterministic() {
+    let a = nasbench::sample_networks(24, 7);
+    let b = nasbench::sample_networks(24, 7);
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x, y, "same seed must reproduce identical graphs");
+        assert_eq!(x.fingerprint(), y.fingerprint());
+    }
+    // Different seeds give structurally different streams: the fingerprint
+    // multisets must differ (candidate names are identical by construction,
+    // so any difference is structural).
+    let c = nasbench::sample_networks(24, 8);
+    let fps = |gs: &[annette::graph::Graph]| -> Vec<(u64, u64)> {
+        let mut v: Vec<(u64, u64)> = gs.iter().map(|g| g.fingerprint()).collect();
+        v.sort_unstable();
+        v
+    };
+    assert_ne!(fps(&a), fps(&c), "seeds 7 and 8 sampled identical streams");
+    // The genotype route is the sampler: decode(sample_genotype) == sample.
+    for i in [0usize, 3, 11] {
+        let g = nasbench::decode(&nasbench::sample_genotype(i, 7), &format!("nas-{i:04}"));
+        assert_eq!(g, a[i]);
+    }
+}
+
+fn fitted(id: &str) -> PlatformModel {
+    let dev = registry::build(id).unwrap();
+    let bench = run_campaign(dev.as_ref(), 1, 4);
+    PlatformModel::fit(&dev.spec(), &bench)
+}
+
+#[test]
+fn explorer_run_is_deterministic_under_a_fixed_seed() {
+    let model = fitted("dpu-zcu102");
+    let explorer = Explorer::for_device(NasBenchSpace, "dpu-zcu102", &model).unwrap();
+    let cfg = ExploreConfig {
+        seed: 99,
+        population: 20,
+        generations: 2,
+        children: 10,
+        kind: ModelKind::Mixed,
+        cost: CostProxy::Params,
+        ..ExploreConfig::default()
+    };
+    let a = explorer.run(&cfg).unwrap();
+    // Re-run on the same explorer (warm graph cache) and on a freshly
+    // constructed one (cold cache): bit-identical archives and fronts.
+    let warm = explorer.run(&cfg).unwrap();
+    let cold = Explorer::for_device(NasBenchSpace, "dpu-zcu102", &model)
+        .unwrap()
+        .run(&cfg)
+        .unwrap();
+    let lat_bits = |e: &annette::explore::Evaluated| -> Vec<u64> {
+        e.latency_ms.iter().map(|v| v.to_bits()).collect()
+    };
+    for other in [&warm, &cold] {
+        assert_eq!(a.evaluated(), other.evaluated());
+        for (x, y) in a.archive.iter().zip(&other.archive) {
+            assert_eq!(x.name, y.name);
+            assert_eq!(x.graph, y.graph);
+            assert_eq!(x.cost.to_bits(), y.cost.to_bits());
+            assert_eq!(lat_bits(x), lat_bits(y));
+        }
+        assert_eq!(a.robust, other.robust);
+        assert_eq!(a.per_device, other.per_device);
+    }
+    // Thread count must be unobservable.
+    for threads in [1, 2, 8] {
+        let t = explorer.run(&ExploreConfig { threads, ..cfg.clone() }).unwrap();
+        assert_eq!(a.robust, t.robust);
+        assert_eq!(a.per_device, t.per_device);
+    }
+    // A different seed explores a different archive.
+    let b = explorer.run(&ExploreConfig { seed: 100, ..cfg }).unwrap();
+    assert!(
+        a.archive.iter().zip(&b.archive).any(|(x, y)| x.graph != y.graph),
+        "seeds 99 and 100 explored identical candidate streams"
+    );
+}
+
+#[test]
+fn fronts_respect_budgets_on_every_registry_device() {
+    let fleet = Fleet::fit_all(1).unwrap();
+    let explorer = Explorer::for_fleet(NasBenchSpace, &fleet);
+    assert_eq!(explorer.targets(), registry::ids());
+    assert_eq!(explorer.space().name(), "nasbench");
+
+    // First pass without budgets establishes what latencies are reachable.
+    let cfg = ExploreConfig {
+        seed: 5,
+        population: 24,
+        generations: 2,
+        children: 12,
+        ..ExploreConfig::default()
+    };
+    let free = explorer.run(&cfg).unwrap();
+    assert_eq!(free.per_device.len(), 3);
+
+    // Anchor the budgets to one concrete candidate — the best worst-case
+    // member of the unconstrained robust front — at twice its per-device
+    // latencies. That candidate provably satisfies every budget at once, so
+    // the budgets are tight (they exclude the slow half of the space) but
+    // never unsatisfiable.
+    let anchor = free
+        .robust
+        .iter()
+        .min_by(|a, b| a.latency_ms.total_cmp(&b.latency_ms))
+        .expect("unconstrained robust front is never empty")
+        .index;
+    let budgets_ms: Vec<(String, f64)> = free
+        .targets
+        .iter()
+        .enumerate()
+        .map(|(t, id)| (id.clone(), 2.0 * free.archive[anchor].latency_ms[t]))
+        .collect();
+    let constrained = explorer
+        .run(&ExploreConfig { budgets_ms: budgets_ms.clone(), ..cfg.clone() })
+        .unwrap();
+    for (t, front) in constrained.per_device.iter().enumerate() {
+        let budget = budgets_ms[t].1;
+        assert!(!front.is_empty(), "{}: budget emptied the front", free.targets[t]);
+        for p in front {
+            assert!(
+                p.latency_ms <= budget,
+                "{}: front member at {} ms exceeds budget {} ms",
+                free.targets[t],
+                p.latency_ms,
+                budget
+            );
+            // Front members index real archive entries with consistent data.
+            let e = constrained.member(p);
+            assert_eq!(e.latency_ms[t].to_bits(), p.latency_ms.to_bits());
+        }
+        // No front member dominates another.
+        for a in front {
+            for b in front {
+                assert!(!dominates(a, b));
+            }
+        }
+    }
+    // Robust front members satisfy every device's budget at once, and their
+    // worst-case objective really is the per-device maximum.
+    assert!(!constrained.robust.is_empty());
+    for p in &constrained.robust {
+        let e = constrained.member(p);
+        for (t, (_, budget)) in budgets_ms.iter().enumerate() {
+            assert!(e.latency_ms[t] <= *budget);
+        }
+        assert_eq!(p.latency_ms.to_bits(), e.worst_ms().to_bits());
+    }
+
+    // An unmeetable budget (nothing runs in a femtosecond) empties every
+    // front instead of erroring: infeasibility is an answer, not a failure.
+    let impossible: Vec<(String, f64)> =
+        registry::ids().iter().map(|id| (id.to_string(), 1e-12)).collect();
+    let empty = explorer
+        .run(&ExploreConfig { budgets_ms: impossible, ..cfg })
+        .unwrap();
+    assert!(empty.robust.is_empty());
+    assert!(empty.per_device.iter().all(|f| f.is_empty()));
+    assert!(empty.evaluated() > 0, "search still explores while infeasible");
+}

@@ -236,6 +236,79 @@ fn verbose_units_report_fused_member_ids_and_elided_layers() {
 }
 
 #[test]
+fn explore_requests_round_trip_and_are_thread_invariant() {
+    // A batch mixing explore requests (single-device, fleet-wide,
+    // budget-constrained, and malformed) with ordinary estimates must serve
+    // byte-identically across thread counts — the exploration engine is
+    // deterministic, so repeated identical requests are repeated identical
+    // lines.
+    let svc = fleet_service();
+    let explore_dpu =
+        r#"{"op":"explore","device":"dpu-zcu102","candidates":10,"generations":1,"children":4,"seed":3}"#;
+    let explore_fleet =
+        r#"{"op":"explore","fleet":true,"candidates":10,"generations":1,"children":4,"seed":3}"#;
+    let explore_budget =
+        r#"{"op":"explore","device":"tpu-edge","candidates":10,"generations":1,"children":4,"seed":3,"budget_ms":1.5}"#;
+    let estimate = format!(
+        "{{\"op\":\"estimate\",\"total_only\":true,\"network\":{}}}",
+        graph_to_value(&zoo::nasbench::sample_network(0, 3))
+    );
+    let bad = r#"{"op":"explore","candidates":999999}"#;
+    let input = [explore_dpu, estimate.as_str(), explore_fleet, bad, explore_budget, explore_dpu]
+        .join("\n");
+    let serial_run = svc.serve_lines(&input, 1);
+    assert_eq!(serial_run.len(), 6);
+    for threads in [2, 4, 8] {
+        assert_eq!(svc.serve_lines(&input, threads), serial_run, "{threads} threads diverged");
+    }
+    // Identical explore requests answer identically, byte for byte.
+    assert_eq!(serial_run[0], serial_run[5]);
+
+    // Single-device response: a non-empty front of (name, cost, latency_ms).
+    let resp = Value::parse(&serial_run[0]).unwrap();
+    assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(true));
+    assert_eq!(resp.req_str("device").unwrap(), "dpu-zcu102");
+    assert_eq!(resp.req_str("space").unwrap(), "nasbench");
+    let front = resp.req_arr("front").unwrap();
+    assert!(!front.is_empty());
+    for m in front {
+        assert!(m.get("name").is_some());
+        assert!(m.req_f64("cost").unwrap() > 0.0);
+        assert!(m.req_f64("latency_ms").unwrap() > 0.0);
+    }
+
+    // Fleet response: per-device fronts plus a robust front whose members
+    // carry per-device latencies consistent with their worst case.
+    let resp = Value::parse(&serial_run[2]).unwrap();
+    assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(true));
+    assert_eq!(resp.req_arr("devices").unwrap().len(), 2);
+    assert_eq!(resp.req_arr("fronts").unwrap().len(), 2);
+    for m in resp.req_arr("robust").unwrap() {
+        let lats: Vec<f64> = m
+            .req_arr("latency_ms")
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap())
+            .collect();
+        assert_eq!(lats.len(), 2);
+        let worst = m.req_f64("worst_ms").unwrap();
+        let max = lats.iter().fold(f64::NEG_INFINITY, |a, &b| a.max(b));
+        assert_eq!(worst.to_bits(), max.to_bits());
+    }
+
+    // The over-cap request failed in-band without touching its neighbors.
+    let resp = Value::parse(&serial_run[3]).unwrap();
+    assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(false));
+
+    // Budget-constrained: every front member respects the budget.
+    let resp = Value::parse(&serial_run[4]).unwrap();
+    assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(true));
+    for m in resp.req_arr("front").unwrap() {
+        assert!(m.req_f64("latency_ms").unwrap() <= 1.5);
+    }
+}
+
+#[test]
 fn repeated_graphs_hit_the_compiled_cache_consistently() {
     // The same graph sent many times (the zoo-serving scenario) must return
     // the identical response line every time, across thread counts.

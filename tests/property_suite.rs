@@ -201,6 +201,80 @@ fn generator_emits_valid_diverse_graphs() {
 }
 
 #[test]
+fn pareto_front_laws_hold_on_random_point_sets() {
+    use annette::explore::{dominates, pareto_front, ParetoPoint};
+    use annette::rng::Rng;
+
+    let mut rng = Rng::new(env_u64("ANNETTE_PROP_SEED", DEFAULT_SEED) ^ 0x9A8E70);
+    for case in 0..200 {
+        // Quantized objectives force plenty of exact ties and duplicates —
+        // the corners where a dominance filter usually goes wrong.
+        let n = rng.range(1, 40);
+        let mut points: Vec<ParetoPoint> = (0..n)
+            .map(|index| ParetoPoint {
+                index,
+                latency_ms: rng.range(1, 12) as f64 * 0.25,
+                cost: rng.range(1, 12) as f64 * 10.0,
+            })
+            .collect();
+        // Inject exact duplicates of existing points.
+        for _ in 0..rng.range(0, 4) {
+            let mut dup = points[rng.range(0, points.len())];
+            dup.index = points.len();
+            points.push(dup);
+        }
+        let front = pareto_front(&points);
+
+        // Law 1: no front member dominates another front member.
+        for a in &front {
+            for b in &front {
+                assert!(
+                    !dominates(a, b),
+                    "case {case}: front member {a:?} dominates {b:?}"
+                );
+            }
+        }
+        // Law 2: membership ⇔ non-dominance (every dominated candidate is
+        // excluded, every non-dominated one kept), by brute force.
+        let member: std::collections::HashSet<usize> =
+            front.iter().map(|p| p.index).collect();
+        for p in &points {
+            let dominated = points.iter().any(|q| dominates(q, p));
+            assert_eq!(
+                member.contains(&p.index),
+                !dominated,
+                "case {case}: membership of {p:?} disagrees with dominance"
+            );
+        }
+        // Law 3: the front is invariant under input order and candidate
+        // relabeling — compare objective multisets across a reversal and a
+        // seeded shuffle with fresh indices.
+        let objectives = |f: &[ParetoPoint]| -> Vec<(u64, u64)> {
+            let mut v: Vec<(u64, u64)> = f
+                .iter()
+                .map(|p| (p.latency_ms.to_bits(), p.cost.to_bits()))
+                .collect();
+            v.sort_unstable();
+            v
+        };
+        let baseline = objectives(&front);
+        let mut reversed = points.clone();
+        reversed.reverse();
+        assert_eq!(objectives(&pareto_front(&reversed)), baseline, "case {case}: reversal");
+        let mut shuffled = points.clone();
+        for i in (1..shuffled.len()).rev() {
+            shuffled.swap(i, rng.range(0, i + 1));
+        }
+        for (fresh, p) in shuffled.iter_mut().enumerate() {
+            p.index = fresh; // relabel candidates in their new order
+        }
+        assert_eq!(objectives(&pareto_front(&shuffled)), baseline, "case {case}: relabeling");
+        // Front size is also invariant (duplicates all survive together).
+        assert_eq!(pareto_front(&shuffled).len(), front.len());
+    }
+}
+
+#[test]
 fn every_prefix_of_a_generated_graph_is_valid() {
     // The shrinker's soundness argument, checked directly: prefixes of valid
     // graphs validate, serialize, and estimate without panicking.
