@@ -1,6 +1,6 @@
 # Convenience targets for the annette reproduction.
 
-.PHONY: build test lint doc examples fleet-demo map-demo explore-demo prop-extended bench bench-smoke artifacts clean
+.PHONY: build test lint doc examples fleet-demo map-demo explore-demo stats-demo trace-demo prop-extended bench bench-smoke artifacts clean
 
 build:
 	cargo build --release
@@ -32,6 +32,7 @@ examples: build
 	cargo run --release --example fleet_compare
 	cargo run --release --example map_demo
 	cargo run --release --example explore_demo
+	cargo run --release --example stats_demo
 
 # Fit the whole device fleet, print the 12-network x 3-device latency
 # matrix with best-device placement, and demo the fleet service protocol.
@@ -48,6 +49,19 @@ map-demo: build
 # fronts, and validate front fidelity against simulator ground truth.
 explore-demo: build
 	cargo run --release --example explore_demo
+
+# Serve a traffic burst with telemetry on, then read the numbers back through
+# the `stats` op: request counters, stage latency histograms, cache hit rate,
+# and fan-out worker balance (docs/ARCHITECTURE.md § Telemetry).
+stats-demo: build
+	cargo run --release --example stats_demo
+
+# Same demo with span tracing captured: writes out/trace.json, loadable in
+# chrome://tracing or https://ui.perfetto.dev.
+trace-demo: build
+	@mkdir -p out
+	ANNETTE_TRACE=out/trace.json cargo run --release --example stats_demo
+	@echo "trace file: out/trace.json"
 
 # Long randomized property run (the nightly CI job). Tier-1 always runs the
 # 200-graph fixed-seed pass via `cargo test`.

@@ -30,6 +30,8 @@ use annette::hw::dpu::DpuDevice;
 use annette::json::Value;
 use annette::models::layer::ModelKind;
 use annette::models::platform::PlatformModel;
+use annette::obs;
+use annette::obs::registry::STAGE_NAMES;
 use annette::zoo;
 
 struct WorkloadResult {
@@ -136,6 +138,10 @@ fn run_service(
 }
 
 fn main() {
+    // Benchmarks double as the telemetry-overhead check: run everything with
+    // recording on (regardless of ANNETTE_OBS), except for the dedicated
+    // off-vs-on comparison below.
+    obs::set_enabled(true);
     let smoke = std::env::args().any(|a| a == "--smoke" || a == "--quick");
     let (nas_count, base_passes, fast_passes, svc_passes) = if smoke {
         (32, 1, 20, 2)
@@ -205,6 +211,29 @@ fn main() {
         base_nas.estimates_per_sec, fast_nas.estimates_per_sec
     );
 
+    // --- Telemetry overhead: compiled fast path, recording off vs on --------
+    // Back-to-back runs of the same warmed workload so the only variable is
+    // the obs flag. The acceptance bar is ~5% on this hot path.
+    obs::set_enabled(false);
+    let obs_off = run_single(
+        &format!("nasbench{nas_count}_compiled_total_obs_off"),
+        &nas_nets,
+        fast_passes,
+        |g| est.total_ms(g, ModelKind::Mixed),
+    );
+    obs::set_enabled(true);
+    let obs_on = run_single(
+        &format!("nasbench{nas_count}_compiled_total_obs_on"),
+        &nas_nets,
+        fast_passes,
+        |g| est.total_ms(g, ModelKind::Mixed),
+    );
+    let obs_overhead_pct = (obs_off.estimates_per_sec / obs_on.estimates_per_sec - 1.0) * 100.0;
+    eprintln!(
+        "[bench] telemetry overhead on compiled path: off {:.0}/s vs on {:.0}/s ({obs_overhead_pct:+.2}%)",
+        obs_off.estimates_per_sec, obs_on.estimates_per_sec
+    );
+
     // --- Parallel batch service ---------------------------------------------
     let svc = Service::new(model.clone());
     let mut input = String::new();
@@ -238,7 +267,53 @@ fn main() {
     results.push(fast_nas);
     results.push(fast_zoo);
     results.push(handle_nas);
+    results.push(obs_off);
+    results.push(obs_on);
     results.extend(svc_results);
+
+    // --- Telemetry snapshot --------------------------------------------------
+    // Everything above ran with recording on, so the global registry now
+    // describes this bench run: cache behaviour, per-stage latency, and how
+    // evenly the service fan-out spread its lines. Embed the headline numbers
+    // in the bench document and write the full annette-obs.v1 snapshot
+    // alongside it.
+    let snap = obs::global().snapshot();
+    let stage_p99s = Value::Obj(
+        STAGE_NAMES
+            .iter()
+            .zip(snap.stages.iter())
+            .map(|(name, h)| (name.to_string(), Value::int(h.percentile(0.99) as usize)))
+            .collect(),
+    );
+    let worker_items: Vec<Value> = snap
+        .fan
+        .iter()
+        .take_while(|w| w.items > 0)
+        .map(|w| Value::int(w.items as usize))
+        .collect();
+    let obs_summary = Value::Obj(vec![
+        (
+            "overhead_pct".to_string(),
+            Value::num(round3(obs_overhead_pct)),
+        ),
+        (
+            "cache_hit_rate".to_string(),
+            Value::num(round3(snap.cache_hit_rate())),
+        ),
+        (
+            "cache_hits".to_string(),
+            Value::int(snap.cache_hits as usize),
+        ),
+        (
+            "cache_misses".to_string(),
+            Value::int(snap.cache_misses as usize),
+        ),
+        ("stage_p99_us".to_string(), stage_p99s),
+        ("worker_items".to_string(), Value::Arr(worker_items)),
+    ]);
+    std::fs::write("BENCH_obs_snapshot.json", snap.to_value().to_string())
+        .expect("write BENCH_obs_snapshot.json");
+    eprintln!("[bench] wrote BENCH_obs_snapshot.json");
 
     let doc = Value::Obj(vec![
         ("format".to_string(), Value::str("annette-bench.v1")),
@@ -271,6 +346,7 @@ fn main() {
             "parallel_scaling_4t".to_string(),
             Value::num(round3(scaling_4t)),
         ),
+        ("obs".to_string(), obs_summary),
         (
             "provenance".to_string(),
             Value::str("benches/estimator_bench.rs"),

@@ -1,0 +1,126 @@
+//! The telemetry subsystem in action: serve a burst of traffic with
+//! recording (and optionally span tracing) on, then read the numbers back
+//! through the `stats` service op — per-op request counters, per-stage
+//! latency histograms, GraphCache behaviour, and fan-out worker balance.
+//!
+//! ```sh
+//! cargo run --release --example stats_demo
+//! ANNETTE_TRACE=out/trace.json cargo run --release --example stats_demo
+//! ```
+//!
+//! The snapshot format is `annette-obs.v1`, specified in
+//! docs/ARCHITECTURE.md § Telemetry.
+
+use annette::coordinator::orchestrator::{default_threads, run_campaign};
+use annette::coordinator::Service;
+use annette::graph::serial::graph_to_value;
+use annette::hw::device::Device;
+use annette::hw::dpu::DpuDevice;
+use annette::json::Value;
+use annette::models::platform::PlatformModel;
+use annette::obs;
+use annette::zoo::nasbench;
+
+fn main() {
+    // Telemetry is on by default; this demo insists, overriding ANNETTE_OBS,
+    // so its output is always populated.
+    obs::set_enabled(true);
+
+    let dev = DpuDevice::zcu102();
+    println!("fitting model for {} ...", dev.spec().name);
+    let bench = run_campaign(&dev, 3, default_threads());
+    let model = PlatformModel::fit(&dev.spec(), &bench);
+    let svc = Service::new(model);
+
+    // Traffic: a NAS screening burst (each distinct graph compiles once,
+    // repeats hit the cache), plus a couple of deliberate errors so the
+    // per-op error counters have something to say.
+    let nets = nasbench::sample_networks(48, 2024);
+    let mut batch = String::new();
+    for _ in 0..3 {
+        for g in &nets {
+            batch.push_str(&format!(
+                "{{\"op\":\"estimate\",\"kind\":\"mixed\",\"total_only\":true,\"network\":{}}}\n",
+                graph_to_value(g)
+            ));
+        }
+    }
+    batch.push_str("{\"op\":\"teleport\"}\n");
+    batch.push_str("this line is not json\n");
+    let threads = default_threads();
+    let responses = svc.serve_lines(&batch, threads);
+    let ok = responses
+        .iter()
+        .filter(|r| r.contains("\"ok\":true"))
+        .count();
+    println!(
+        "served {} lines across {threads} threads ({ok} ok, {} in-band errors)",
+        responses.len(),
+        responses.len() - ok
+    );
+
+    // Read the registry back through the wire protocol, like any client
+    // would.
+    let resp = svc.handle(r#"{"op":"stats"}"#);
+    let stats = Value::parse(&resp).expect("stats response is valid JSON");
+    let o = stats.req("obs").expect("stats response carries a snapshot");
+
+    let requests = o.req("requests").unwrap();
+    println!("\nrequests:");
+    for op in ["models", "estimate", "explore", "stats"] {
+        println!("  {op:<9} {}", requests.req_usize(op).unwrap());
+    }
+
+    let cache = o.req("cache").unwrap();
+    let hits = cache.req_usize("hits").unwrap();
+    let misses = cache.req_usize("misses").unwrap();
+    println!(
+        "cache: {hits} hits / {misses} misses ({:.1}% hit rate), size {} of {}",
+        100.0 * hits as f64 / (hits + misses).max(1) as f64,
+        cache.req_usize("size").unwrap(),
+        cache.req_usize("capacity").unwrap(),
+    );
+
+    let stages = o.req("stages").unwrap();
+    println!("stage latency (µs, bucket upper bounds):");
+    for stage in ["parse", "cache_lookup", "compile", "score", "serialize"] {
+        let h = stages.req(stage).unwrap();
+        println!(
+            "  {stage:<12} count {:<6} p50 {:<6} p99 {}",
+            h.req_usize("count").unwrap(),
+            h.req_usize("p50").unwrap(),
+            h.req_usize("p99").unwrap(),
+        );
+    }
+
+    let workers = o.req("fan").unwrap().req_arr("workers").unwrap();
+    println!("fan-out balance ({} active worker slots):", workers.len());
+    for (w, ws) in workers.iter().enumerate() {
+        println!(
+            "  worker {w}: {} items, busy {}µs, idle {}µs",
+            ws.req_usize("items").unwrap(),
+            ws.req_usize("busy_us").unwrap(),
+            ws.req_usize("idle_us").unwrap(),
+        );
+    }
+
+    // `reset:true` returns the snapshot and then zeroes counters/histograms.
+    let _ = svc.handle(r#"{"op":"stats","reset":true}"#);
+    let after = svc.handle(r#"{"op":"stats"}"#);
+    let after = Value::parse(&after).unwrap();
+    let estimates_after = after
+        .req("obs")
+        .unwrap()
+        .req("requests")
+        .unwrap()
+        .req_usize("estimate")
+        .unwrap();
+    println!("\nafter {{\"op\":\"stats\",\"reset\":true}}: estimate counter = {estimates_after}");
+
+    if annette::obs::trace::active() {
+        annette::obs::trace::flush().expect("flush trace file");
+        println!("trace written (load it in a chrome://tracing-compatible viewer)");
+    } else {
+        println!("tip: set ANNETTE_TRACE=out/trace.json to also capture a span trace");
+    }
+}

@@ -12,11 +12,14 @@
 
 use std::fs;
 use std::path::Path;
+use std::time::Instant;
 
 use crate::error::{Error, Result};
 use crate::graph::{Graph, GraphBuilder};
 use crate::hw::device::Device;
 use crate::json::Value;
+use crate::obs;
+use crate::obs::registry::{FAMILY_CHAIN, FAMILY_ELISION, FAMILY_MICRO, FAMILY_PAIRWISE};
 use crate::rng::PHI;
 
 pub const FORMAT: &str = "annette-bench.v2";
@@ -431,9 +434,14 @@ fn build_consumer_solo(consumer: &str, producer: &str) -> Graph {
 }
 
 fn run_mapping_probes<D: Device + ?Sized>(dev: &D, runs: usize) -> MappingData {
+    let telemetry = obs::enabled();
+    let mut pair_us = 0u64;
+    let mut chain_us = 0u64;
     let mut samples = Vec::new();
     let mut chains = Vec::new();
     for producer in PROBE_PRODUCERS {
+        let pair_span = obs::trace::span("campaign:pairwise");
+        let pair_start = telemetry.then(Instant::now);
         let gp = build_probe_graph(producer, &[]);
         let tp = dev.profile(&gp, runs, 0xFACE).total_ms();
         let pclass = gp
@@ -462,11 +470,17 @@ fn run_mapping_probes<D: Device + ?Sized>(dev: &D, runs: usize) -> MappingData {
                 fused,
             });
         }
+        if let Some(t) = pair_start {
+            pair_us += t.elapsed().as_micros() as u64;
+        }
+        drop(pair_span);
         // Length-3 chain probe: producer → bn → act as one graph. Fused only
         // when *every* consumer disappeared (see `chain_probe_fused`). The
         // chained ops sit on the producer's output shape, so their solo
         // times are exactly the pairwise measurements above — reused, not
         // re-profiled.
+        let chain_span = obs::trace::span("campaign:chain");
+        let chain_start = telemetry.then(Instant::now);
         let gc3 = build_probe_graph(producer, &PROBE_CHAIN);
         let tc3 = dev.profile(&gc3, runs, 0xFACE ^ 21).total_ms();
         let solos: Vec<f64> = PROBE_CHAIN
@@ -488,7 +502,13 @@ fn run_mapping_probes<D: Device + ?Sized>(dev: &D, runs: usize) -> MappingData {
             t_chain_ms: tc3,
             fused,
         });
+        if let Some(t) = chain_start {
+            chain_us += t.elapsed().as_micros() as u64;
+        }
+        drop(chain_span);
     }
+    let elide_span = obs::trace::span("campaign:elision");
+    let elide_start = telemetry.then(Instant::now);
     let elisions = PROBE_ELISIONS
         .iter()
         .map(|&op| {
@@ -501,6 +521,15 @@ fn run_mapping_probes<D: Device + ?Sized>(dev: &D, runs: usize) -> MappingData {
             }
         })
         .collect();
+    if telemetry {
+        let r = obs::global();
+        r.campaign[FAMILY_PAIRWISE].record(pair_us);
+        r.campaign[FAMILY_CHAIN].record(chain_us);
+        if let Some(t) = elide_start {
+            r.campaign[FAMILY_ELISION].record(t.elapsed().as_micros() as u64);
+        }
+    }
+    drop(elide_span);
     MappingData { samples, chains, elisions }
 }
 
@@ -512,6 +541,8 @@ pub fn run_campaign<D: Device + ?Sized>(dev: &D, runs: usize, threads: usize) ->
     let runs = runs.max(1);
     let threads = threads.clamp(1, configs.len());
     let chunk = (configs.len() + threads - 1) / threads;
+    let micro_span = obs::trace::span("campaign:micro");
+    let micro_start = obs::enabled().then(Instant::now);
     let mut slots: Vec<Option<MicroRecord>> = Vec::new();
     slots.resize_with(configs.len(), || None);
     std::thread::scope(|scope| {
@@ -529,6 +560,10 @@ pub fn run_campaign<D: Device + ?Sized>(dev: &D, runs: usize, threads: usize) ->
         .into_iter()
         .map(|s| s.expect("worker filled every slot"))
         .collect();
+    if let Some(t) = micro_start {
+        obs::global().campaign[FAMILY_MICRO].record(t.elapsed().as_micros() as u64);
+    }
+    drop(micro_span);
     let mapping = run_mapping_probes(dev, runs);
     BenchData {
         device: dev.spec().name,

@@ -19,6 +19,12 @@
 //!     plus the predicted-fastest one (mutually exclusive with `device`).
 //!   * `"total_only":true` — skip the per-unit breakdown (the NAS
 //!     screening fast path; implied by fleet mode).
+//! * `{"op":"stats"}` — snapshot the process-wide telemetry registry
+//!   ([`crate::obs`]): per-op request counters, per-stage latency
+//!   histograms, graph-cache behaviour, fan-out worker balance, campaign
+//!   and explorer progress. `"reset":true` zeroes the counters after the
+//!   snapshot. The snapshot serialization is deterministic
+//!   (`annette-obs.v1`; see docs/ARCHITECTURE.md § Telemetry).
 //! * `{"op":"explore","candidates":64,"generations":4,...}` — run a
 //!   design-space exploration ([`crate::explore::Explorer`]) over the
 //!   NASBench-style space and answer with the latency × cost Pareto front.
@@ -49,7 +55,20 @@ use crate::graph::serial;
 use crate::json::{write_json_f64, write_json_str, write_json_usize, Value};
 use crate::models::layer::ModelKind;
 use crate::models::platform::PlatformModel;
+use crate::obs;
+use crate::obs::registry::{
+    Registry, STAGE_CACHE_LOOKUP, STAGE_PARSE, STAGE_SCORE, STAGE_SERIALIZE,
+};
 use crate::par::fan_indexed;
+
+/// Record the stopwatch lap into a stage histogram; a no-op when telemetry
+/// is off (the stopwatch is inert and laps report `None`).
+#[inline]
+fn record_stage_lap(sw: &mut obs::Stopwatch, stage: usize) {
+    if let Some(us) = sw.lap_us() {
+        obs::global().record_stage(stage, us);
+    }
+}
 
 /// Most initial candidates one `explore` request may ask for.
 pub const EXPLORE_MAX_CANDIDATES: usize = 512;
@@ -175,10 +194,13 @@ impl Service {
         out.clear();
         if let Err(e) = self.dispatch(request, out) {
             // A handler may have written a partial response before failing;
-            // errors are whole lines of their own.
+            // errors are whole lines of their own. `error_kind` is the
+            // stable machine-readable classification ([`Error::kind`]).
             out.clear();
             out.push_str("{\"ok\":false,\"error\":");
             write_json_str(out, &e.to_string());
+            out.push_str(",\"error_kind\":");
+            write_json_str(out, e.kind());
             out.push('}');
         }
     }
@@ -190,21 +212,103 @@ impl Service {
     /// its neighbors.
     pub fn serve_lines(&self, input: &str, threads: usize) -> Vec<String> {
         let lines: Vec<&str> = input.lines().collect();
-        fan_indexed(lines.len(), threads, |i| self.handle(lines[i]))
+        let out = fan_indexed(lines.len(), threads, |i| self.handle(lines[i]));
+        // Batch boundaries are the natural trace checkpoint; a no-op unless
+        // `ANNETTE_TRACE` is set.
+        obs::trace::flush_if_active();
+        out
     }
 
     fn dispatch(&self, request: &str, out: &mut String) -> Result<()> {
-        let req = Value::parse(request)?;
-        let op = req.req_str("op")?;
-        match op {
+        let mut sw = obs::Stopwatch::start();
+        let (op_idx, result) = self.dispatch_inner(request, out, &mut sw);
+        if obs::enabled() {
+            let r = obs::global();
+            if let Some(i) = op_idx {
+                r.requests[i].incr();
+            }
+            if let Err(e) = &result {
+                r.record_error(op_idx, e.kind());
+            }
+        }
+        result
+    }
+
+    /// Route one request line. Returns the recognized op's registry index
+    /// (`None` for unparseable lines and unknown ops) alongside the handler
+    /// result; [`Service::dispatch`] turns the pair into request and error
+    /// accounting. Stage laps: `parse` covers JSON parsing plus request
+    /// validation/decoding, and is recorded on the successful path of every
+    /// op (plus the parse-failure path itself).
+    fn dispatch_inner(
+        &self,
+        request: &str,
+        out: &mut String,
+        sw: &mut obs::Stopwatch,
+    ) -> (Option<usize>, Result<()>) {
+        let req = match Value::parse(request) {
+            Ok(v) => v,
+            Err(e) => {
+                record_stage_lap(sw, STAGE_PARSE);
+                return (None, Err(e));
+            }
+        };
+        let op = match req.req_str("op") {
+            Ok(op) => op,
+            Err(e) => {
+                record_stage_lap(sw, STAGE_PARSE);
+                return (None, Err(e));
+            }
+        };
+        let op_idx = Registry::op_index(op);
+        let result = match op {
             "models" => {
+                let _span = obs::trace::span("op:models");
+                record_stage_lap(sw, STAGE_PARSE);
                 self.write_models(out);
+                record_stage_lap(sw, STAGE_SERIALIZE);
                 Ok(())
             }
-            "estimate" => self.estimate(&req, out),
-            "explore" => self.explore(&req, out),
-            other => Err(Error::Invalid(format!("unknown op `{other}`"))),
+            "estimate" => {
+                let _span = obs::trace::span("op:estimate");
+                self.estimate(&req, out, sw)
+            }
+            "explore" => {
+                let _span = obs::trace::span("op:explore");
+                self.explore(&req, out, sw)
+            }
+            "stats" => {
+                let _span = obs::trace::span("op:stats");
+                record_stage_lap(sw, STAGE_PARSE);
+                let res = self.stats(&req, out);
+                record_stage_lap(sw, STAGE_SERIALIZE);
+                res
+            }
+            other => {
+                record_stage_lap(sw, STAGE_PARSE);
+                Err(Error::Invalid(format!("unknown op `{other}`")))
+            }
+        };
+        (op_idx, result)
+    }
+
+    /// Answer `{"op":"stats"}`: a deterministic snapshot of the global
+    /// telemetry registry, plus whether recording is currently enabled.
+    /// `"reset":true` zeroes counters and histograms after the snapshot
+    /// (gauges keep their instantaneous values). Works — returning an
+    /// all-zero snapshot — even when telemetry is disabled.
+    fn stats(&self, req: &Value, out: &mut String) -> Result<()> {
+        let reset = matches!(req.get("reset"), Some(Value::Bool(true)));
+        let snap = obs::global().snapshot();
+        if reset {
+            obs::global().reset();
         }
+        out.push_str("{\"ok\":true,\"op\":\"stats\",\"enabled\":");
+        out.push_str(if obs::enabled() { "true" } else { "false" });
+        out.push_str(",\"obs\":");
+        snap.to_value().write_into(out);
+        out.push('}');
+        Ok(())
     }
 
     fn write_models(&self, out: &mut String) {
@@ -224,7 +328,7 @@ impl Service {
             }
             write_json_str(out, kind.as_str());
         }
-        out.push_str("],\"ops\":[\"models\",\"estimate\",\"explore\"]}");
+        out.push_str("],\"ops\":[\"models\",\"estimate\",\"explore\",\"stats\"]}");
     }
 
     fn target_index(&self, label: &str) -> Result<usize> {
@@ -289,7 +393,7 @@ impl Service {
         Ok(v)
     }
 
-    fn estimate(&self, req: &Value, out: &mut String) -> Result<()> {
+    fn estimate(&self, req: &Value, out: &mut String, sw: &mut obs::Stopwatch) -> Result<()> {
         let kind = Service::req_kind(req)?;
         let (fleet, device) = Service::req_routing(req)?;
         let target = match device {
@@ -300,11 +404,15 @@ impl Service {
             .get("network")
             .ok_or_else(|| Error::Invalid("`estimate` requires a `network` graph".to_string()))?;
         let graph = serial::graph_from_value(network)?;
+        record_stage_lap(sw, STAGE_PARSE);
         if fleet {
-            return self.estimate_fleet(&graph, kind, out);
+            return self.estimate_fleet(&graph, kind, out, sw);
         }
         let total_only = matches!(req.get("total_only"), Some(Value::Bool(true)));
         let cg = self.cache.get_or_compile(&target.compiled, &graph);
+        record_stage_lap(sw, STAGE_CACHE_LOOKUP);
+        let total = cg.total_ms(kind);
+        record_stage_lap(sw, STAGE_SCORE);
         out.push_str("{\"ok\":true,\"device\":");
         write_json_str(out, &target.label);
         out.push_str(",\"network\":");
@@ -312,7 +420,7 @@ impl Service {
         out.push_str(",\"kind\":");
         write_json_str(out, kind.as_str());
         out.push_str(",\"total_ms\":");
-        write_json_f64(out, cg.total_ms(kind));
+        write_json_f64(out, total);
         if !total_only {
             out.push_str(",\"units\":[");
             for (i, unit) in cg.units(kind).enumerate() {
@@ -353,33 +461,30 @@ impl Service {
             out.push(']');
         }
         out.push('}');
+        record_stage_lap(sw, STAGE_SERIALIZE);
         Ok(())
     }
 
     /// One answer for the whole fleet: per-device totals (target order) and
     /// the predicted-fastest device (first wins ties — deterministic).
+    /// Totals are computed before any byte is written — same values in the
+    /// same order as streaming them interleaved, but the cache-lookup and
+    /// serialize stages time separately.
     fn estimate_fleet(
         &self,
         graph: &crate::graph::Graph,
         kind: ModelKind,
         out: &mut String,
+        sw: &mut obs::Stopwatch,
     ) -> Result<()> {
-        out.push_str("{\"ok\":true,\"network\":");
-        write_json_str(out, &graph.name);
-        out.push_str(",\"kind\":");
-        write_json_str(out, kind.as_str());
-        out.push_str(",\"fleet\":[");
+        let totals: Vec<f64> = self
+            .targets
+            .iter()
+            .map(|t| self.cache.get_or_compile(&t.compiled, graph).total_ms(kind))
+            .collect();
+        record_stage_lap(sw, STAGE_CACHE_LOOKUP);
         let mut best: Option<(usize, f64)> = None;
-        for (i, t) in self.targets.iter().enumerate() {
-            let total = self.cache.get_or_compile(&t.compiled, graph).total_ms(kind);
-            if i > 0 {
-                out.push(',');
-            }
-            out.push_str("{\"device\":");
-            write_json_str(out, &t.label);
-            out.push_str(",\"total_ms\":");
-            write_json_f64(out, total);
-            out.push('}');
+        for (i, &total) in totals.iter().enumerate() {
             let better = match best {
                 None => true,
                 Some((_, b)) => total < b,
@@ -389,18 +494,35 @@ impl Service {
             }
         }
         let (bi, bms) = best.expect("a service always has targets");
+        record_stage_lap(sw, STAGE_SCORE);
+        out.push_str("{\"ok\":true,\"network\":");
+        write_json_str(out, &graph.name);
+        out.push_str(",\"kind\":");
+        write_json_str(out, kind.as_str());
+        out.push_str(",\"fleet\":[");
+        for (i, t) in self.targets.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str("{\"device\":");
+            write_json_str(out, &t.label);
+            out.push_str(",\"total_ms\":");
+            write_json_f64(out, totals[i]);
+            out.push('}');
+        }
         out.push_str("],\"best\":{\"device\":");
         write_json_str(out, &self.targets[bi].label);
         out.push_str(",\"total_ms\":");
         write_json_f64(out, bms);
         out.push_str("}}");
+        record_stage_lap(sw, STAGE_SERIALIZE);
         Ok(())
     }
 
     /// Run a bounded design-space exploration and answer with the Pareto
     /// front(s). Deterministic: equal requests produce byte-identical
     /// responses, so fronts are reproducible from the request alone.
-    fn explore(&self, req: &Value, out: &mut String) -> Result<()> {
+    fn explore(&self, req: &Value, out: &mut String, sw: &mut obs::Stopwatch) -> Result<()> {
         let defaults = ExploreConfig::default();
         let kind = Service::req_kind(req)?;
         let (fleet, device) = Service::req_routing(req)?;
@@ -466,6 +588,7 @@ impl Service {
             budgets_ms,
             threads: default_threads(),
         };
+        record_stage_lap(sw, STAGE_PARSE);
         // Fleet mode searches all targets under the robust objective; a
         // device-routed request searches that device alone.
         let result = if fleet {
@@ -473,6 +596,7 @@ impl Service {
         } else {
             self.device_explorers[ti].run(&cfg)?
         };
+        record_stage_lap(sw, STAGE_SCORE);
 
         let front_member = |out: &mut String, index: usize, latency_key: &str, latency: f64| {
             let e = &result.archive[index];
@@ -505,6 +629,7 @@ impl Service {
                 front_member(out, p.index, "latency_ms", p.latency_ms);
             }
             out.push_str("]}");
+            record_stage_lap(sw, STAGE_SERIALIZE);
             return Ok(());
         }
         out.push_str(",\"devices\":[");
@@ -552,6 +677,7 @@ impl Service {
             out.push_str("]}");
         }
         out.push_str("]}");
+        record_stage_lap(sw, STAGE_SERIALIZE);
         Ok(())
     }
 }
@@ -680,6 +806,72 @@ mod tests {
             );
             assert!(resp.get("error").is_some());
         }
+    }
+
+    #[test]
+    fn error_responses_carry_a_stable_error_kind() {
+        let svc = service();
+        for (bad, kind) in [
+            ("not json at all", "json"),
+            (r#"{"nope":1}"#, "json"),
+            (r#"{"op":"teleport"}"#, "invalid"),
+            (r#"{"op":"estimate","kind":"warp","network":{}}"#, "invalid"),
+        ] {
+            let resp = Value::parse(&svc.handle(bad)).unwrap();
+            assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(false));
+            assert_eq!(
+                resp.req_str("error_kind").unwrap(),
+                kind,
+                "wrong error_kind for request {bad}"
+            );
+        }
+    }
+
+    #[test]
+    fn stats_op_reports_a_deterministic_snapshot() {
+        obs::set_enabled(true);
+        let svc = service();
+        let req = format!(
+            r#"{{"op":"estimate","total_only":true,"network":{}}}"#,
+            net_json()
+        );
+        let _ = svc.handle(&req);
+        let _ = svc.handle(&req);
+        let _ = svc.handle(r#"{"op":"bogus"}"#);
+        let resp = Value::parse(&svc.handle(r#"{"op":"stats"}"#)).unwrap();
+        assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(true));
+        assert_eq!(resp.req_str("op").unwrap(), "stats");
+        assert_eq!(resp.get("enabled").and_then(|v| v.as_bool()), Some(true));
+        let o = resp.req("obs").unwrap();
+        assert_eq!(o.req_str("format").unwrap(), "annette-obs.v1");
+        // The registry is process-global and other tests record into it
+        // concurrently, so assert lower bounds only.
+        assert!(o.get("requests").unwrap().req_usize("estimate").unwrap() >= 2);
+        assert!(
+            o.get("errors")
+                .unwrap()
+                .get("other")
+                .unwrap()
+                .req_usize("invalid")
+                .unwrap()
+                >= 1,
+            "the unknown op must be counted against the `other` row"
+        );
+        let cache = o.req("cache").unwrap();
+        let hits = cache.req_usize("hits").unwrap();
+        let misses = cache.req_usize("misses").unwrap();
+        assert!(misses >= 1, "first estimate compiles");
+        assert!(hits >= 1, "second estimate hits the cache");
+        let stages = o.req("stages").unwrap();
+        for stage in ["parse", "cache_lookup", "compile", "score", "serialize"] {
+            let h = stages.get(stage).unwrap_or_else(|| panic!("stage {stage}"));
+            assert!(h.get("p50").is_some() && h.get("p90").is_some() && h.get("p99").is_some());
+        }
+        assert!(stages.get("parse").unwrap().req_usize("count").unwrap() >= 3);
+        // A telemetry-off service still answers stats (with whatever the
+        // registry holds), and existing responses never mention obs.
+        let est = svc.handle(&req);
+        assert!(!est.contains("obs"));
     }
 
     #[test]

@@ -19,6 +19,21 @@ pub enum Error {
     Missing(String),
 }
 
+impl Error {
+    /// Stable machine-readable classification of the error, used for the
+    /// `error_kind` field of in-band service error responses and for the
+    /// per-op error counters in [`crate::obs`]. These strings are part of
+    /// the wire contract (docs/ARCHITECTURE.md) — do not rename.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Error::Io(_) => "io",
+            Error::Json(_) => "json",
+            Error::Invalid(_) => "invalid",
+            Error::Missing(_) => "missing",
+        }
+    }
+}
+
 impl fmt::Display for Error {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {

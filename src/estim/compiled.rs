@@ -24,7 +24,7 @@
 //! so compiled and uncompiled estimates agree bit-for-bit, not just within
 //! a tolerance.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -359,18 +359,43 @@ impl CompiledGraph {
     }
 }
 
-/// Cap on cached compiled graphs; the map is cleared wholesale beyond this
-/// so a service fed unbounded distinct graphs cannot grow without limit.
+/// Default cap on cached compiled graphs; beyond it the oldest entries are
+/// evicted so a service fed unbounded distinct graphs cannot grow memory
+/// without limit.
 pub const GRAPH_CACHE_CAP: usize = 4096;
 
-/// Cache of compiled graphs, shared across threads, keyed by **compiled
-/// model id + structural fingerprint**. The per-model keying means one
-/// cache can sit behind a whole fleet of devices: the same network compiled
-/// under N models occupies N entries instead of ping-ponging through a
-/// single slot, and an entry can never be served to the wrong model.
+/// The state behind the cache mutex. `order` and `map` always hold the same
+/// key set (keys are queued exactly when freshly inserted and dequeued
+/// exactly when evicted); `fp_refs` counts how many resident entries share a
+/// graph fingerprint across model ids, which is what lets the telemetry
+/// distinguish a cold miss from a *cross-model recompile* — the same graph
+/// deliberately recompiled under a different model.
 #[derive(Debug, Default)]
+struct CacheInner {
+    map: HashMap<(u64, u64, u64), Arc<CompiledGraph>>,
+    order: VecDeque<(u64, u64, u64)>,
+    fp_refs: HashMap<(u64, u64), u32>,
+}
+
+/// Bounded cache of compiled graphs, shared across threads, keyed by
+/// **compiled model id + structural fingerprint**. The per-model keying
+/// means one cache can sit behind a whole fleet of devices: the same
+/// network compiled under N models occupies N entries instead of
+/// ping-ponging through a single slot, and an entry can never be served to
+/// the wrong model. At capacity the oldest insertion is evicted (FIFO) —
+/// eviction only ever costs a recompile, never a wrong answer, because
+/// compilation is deterministic. Lookups, misses, cross-model recompiles,
+/// and evictions are reported through [`crate::obs`].
+#[derive(Debug)]
 pub struct GraphCache {
-    map: Mutex<HashMap<(u64, u64, u64), Arc<CompiledGraph>>>,
+    inner: Mutex<CacheInner>,
+    cap: usize,
+}
+
+impl Default for GraphCache {
+    fn default() -> GraphCache {
+        GraphCache::with_capacity(GRAPH_CACHE_CAP)
+    }
 }
 
 impl GraphCache {
@@ -378,9 +403,22 @@ impl GraphCache {
         GraphCache::default()
     }
 
+    /// A cache bounded to `cap` entries (minimum 1).
+    pub fn with_capacity(cap: usize) -> GraphCache {
+        GraphCache {
+            inner: Mutex::new(CacheInner::default()),
+            cap: cap.max(1),
+        }
+    }
+
+    /// Maximum number of resident compilations.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
     /// Number of cached (model, graph) compilations.
     pub fn len(&self) -> usize {
-        self.map.lock().expect("graph cache poisoned").len()
+        self.inner.lock().expect("graph cache poisoned").map.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -395,22 +433,71 @@ impl GraphCache {
     pub fn get_or_compile(&self, model: &CompiledModel, g: &Graph) -> Arc<CompiledGraph> {
         let fp = g.fingerprint();
         let key = (model.id, fp.0, fp.1);
-        {
-            let map = self.map.lock().expect("graph cache poisoned");
-            if let Some(cg) = map.get(&key) {
+        let telemetry = crate::obs::enabled();
+        let cross_model = {
+            let inner = self.inner.lock().expect("graph cache poisoned");
+            if let Some(cg) = inner.map.get(&key) {
                 // Belt-and-braces against fingerprint collisions: the cheap
                 // invariants must also match.
                 if cg.model_id == model.id && cg.n_layers == g.layers.len() && cg.name == g.name {
-                    return Arc::clone(cg);
+                    let out = Arc::clone(cg);
+                    drop(inner);
+                    if telemetry {
+                        crate::obs::global().cache_hits.incr();
+                    }
+                    return out;
                 }
             }
+            inner.fp_refs.get(&fp).copied().unwrap_or(0) > 0
+        };
+        if telemetry {
+            let r = crate::obs::global();
+            r.cache_misses.incr();
+            if cross_model {
+                r.cache_recompiles.incr();
+            }
         }
+        // Compile outside the lock (it is O(graph) and the slow part); the
+        // duration feeds the shared `compile` stage histogram.
+        let sw = crate::obs::Stopwatch::start();
         let cg = Arc::new(CompiledGraph::compile(model, g));
-        let mut map = self.map.lock().expect("graph cache poisoned");
-        if map.len() >= GRAPH_CACHE_CAP {
-            map.clear();
+        if let Some(us) = sw.elapsed_us() {
+            crate::obs::global().record_stage(crate::obs::registry::STAGE_COMPILE, us);
         }
-        map.insert(key, Arc::clone(&cg));
+        let mut evicted = 0u64;
+        let size;
+        {
+            let mut inner = self.inner.lock().expect("graph cache poisoned");
+            if !inner.map.contains_key(&key) {
+                while inner.map.len() >= self.cap {
+                    let Some(old) = inner.order.pop_front() else {
+                        break;
+                    };
+                    if inner.map.remove(&old).is_some() {
+                        let old_fp = (old.1, old.2);
+                        if let Some(n) = inner.fp_refs.get_mut(&old_fp) {
+                            *n -= 1;
+                            if *n == 0 {
+                                inner.fp_refs.remove(&old_fp);
+                            }
+                        }
+                        evicted += 1;
+                    }
+                }
+                inner.order.push_back(key);
+                *inner.fp_refs.entry(fp).or_insert(0) += 1;
+            }
+            inner.map.insert(key, Arc::clone(&cg));
+            size = inner.map.len() as u64;
+        }
+        if telemetry {
+            let r = crate::obs::global();
+            if evicted > 0 {
+                r.cache_evictions.add(evicted);
+            }
+            r.cache_size.set(size);
+            r.cache_capacity.set(self.cap as u64);
+        }
         cg
     }
 }
@@ -551,5 +638,51 @@ mod tests {
         assert!(Arc::ptr_eq(&a, &a2), "model A's entry must survive model B's insert");
         assert!(Arc::ptr_eq(&b, &b2));
         assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn bounded_cache_evicts_oldest_first() {
+        let model = fitted();
+        let cm = CompiledModel::compile(&model);
+        let cache = GraphCache::with_capacity(2);
+        assert_eq!(cache.capacity(), 2);
+        let graphs: Vec<Graph> = (0..3usize)
+            .map(|k| {
+                let mut b = GraphBuilder::new("ev");
+                let i = b.input(16, 16, 4);
+                let x = b.conv_bn_relu(i, 8 + k, 3, 1);
+                b.classifier(x, 10);
+                b.finish().unwrap()
+            })
+            .collect();
+        let a = cache.get_or_compile(&cm, &graphs[0]);
+        let b = cache.get_or_compile(&cm, &graphs[1]);
+        assert_eq!(cache.len(), 2);
+        // Third distinct graph evicts the oldest (graphs[0]).
+        let c = cache.get_or_compile(&cm, &graphs[2]);
+        assert_eq!(cache.len(), 2);
+        // graphs[1] and graphs[2] still hit...
+        assert!(Arc::ptr_eq(&b, &cache.get_or_compile(&cm, &graphs[1])));
+        assert!(Arc::ptr_eq(&c, &cache.get_or_compile(&cm, &graphs[2])));
+        // ...while graphs[0] was evicted and recompiles to a fresh Arc with
+        // identical totals (eviction can never change an answer).
+        let a2 = cache.get_or_compile(&cm, &graphs[0]);
+        assert!(!Arc::ptr_eq(&a, &a2));
+        assert_eq!(
+            a.total_ms(ModelKind::Mixed).to_bits(),
+            a2.total_ms(ModelKind::Mixed).to_bits()
+        );
+    }
+
+    #[test]
+    fn capacity_floor_is_one() {
+        let model = fitted();
+        let cm = CompiledModel::compile(&model);
+        let cache = GraphCache::with_capacity(0);
+        assert_eq!(cache.capacity(), 1);
+        let g = net();
+        let a = cache.get_or_compile(&cm, &g);
+        assert!(Arc::ptr_eq(&a, &cache.get_or_compile(&cm, &g)));
+        assert_eq!(cache.len(), 1);
     }
 }

@@ -43,6 +43,7 @@ use crate::fleet::Fleet;
 use crate::graph::Graph;
 use crate::models::layer::ModelKind;
 use crate::models::platform::PlatformModel;
+use crate::obs;
 use crate::par::fan_indexed;
 use crate::rng::Rng;
 
@@ -285,15 +286,19 @@ impl<S: SearchSpace> Explorer<S> {
         let mut seen: HashSet<u64> = HashSet::new();
 
         // Generation 0: the seeded population.
-        let mut batch: Vec<(S::Point, Graph)> = Vec::new();
-        for i in 0..cfg.population {
-            let point = self.space.sample(cfg.seed, i);
-            self.admit(point, &mut batch, archive.len(), &mut seen);
+        {
+            let _span = obs::trace::span("explore:seed");
+            let mut batch: Vec<(S::Point, Graph)> = Vec::new();
+            for i in 0..cfg.population {
+                let point = self.space.sample(cfg.seed, i);
+                self.admit(point, &mut batch, archive.len(), &mut seen);
+            }
+            self.score_batch(batch, cfg, &mut archive, &mut points);
         }
-        self.score_batch(batch, cfg, &mut archive, &mut points);
 
         // Mutation generations: parents come from the current robust front.
         for _gen in 0..cfg.generations {
+            let _span = obs::trace::span("explore:generation");
             let pool = self.selection_pool(&archive, &budgets);
             if pool.is_empty() {
                 break; // empty archive: nothing to mutate from
@@ -383,6 +388,9 @@ impl<S: SearchSpace> Explorer<S> {
         let mut keyed = graph.clone();
         keyed.name.clear();
         if !seen.insert(keyed.structural_hash(DEDUP_SEED)) {
+            if obs::enabled() {
+                obs::global().explore_dedup_rejects.incr();
+            }
             return false;
         }
         batch.push((point, graph));
@@ -398,6 +406,11 @@ impl<S: SearchSpace> Explorer<S> {
         archive: &mut Vec<Evaluated>,
         points: &mut Vec<S::Point>,
     ) {
+        if obs::enabled() {
+            let r = obs::global();
+            r.explore_generations.incr();
+            r.explore_candidates.add(batch.len() as u64);
+        }
         let d = self.targets.len();
         let lats = fan_indexed(batch.len() * d, cfg.threads, |i| {
             let (_, graph) = &batch[i / d];
@@ -422,6 +435,9 @@ impl<S: SearchSpace> Explorer<S> {
     /// parents to walk toward the feasible region).
     fn selection_pool(&self, archive: &[Evaluated], budgets: &[Option<f64>]) -> Vec<usize> {
         let feasible = pareto_front(&self.robust_points(archive, budgets, true));
+        if obs::enabled() {
+            obs::global().explore_feasible.add(feasible.len() as u64);
+        }
         let front = if feasible.is_empty() {
             pareto_front(&self.robust_points(archive, budgets, false))
         } else {

@@ -40,6 +40,13 @@
 //! estimator drives hardware-aware NAS instead of merely answering lookups.
 //! The service exposes it as the `explore` request.
 //!
+//! The pipeline ships instrumented: the zero-dependency telemetry layer in
+//! [`obs`] records per-stage service latencies, graph-cache behaviour,
+//! fan-out worker balance, campaign and explorer progress into a global
+//! registry, exposed through the service's `stats` op and optional Chrome
+//! `trace_event` span tracing (`ANNETTE_TRACE`), without ever changing
+//! response bytes (`ANNETTE_OBS=off` disables it entirely).
+//!
 //! The crate is dependency-free by design (hand-rolled JSON in [`json`]) so
 //! it builds in hermetic environments. `make bench` runs the std-only
 //! benchmark harness (`benches/estimator_bench.rs`) and records the perf
@@ -58,6 +65,7 @@ pub mod json;
 pub mod mapping;
 pub mod metrics;
 pub mod models;
+pub mod obs;
 pub mod par;
 pub mod repro;
 pub mod rng;
@@ -88,5 +96,6 @@ pub mod prelude {
     pub use crate::metrics::{mae, mape, mape_defined, spearman_rho};
     pub use crate::models::layer::ModelKind;
     pub use crate::models::platform::PlatformModel;
+    pub use crate::obs::{self, Snapshot};
     pub use crate::par::fan_indexed;
 }

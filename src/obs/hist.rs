@@ -1,0 +1,234 @@
+//! Log-bucketed latency histograms with lock-free record and mergeable,
+//! deterministic snapshots.
+//!
+//! Buckets are powers of two: bucket 0 holds the exact value 0, bucket `i`
+//! (for `i >= 1`) holds values in `[2^(i-1), 2^i)`. Values at or above the
+//! top bucket's lower bound collapse into the last (overflow) bucket. With
+//! 48 buckets the largest non-overflow bound is `2^46` — about 2.2 years in
+//! microseconds, far beyond any latency this crate records.
+//!
+//! Percentiles are reported as the *upper bound* of the bucket containing
+//! the requested rank (`2^i - 1`, or 0 for the zero bucket). That makes
+//! every percentile a deterministic integer derived purely from bucket
+//! counts — two snapshots with equal counts always report equal
+//! percentiles, which the `stats` op's determinism contract relies on.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::json::Value;
+
+/// Bucket count. Index 0 is the zero bucket, 1..=46 are the power-of-two
+/// ranges, 47 is the overflow bucket.
+pub const BUCKETS: usize = 48;
+
+/// Map a recorded value to its bucket index.
+#[inline]
+fn bucket_index(v: u64) -> usize {
+    if v == 0 {
+        return 0;
+    }
+    // Number of bits needed to represent v: 1 for v=1 (bucket 1 = [1,2)),
+    // 2 for v in [2,4) (bucket 2), and so on.
+    let bits = 64 - v.leading_zeros() as usize;
+    bits.min(BUCKETS - 1)
+}
+
+/// Inclusive upper bound of a bucket, used when reporting percentiles.
+#[inline]
+fn bucket_upper(i: usize) -> u64 {
+    if i == 0 {
+        0
+    } else if i >= BUCKETS - 1 {
+        u64::MAX
+    } else {
+        (1u64 << i) - 1
+    }
+}
+
+/// A concurrent histogram. `record` is two relaxed `fetch_add`s — no locks,
+/// no allocation — so it is safe on the service fast path.
+pub struct Histogram {
+    buckets: [AtomicU64; BUCKETS],
+    sum: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one observation (typically a duration in microseconds).
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Copy the current counts out. Concurrent records land either before
+    /// or after the snapshot; the snapshot itself is a consistent set of
+    /// monotone counters for reporting purposes.
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            buckets: std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed)),
+            sum: self.sum.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Zero every bucket and the sum.
+    pub fn reset(&self) {
+        for b in &self.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+        self.sum.store(0, Ordering::Relaxed);
+    }
+}
+
+/// An owned, mergeable copy of a histogram's counts.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HistSnapshot {
+    pub buckets: [u64; BUCKETS],
+    pub sum: u64,
+}
+
+impl Default for HistSnapshot {
+    fn default() -> HistSnapshot {
+        HistSnapshot {
+            buckets: [0; BUCKETS],
+            sum: 0,
+        }
+    }
+}
+
+impl HistSnapshot {
+    /// Total number of recorded observations.
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+
+    /// Bucket-wise accumulate `other` into `self`.
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += *b;
+        }
+        self.sum += other.sum;
+    }
+
+    /// Deterministic percentile: the upper bound of the bucket holding the
+    /// observation at rank `ceil(q * count)` (1-based). Returns 0 for an
+    /// empty histogram. `q` is clamped to `[0, 1]`.
+    pub fn percentile(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let rank = ((q * total as f64).ceil() as u64).max(1).min(total);
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return bucket_upper(i);
+            }
+        }
+        bucket_upper(BUCKETS - 1)
+    }
+
+    /// Mean of the recorded values, in the same unit they were recorded in.
+    /// Unlike the percentiles this is exact, not bucket-quantised.
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum as f64 / n as f64
+        }
+    }
+
+    /// Serialize as a compact JSON object: count, sum, p50/p90/p99, and the
+    /// non-empty buckets as `[index, count]` pairs. Field order is fixed and
+    /// every value is an integer, so equal snapshots serialize to equal
+    /// bytes.
+    pub fn to_value(&self) -> Value {
+        let buckets: Vec<Value> = self
+            .buckets
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| Value::Arr(vec![Value::int(i), Value::Num(c as f64)]))
+            .collect();
+        Value::Obj(vec![
+            ("count".to_string(), Value::Num(self.count() as f64)),
+            ("sum".to_string(), Value::Num(self.sum as f64)),
+            ("p50".to_string(), Value::Num(self.percentile(0.50) as f64)),
+            ("p90".to_string(), Value::Num(self.percentile(0.90) as f64)),
+            ("p99".to_string(), Value::Num(self.percentile(0.99) as f64)),
+            ("buckets".to_string(), Value::Arr(buckets)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries_are_powers_of_two() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 1);
+        assert_eq!(bucket_index(2), 2);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 3);
+        assert_eq!(bucket_index(7), 3);
+        assert_eq!(bucket_index(8), 4);
+        assert_eq!(bucket_index((1 << 46) - 1), 46);
+        assert_eq!(bucket_index(1 << 46), BUCKETS - 1);
+        assert_eq!(bucket_index(u64::MAX), BUCKETS - 1);
+    }
+
+    #[test]
+    fn percentiles_report_bucket_upper_bounds() {
+        let h = Histogram::new();
+        for _ in 0..99 {
+            h.record(1); // bucket 1, upper bound 1
+        }
+        h.record(1000); // bucket 10 ([512,1024)), upper bound 1023
+        let s = h.snapshot();
+        assert_eq!(s.count(), 100);
+        assert_eq!(s.percentile(0.50), 1);
+        assert_eq!(s.percentile(0.99), 1);
+        assert_eq!(s.percentile(1.0), 1023);
+        assert_eq!(s.sum, 99 + 1000);
+    }
+
+    #[test]
+    fn empty_histogram_is_all_zeros() {
+        let s = Histogram::new().snapshot();
+        assert_eq!(s.count(), 0);
+        assert_eq!(s.percentile(0.5), 0);
+        assert_eq!(s.mean(), 0.0);
+    }
+
+    #[test]
+    fn merge_accumulates_bucketwise() {
+        let a = Histogram::new();
+        a.record(3);
+        let b = Histogram::new();
+        b.record(3);
+        b.record(100);
+        let mut sa = a.snapshot();
+        sa.merge(&b.snapshot());
+        assert_eq!(sa.count(), 3);
+        assert_eq!(sa.buckets[bucket_index(3)], 2);
+        assert_eq!(sa.buckets[bucket_index(100)], 1);
+        assert_eq!(sa.sum, 106);
+    }
+}

@@ -1,0 +1,388 @@
+//! The global metric registry and its deterministic snapshot.
+//!
+//! One [`Registry`] instance lives for the process ([`crate::obs::global`])
+//! and every instrumented site writes into it through lock-free counters
+//! and histograms. [`Registry::snapshot`] copies the current values into a
+//! plain [`Snapshot`], whose `to_value()` serialization has a fixed field
+//! order and integer-only values — equal snapshots always produce equal
+//! bytes, which is what the `stats` service op's determinism contract
+//! promises (see docs/ARCHITECTURE.md § Telemetry).
+
+use crate::json::Value;
+use crate::obs::counter::{Counter, Gauge};
+use crate::obs::hist::{HistSnapshot, Histogram};
+
+/// Service ops tracked per-request. Order is the wire order in snapshots.
+pub const OP_NAMES: [&str; 4] = ["models", "estimate", "explore", "stats"];
+
+/// Error-attribution rows: one per op plus `other` for requests whose op
+/// could not be determined (unparseable line, unknown op).
+pub const OP_OTHER: usize = OP_NAMES.len();
+
+/// Error kinds, mirroring [`crate::error::Error::kind`].
+pub const KIND_NAMES: [&str; 4] = ["io", "json", "invalid", "missing"];
+
+/// Request stages timed on the service hot path, in pipeline order.
+pub const STAGE_NAMES: [&str; 5] = ["parse", "cache_lookup", "compile", "score", "serialize"];
+pub const STAGE_PARSE: usize = 0;
+pub const STAGE_CACHE_LOOKUP: usize = 1;
+pub const STAGE_COMPILE: usize = 2;
+pub const STAGE_SCORE: usize = 3;
+pub const STAGE_SERIALIZE: usize = 4;
+
+/// Benchmark-campaign probe families timed by the orchestrator.
+pub const FAMILY_NAMES: [&str; 4] = ["micro", "pairwise", "chain", "elision"];
+pub const FAMILY_MICRO: usize = 0;
+pub const FAMILY_PAIRWISE: usize = 1;
+pub const FAMILY_CHAIN: usize = 2;
+pub const FAMILY_ELISION: usize = 3;
+
+/// Per-worker fan-out slots. Workers beyond this index fold into the last
+/// slot; the orchestrator caps at 8 threads so 16 is generous.
+pub const WORKERS_MAX: usize = 16;
+
+/// All metrics the pipeline records. Fields are public: instrumentation
+/// sites touch exactly the counter they need, guarded by
+/// [`crate::obs::enabled`].
+pub struct Registry {
+    /// Requests seen per op (indexed by `OP_NAMES` order).
+    pub requests: [Counter; OP_NAMES.len()],
+    /// In-band errors by attributed op (rows `OP_NAMES` + `other`) and
+    /// error kind (columns `KIND_NAMES`).
+    pub errors: [[Counter; KIND_NAMES.len()]; OP_NAMES.len() + 1],
+    /// Per-stage latency histograms in microseconds (`STAGE_NAMES`).
+    pub stages: [Histogram; STAGE_NAMES.len()],
+
+    /// GraphCache lookups that returned an existing compilation.
+    pub cache_hits: Counter,
+    /// GraphCache lookups that had to compile.
+    pub cache_misses: Counter,
+    /// Misses whose graph fingerprint was already resident under another
+    /// model id — the cross-model recompiles the cache key deliberately
+    /// forces for correctness.
+    pub cache_recompiles: Counter,
+    /// Entries removed by capacity eviction.
+    pub cache_evictions: Counter,
+    /// Current entry count of the most recently touched cache.
+    pub cache_size: Gauge,
+    /// Configured capacity of the most recently touched cache.
+    pub cache_capacity: Gauge,
+
+    /// Items pulled, busy time, and idle time per fan-out worker slot.
+    pub fan_items: [Counter; WORKERS_MAX],
+    pub fan_busy_us: [Counter; WORKERS_MAX],
+    pub fan_idle_us: [Counter; WORKERS_MAX],
+
+    /// Wall time per benchmark-campaign probe family (µs, one observation
+    /// per family per campaign), indexed by `FAMILY_NAMES`.
+    pub campaign: [Histogram; FAMILY_NAMES.len()],
+
+    /// Explorer progress: generations run, candidates scored, duplicates
+    /// rejected by the structural-hash dedup, and feasible candidates that
+    /// entered a selection pool.
+    pub explore_generations: Counter,
+    pub explore_candidates: Counter,
+    pub explore_dedup_rejects: Counter,
+    pub explore_feasible: Counter,
+}
+
+impl Default for Registry {
+    fn default() -> Registry {
+        Registry::new()
+    }
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry {
+            requests: std::array::from_fn(|_| Counter::new()),
+            errors: std::array::from_fn(|_| std::array::from_fn(|_| Counter::new())),
+            stages: std::array::from_fn(|_| Histogram::new()),
+            cache_hits: Counter::new(),
+            cache_misses: Counter::new(),
+            cache_recompiles: Counter::new(),
+            cache_evictions: Counter::new(),
+            cache_size: Gauge::new(),
+            cache_capacity: Gauge::new(),
+            fan_items: std::array::from_fn(|_| Counter::new()),
+            fan_busy_us: std::array::from_fn(|_| Counter::new()),
+            fan_idle_us: std::array::from_fn(|_| Counter::new()),
+            campaign: std::array::from_fn(|_| Histogram::new()),
+            explore_generations: Counter::new(),
+            explore_candidates: Counter::new(),
+            explore_dedup_rejects: Counter::new(),
+            explore_feasible: Counter::new(),
+        }
+    }
+
+    /// Index of a known op name in `OP_NAMES`.
+    pub fn op_index(op: &str) -> Option<usize> {
+        OP_NAMES.iter().position(|&o| o == op)
+    }
+
+    /// Count one in-band error against `op` (or the `other` row when the
+    /// op is unknown/unparseable) under the error's kind.
+    pub fn record_error(&self, op: Option<usize>, kind: &str) {
+        let row = op.unwrap_or(OP_OTHER).min(OP_OTHER);
+        let col = KIND_NAMES.iter().position(|&k| k == kind).unwrap_or(0);
+        self.errors[row][col].incr();
+    }
+
+    /// Record a stage duration in microseconds.
+    #[inline]
+    pub fn record_stage(&self, stage: usize, us: u64) {
+        self.stages[stage].record(us);
+    }
+
+    /// Copy every metric into an owned snapshot.
+    pub fn snapshot(&self) -> Snapshot {
+        Snapshot {
+            requests: std::array::from_fn(|i| self.requests[i].value()),
+            errors: std::array::from_fn(|r| std::array::from_fn(|c| self.errors[r][c].value())),
+            stages: std::array::from_fn(|i| self.stages[i].snapshot()),
+            cache_hits: self.cache_hits.value(),
+            cache_misses: self.cache_misses.value(),
+            cache_recompiles: self.cache_recompiles.value(),
+            cache_evictions: self.cache_evictions.value(),
+            cache_size: self.cache_size.value(),
+            cache_capacity: self.cache_capacity.value(),
+            fan: std::array::from_fn(|w| WorkerStats {
+                items: self.fan_items[w].value(),
+                busy_us: self.fan_busy_us[w].value(),
+                idle_us: self.fan_idle_us[w].value(),
+            }),
+            campaign: std::array::from_fn(|i| self.campaign[i].snapshot()),
+            explore_generations: self.explore_generations.value(),
+            explore_candidates: self.explore_candidates.value(),
+            explore_dedup_rejects: self.explore_dedup_rejects.value(),
+            explore_feasible: self.explore_feasible.value(),
+        }
+    }
+
+    /// Zero every counter and histogram. Gauges (cache size/capacity) are
+    /// instantaneous readings and keep their last value.
+    pub fn reset(&self) {
+        for c in &self.requests {
+            c.reset();
+        }
+        for row in &self.errors {
+            for c in row {
+                c.reset();
+            }
+        }
+        for h in &self.stages {
+            h.reset();
+        }
+        self.cache_hits.reset();
+        self.cache_misses.reset();
+        self.cache_recompiles.reset();
+        self.cache_evictions.reset();
+        for w in 0..WORKERS_MAX {
+            self.fan_items[w].reset();
+            self.fan_busy_us[w].reset();
+            self.fan_idle_us[w].reset();
+        }
+        for h in &self.campaign {
+            h.reset();
+        }
+        self.explore_generations.reset();
+        self.explore_candidates.reset();
+        self.explore_dedup_rejects.reset();
+        self.explore_feasible.reset();
+    }
+}
+
+/// Per-worker fan-out balance.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WorkerStats {
+    pub items: u64,
+    pub busy_us: u64,
+    pub idle_us: u64,
+}
+
+impl WorkerStats {
+    fn is_zero(&self) -> bool {
+        self.items == 0 && self.busy_us == 0 && self.idle_us == 0
+    }
+}
+
+/// A point-in-time copy of the registry, serializable as the
+/// `annette-obs.v1` document.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Snapshot {
+    pub requests: [u64; OP_NAMES.len()],
+    pub errors: [[u64; KIND_NAMES.len()]; OP_NAMES.len() + 1],
+    pub stages: [HistSnapshot; STAGE_NAMES.len()],
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub cache_recompiles: u64,
+    pub cache_evictions: u64,
+    pub cache_size: u64,
+    pub cache_capacity: u64,
+    pub fan: [WorkerStats; WORKERS_MAX],
+    pub campaign: [HistSnapshot; FAMILY_NAMES.len()],
+    pub explore_generations: u64,
+    pub explore_candidates: u64,
+    pub explore_dedup_rejects: u64,
+    pub explore_feasible: u64,
+}
+
+fn int(n: u64) -> Value {
+    Value::Num(n as f64)
+}
+
+impl Snapshot {
+    /// GraphCache hit rate over all lookups, or 0 when none happened.
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
+        }
+    }
+
+    /// Serialize as the `annette-obs.v1` JSON document. Field order is
+    /// fixed; every metric value is an integer; the only data-dependent
+    /// shape is the `fan.workers` array, truncated after the last slot
+    /// with any activity (a pure function of the counts, so determinism
+    /// holds).
+    pub fn to_value(&self) -> Value {
+        let requests = Value::Obj(
+            OP_NAMES
+                .iter()
+                .zip(self.requests.iter())
+                .map(|(name, &n)| (name.to_string(), int(n)))
+                .collect(),
+        );
+        let mut error_rows = Vec::new();
+        for (r, row) in self.errors.iter().enumerate() {
+            let name = if r < OP_NAMES.len() {
+                OP_NAMES[r]
+            } else {
+                "other"
+            };
+            let fields: Vec<(String, Value)> = KIND_NAMES
+                .iter()
+                .zip(row.iter())
+                .map(|(kind, &n)| (kind.to_string(), int(n)))
+                .collect();
+            error_rows.push((name.to_string(), Value::Obj(fields)));
+        }
+        let stages = Value::Obj(
+            STAGE_NAMES
+                .iter()
+                .zip(self.stages.iter())
+                .map(|(name, h)| (name.to_string(), h.to_value()))
+                .collect(),
+        );
+        let cache = Value::Obj(vec![
+            ("hits".to_string(), int(self.cache_hits)),
+            ("misses".to_string(), int(self.cache_misses)),
+            ("recompiles".to_string(), int(self.cache_recompiles)),
+            ("evictions".to_string(), int(self.cache_evictions)),
+            ("size".to_string(), int(self.cache_size)),
+            ("capacity".to_string(), int(self.cache_capacity)),
+        ]);
+        let last_active = self
+            .fan
+            .iter()
+            .rposition(|w| !w.is_zero())
+            .map_or(0, |i| i + 1);
+        let workers: Vec<Value> = self.fan[..last_active]
+            .iter()
+            .map(|w| {
+                Value::Obj(vec![
+                    ("items".to_string(), int(w.items)),
+                    ("busy_us".to_string(), int(w.busy_us)),
+                    ("idle_us".to_string(), int(w.idle_us)),
+                ])
+            })
+            .collect();
+        let fan = Value::Obj(vec![("workers".to_string(), Value::Arr(workers))]);
+        let campaign = Value::Obj(
+            FAMILY_NAMES
+                .iter()
+                .zip(self.campaign.iter())
+                .map(|(name, h)| (name.to_string(), h.to_value()))
+                .collect(),
+        );
+        let explore = Value::Obj(vec![
+            ("generations".to_string(), int(self.explore_generations)),
+            ("candidates".to_string(), int(self.explore_candidates)),
+            ("dedup_rejects".to_string(), int(self.explore_dedup_rejects)),
+            ("feasible".to_string(), int(self.explore_feasible)),
+        ]);
+        Value::Obj(vec![
+            ("format".to_string(), Value::str("annette-obs.v1")),
+            ("requests".to_string(), requests),
+            ("errors".to_string(), Value::Obj(error_rows)),
+            ("stages".to_string(), stages),
+            ("cache".to_string(), cache),
+            ("fan".to_string(), fan),
+            ("campaign".to_string(), campaign),
+            ("explore".to_string(), explore),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_serialization_is_deterministic() {
+        let r = Registry::new();
+        r.requests[1].add(3);
+        r.record_error(Some(1), "invalid");
+        r.record_error(None, "json");
+        r.record_stage(STAGE_PARSE, 5);
+        r.cache_hits.add(2);
+        r.cache_misses.incr();
+        r.cache_size.set(1);
+        r.cache_capacity.set(4096);
+        r.fan_items[0].add(10);
+        let a = r.snapshot();
+        let b = r.snapshot();
+        assert_eq!(a, b);
+        assert_eq!(a.to_value().to_string(), b.to_value().to_string());
+        let text = a.to_value().to_string();
+        assert!(text.starts_with("{\"format\":\"annette-obs.v1\""));
+        // Parse back and check a few fields survived the round trip.
+        let v = crate::json::Value::parse(&text).unwrap();
+        assert_eq!(v.get("requests").unwrap().req_usize("estimate").unwrap(), 3);
+        let errors = v.get("errors").unwrap();
+        assert_eq!(
+            errors.get("estimate").unwrap().req_usize("invalid").unwrap(),
+            1
+        );
+        assert_eq!(errors.get("other").unwrap().req_usize("json").unwrap(), 1);
+        let cache = v.get("cache").unwrap();
+        assert_eq!(cache.req_usize("hits").unwrap(), 2);
+        assert_eq!(cache.req_usize("capacity").unwrap(), 4096);
+        let workers = v.get("fan").unwrap().req_arr("workers").unwrap();
+        assert_eq!(workers.len(), 1);
+    }
+
+    #[test]
+    fn reset_zeroes_counters_but_keeps_gauges() {
+        let r = Registry::new();
+        r.requests[0].add(5);
+        r.record_stage(STAGE_SCORE, 7);
+        r.cache_size.set(9);
+        r.reset();
+        let s = r.snapshot();
+        assert_eq!(s.requests[0], 0);
+        assert_eq!(s.stages[STAGE_SCORE].count(), 0);
+        assert_eq!(s.cache_size, 9);
+    }
+
+    #[test]
+    fn hit_rate_handles_empty_and_nonempty() {
+        let r = Registry::new();
+        assert_eq!(r.snapshot().cache_hit_rate(), 0.0);
+        r.cache_hits.add(3);
+        r.cache_misses.add(1);
+        assert_eq!(r.snapshot().cache_hit_rate(), 0.75);
+    }
+}

@@ -1,0 +1,175 @@
+//! Lightweight span tracing in Chrome `trace_event` format.
+//!
+//! Tracing is off unless enabled — either by setting the `ANNETTE_TRACE`
+//! environment variable to an output path before the first span, or
+//! programmatically with [`enable_to`]. When off, [`span`] returns an inert
+//! guard whose cost is one relaxed atomic load.
+//!
+//! Enabled spans buffer `{name, ts, dur, tid}` complete events ("ph":"X")
+//! in memory, capped at [`MAX_EVENTS`]; [`flush`] rewrites the output file
+//! with everything buffered so far as a JSON document loadable by
+//! `chrome://tracing` / Perfetto. Timestamps are microseconds relative to
+//! the first span in the process.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::error::Result;
+use crate::json::{write_json_str, write_json_usize};
+
+/// Buffered-event cap. Past this the span guards drop their events and
+/// bump a counter that [`flush`] reports, so a runaway trace degrades to a
+/// truncated file instead of unbounded memory.
+pub const MAX_EVENTS: usize = 100_000;
+
+struct Event {
+    name: &'static str,
+    ts_us: u64,
+    dur_us: u64,
+    tid: usize,
+}
+
+struct Sink {
+    path: String,
+    events: Mutex<Vec<Event>>,
+    dropped: AtomicU64,
+    origin: Instant,
+}
+
+/// `None` once resolved means tracing stays off for the process lifetime.
+static SINK: OnceLock<Option<Sink>> = OnceLock::new();
+
+static NEXT_TID: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    static TID: usize = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+}
+
+fn sink() -> Option<&'static Sink> {
+    SINK.get_or_init(|| {
+        std::env::var("ANNETTE_TRACE")
+            .ok()
+            .filter(|p| !p.is_empty())
+            .map(new_sink)
+    })
+    .as_ref()
+}
+
+fn new_sink(path: String) -> Sink {
+    Sink {
+        path,
+        events: Mutex::new(Vec::new()),
+        dropped: AtomicU64::new(0),
+        origin: Instant::now(),
+    }
+}
+
+/// Enable tracing to `path`, regardless of the environment. Returns `false`
+/// if the trace sink was already resolved (enabled or permanently off) —
+/// the first resolution wins for the process lifetime.
+pub fn enable_to(path: &str) -> bool {
+    let mut fresh = false;
+    SINK.get_or_init(|| {
+        fresh = true;
+        Some(new_sink(path.to_string()))
+    });
+    fresh
+}
+
+/// Whether tracing is active (cheap after the first call).
+pub fn active() -> bool {
+    sink().is_some()
+}
+
+/// An RAII span guard: records a complete event covering its lifetime when
+/// dropped. Inert (and nearly free) when tracing is off.
+pub struct Span {
+    start: Option<(&'static str, Instant)>,
+}
+
+/// Open a span named `name`. The name should be a stable identifier like
+/// `op:estimate` or `campaign:micro`; it lands verbatim in the trace file.
+#[inline]
+pub fn span(name: &'static str) -> Span {
+    if !crate::obs::enabled() {
+        return Span { start: None };
+    }
+    match sink() {
+        Some(_) => Span {
+            start: Some((name, Instant::now())),
+        },
+        None => Span { start: None },
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let Some((name, started)) = self.start.take() else {
+            return;
+        };
+        let Some(s) = sink() else { return };
+        let dur_us = started.elapsed().as_micros() as u64;
+        let ts_us = started
+            .saturating_duration_since(s.origin)
+            .as_micros() as u64;
+        let tid = TID.with(|t| *t);
+        let mut events = s.events.lock().expect("trace event buffer poisoned");
+        if events.len() >= MAX_EVENTS {
+            drop(events);
+            s.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        events.push(Event {
+            name,
+            ts_us,
+            dur_us,
+            tid,
+        });
+    }
+}
+
+/// Number of spans discarded after the buffer filled.
+pub fn dropped() -> u64 {
+    sink().map_or(0, |s| s.dropped.load(Ordering::Relaxed))
+}
+
+/// Rewrite the trace file with every event buffered so far. A no-op
+/// returning `Ok(())` when tracing is off. Events stay buffered, so calling
+/// this repeatedly is safe and the last call wins with the fullest file.
+pub fn flush() -> Result<()> {
+    let Some(s) = sink() else {
+        return Ok(());
+    };
+    let events = s.events.lock().expect("trace event buffer poisoned");
+    let mut out = String::with_capacity(64 + events.len() * 96);
+    out.push_str("{\"traceEvents\":[");
+    for (i, e) in events.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str("{\"name\":");
+        write_json_str(&mut out, e.name);
+        out.push_str(",\"ph\":\"X\",\"ts\":");
+        write_json_usize(&mut out, e.ts_us as usize);
+        out.push_str(",\"dur\":");
+        write_json_usize(&mut out, e.dur_us as usize);
+        out.push_str(",\"pid\":1,\"tid\":");
+        write_json_usize(&mut out, e.tid + 1);
+        out.push('}');
+    }
+    out.push_str("],\"displayTimeUnit\":\"ms\"}");
+    drop(events);
+    std::fs::write(&s.path, out)?;
+    Ok(())
+}
+
+/// Flush only when tracing is active — callable unconditionally from batch
+/// boundaries without touching the filesystem in the common (off) case.
+/// Errors are swallowed: tracing is diagnostics, not a delivery guarantee,
+/// and a bad path must not fail the pipeline it observes.
+pub fn flush_if_active() {
+    if active() {
+        let _ = flush();
+    }
+}

@@ -7,10 +7,29 @@
 //! sequential run regardless of thread scheduling.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Instant;
+
+use crate::obs;
+use crate::obs::registry::WORKERS_MAX;
+
+/// Record one worker's fan-out balance into the global registry: items it
+/// pulled, time it spent in its pull loop, and the gap between that and the
+/// fan's wall time (time the worker sat finished while stragglers ran).
+fn record_worker(slot: usize, items: usize, busy_us: u64, wall_us: u64) {
+    let slot = slot.min(WORKERS_MAX - 1);
+    let r = obs::global();
+    r.fan_items[slot].add(items as u64);
+    r.fan_busy_us[slot].add(busy_us);
+    r.fan_idle_us[slot].add(wall_us.saturating_sub(busy_us));
+}
 
 /// Evaluate `f(0..n)` across up to `threads` worker threads and return the
 /// results in input order. `threads <= 1` (or `n <= 1`) runs sequentially on
 /// the calling thread. Panics in `f` propagate.
+///
+/// When telemetry is on ([`crate::obs::enabled`]), each worker's pulled-item
+/// count, busy time, and idle time land in the per-worker-slot counters of
+/// the global registry; the results themselves are byte-for-byte unaffected.
 pub fn fan_indexed<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
 where
     T: Send,
@@ -20,14 +39,23 @@ where
         return Vec::new();
     }
     let threads = threads.clamp(1, n);
+    let telemetry = obs::enabled();
     if threads == 1 {
-        return (0..n).map(f).collect();
+        let started = telemetry.then(Instant::now);
+        let out: Vec<T> = (0..n).map(f).collect();
+        if let Some(t) = started {
+            let us = t.elapsed().as_micros() as u64;
+            record_worker(0, n, us, us);
+        }
+        return out;
     }
     let counter = AtomicUsize::new(0);
-    let parts: Vec<Vec<(usize, T)>> = std::thread::scope(|s| {
+    let fan_start = telemetry.then(Instant::now);
+    let parts: Vec<(Vec<(usize, T)>, u64)> = std::thread::scope(|s| {
         let handles: Vec<_> = (0..threads)
             .map(|_| {
                 s.spawn(|| {
+                    let started = telemetry.then(Instant::now);
                     let mut part = Vec::new();
                     loop {
                         let i = counter.fetch_add(1, Ordering::Relaxed);
@@ -36,7 +64,9 @@ where
                         }
                         part.push((i, f(i)));
                     }
-                    part
+                    let busy_us =
+                        started.map_or(0, |t| t.elapsed().as_micros() as u64);
+                    (part, busy_us)
                 })
             })
             .collect();
@@ -45,8 +75,14 @@ where
             .map(|h| h.join().expect("fan_indexed worker panicked"))
             .collect()
     });
+    if let Some(t) = fan_start {
+        let wall_us = t.elapsed().as_micros() as u64;
+        for (w, (part, busy_us)) in parts.iter().enumerate() {
+            record_worker(w, part.len(), *busy_us, wall_us);
+        }
+    }
     let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
-    for part in parts {
+    for (part, _) in parts {
         for (i, v) in part {
             slots[i] = Some(v);
         }

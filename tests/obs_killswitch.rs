@@ -1,0 +1,75 @@
+//! The `ANNETTE_OBS=off` kill switch, exercised in its own process: the
+//! enabled flag is resolved once from the environment, so this binary sets
+//! the variable before anything telemetry-adjacent runs and holds the single
+//! test. (Unit tests inside the library never turn the flag off — that
+//! would race whichever tests record telemetry in the same process.)
+
+use annette::coordinator::orchestrator::run_campaign;
+use annette::coordinator::Service;
+use annette::graph::serial::graph_to_value;
+use annette::hw::device::Device;
+use annette::hw::dpu::DpuDevice;
+use annette::json::Value;
+use annette::models::platform::PlatformModel;
+use annette::obs;
+use annette::zoo;
+
+#[test]
+fn annette_obs_off_disables_all_recording() {
+    std::env::set_var("ANNETTE_OBS", "off");
+    assert!(!obs::enabled(), "env kill switch must win at first resolution");
+
+    // An inert stopwatch reports nothing, so instrumented sites skip their
+    // record calls entirely.
+    let mut sw = obs::Stopwatch::start();
+    assert_eq!(sw.lap_us(), None);
+    assert_eq!(sw.elapsed_us(), None);
+
+    // Full pipeline traffic: campaign, compile, cache, fan-out, service.
+    let dev = DpuDevice::zcu102();
+    let data = run_campaign(&dev, 1, 4);
+    let svc = Service::new(PlatformModel::fit(&dev.spec(), &data));
+    let net = graph_to_value(&zoo::nasbench::sample_networks(1, 5)[0]).to_string();
+    let req = format!("{{\"op\":\"estimate\",\"total_only\":true,\"network\":{net}}}");
+    let mut input = String::new();
+    for _ in 0..4 {
+        input.push_str(&req);
+        input.push('\n');
+    }
+    input.push_str("{\"op\":\"teleport\"}\n");
+    let out = svc.serve_lines(&input, 2);
+    assert_eq!(out.len(), 5);
+    assert!(out[0].contains("\"ok\":true"));
+
+    // Nothing landed in the registry.
+    let snap = obs::global().snapshot();
+    assert_eq!(snap.requests, [0; 4]);
+    assert_eq!(snap.errors, [[0; 4]; 5]);
+    assert_eq!(snap.cache_hits + snap.cache_misses, 0);
+    for h in &snap.stages {
+        assert_eq!(h.count(), 0);
+    }
+    for w in &snap.fan {
+        assert_eq!(w.items, 0);
+    }
+
+    // The stats op still answers — reporting that recording is off and an
+    // all-zero snapshot — and error responses keep their error_kind.
+    let resp = Value::parse(&svc.handle(r#"{"op":"stats"}"#)).unwrap();
+    assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(true));
+    assert_eq!(resp.get("enabled").and_then(|v| v.as_bool()), Some(false));
+    let o = resp.req("obs").unwrap();
+    assert_eq!(o.req_str("format").unwrap(), "annette-obs.v1");
+    assert_eq!(o.req("requests").unwrap().req_usize("estimate").unwrap(), 0);
+    let err = Value::parse(&svc.handle(r#"{"op":"teleport"}"#)).unwrap();
+    assert_eq!(err.req_str("error_kind").unwrap(), "invalid");
+
+    // set_enabled overrides the environment; recording resumes exactly.
+    obs::set_enabled(true);
+    assert!(obs::enabled());
+    let _ = svc.handle(&req);
+    assert_eq!(obs::global().snapshot().requests[1], 1);
+    obs::set_enabled(false);
+    let _ = svc.handle(&req);
+    assert_eq!(obs::global().snapshot().requests[1], 1, "off again: no growth");
+}

@@ -1,0 +1,108 @@
+//! The telemetry primitives through the public API: histogram bucket
+//! geometry at the edges, sharded-counter exactness under contention, and
+//! snapshot merge/determinism — all on local instances, independent of the
+//! process-global registry.
+
+use annette::obs::hist::BUCKETS;
+use annette::obs::{Counter, Histogram, Registry};
+
+#[test]
+fn histogram_buckets_split_exactly_at_powers_of_two() {
+    let h = Histogram::new();
+    // Zero gets its own bucket; each boundary value 2^k opens bucket k+1.
+    h.record(0);
+    for k in 0..=10u32 {
+        h.record(1u64 << k); // first value of its bucket
+        h.record((1u64 << (k + 1)) - 1); // last value of the same bucket
+    }
+    let s = h.snapshot();
+    assert_eq!(s.buckets[0], 1, "zero bucket");
+    for k in 0..=10usize {
+        assert_eq!(s.buckets[k + 1], 2, "bucket for [2^{k}, 2^{}): both ends", k + 1);
+    }
+    assert_eq!(s.count(), 23);
+
+    // Huge values collapse into the overflow bucket, whose reported
+    // percentile saturates rather than inventing a finite bound.
+    let big = Histogram::new();
+    big.record(u64::MAX);
+    big.record(1u64 << 50);
+    let sb = big.snapshot();
+    assert_eq!(sb.buckets[BUCKETS - 1], 2);
+    assert_eq!(sb.percentile(0.99), u64::MAX);
+}
+
+#[test]
+fn percentiles_are_deterministic_bucket_upper_bounds() {
+    let h = Histogram::new();
+    for v in [3u64, 3, 3, 3, 3, 3, 3, 3, 3, 200] {
+        h.record(v);
+    }
+    let s = h.snapshot();
+    // 3 lives in [2,4) → upper bound 3; 200 in [128,256) → 255.
+    assert_eq!(s.percentile(0.50), 3);
+    assert_eq!(s.percentile(0.90), 3);
+    assert_eq!(s.percentile(0.99), 255);
+    assert_eq!(s.sum, 9 * 3 + 200);
+    // Equal counts serialize to equal bytes, always.
+    assert_eq!(s.to_value().to_string(), h.snapshot().to_value().to_string());
+}
+
+#[test]
+fn sharded_counter_is_exact_under_contention() {
+    let c = Counter::new();
+    std::thread::scope(|s| {
+        for t in 0..16 {
+            let c = &c;
+            s.spawn(move || {
+                for _ in 0..10_000 {
+                    c.add(1 + (t % 3) as u64);
+                }
+            });
+        }
+    });
+    let expect: u64 = (0..16u64).map(|t| 10_000 * (1 + t % 3)).sum();
+    assert_eq!(c.value(), expect);
+    c.reset();
+    assert_eq!(c.value(), 0);
+}
+
+#[test]
+fn snapshots_merge_bucketwise_and_serialize_deterministically() {
+    let a = Histogram::new();
+    let b = Histogram::new();
+    for v in [1u64, 5, 900] {
+        a.record(v);
+    }
+    for v in [5u64, 900, 900, 1 << 40] {
+        b.record(v);
+    }
+    let mut merged = a.snapshot();
+    merged.merge(&b.snapshot());
+    assert_eq!(merged.count(), 7);
+    assert_eq!(merged.sum, a.snapshot().sum + b.snapshot().sum);
+    // Merging is bucket-wise addition, so merging in the other order gives
+    // the identical snapshot — and identical bytes.
+    let mut other = b.snapshot();
+    other.merge(&a.snapshot());
+    assert_eq!(merged, other);
+    assert_eq!(
+        merged.to_value().to_string(),
+        other.to_value().to_string()
+    );
+}
+
+#[test]
+fn local_registry_snapshots_are_independent_of_the_global_one() {
+    // Registry is a plain type: tools can own one (the bench harness, a
+    // future per-connection scope) without touching the process global.
+    let r = Registry::new();
+    r.requests[0].incr();
+    r.record_stage(0, 42);
+    let s1 = r.snapshot();
+    let s2 = r.snapshot();
+    assert_eq!(s1, s2);
+    assert_eq!(s1.to_value().to_string(), s2.to_value().to_string());
+    assert_eq!(s1.requests[0], 1);
+    assert_eq!(s1.stages[0].count(), 1);
+}

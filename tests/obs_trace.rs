@@ -1,0 +1,76 @@
+//! Span tracing end to end: the trace sink is resolved once per process, so
+//! this binary holds the single test that enables it programmatically,
+//! serves traffic, and checks both the byte-identity contract (tracing on
+//! must not change responses) and the Chrome `trace_event` output format.
+
+use annette::coordinator::orchestrator::run_campaign;
+use annette::coordinator::Service;
+use annette::graph::serial::graph_to_value;
+use annette::hw::device::Device;
+use annette::hw::dpu::DpuDevice;
+use annette::json::Value;
+use annette::models::platform::PlatformModel;
+use annette::obs;
+use annette::zoo;
+
+#[test]
+fn tracing_produces_a_loadable_file_without_changing_responses() {
+    let trace_path = std::env::temp_dir().join(format!(
+        "annette_obs_trace_{}.json",
+        std::process::id()
+    ));
+    let trace_path = trace_path.to_str().expect("utf-8 temp path").to_string();
+    obs::set_enabled(true);
+    assert!(
+        obs::trace::enable_to(&trace_path),
+        "first resolution in this process must win"
+    );
+    assert!(obs::trace::active());
+
+    let dev = DpuDevice::zcu102();
+    let data = run_campaign(&dev, 1, 4);
+    let svc = Service::new(PlatformModel::fit(&dev.spec(), &data));
+
+    let nets = zoo::nasbench::sample_networks(6, 7);
+    let mut input = String::new();
+    for g in &nets {
+        input.push_str(&format!(
+            "{{\"op\":\"estimate\",\"kind\":\"mixed\",\"total_only\":true,\"network\":{}}}\n",
+            graph_to_value(g)
+        ));
+    }
+    input.push_str("{\"op\":\"models\"}\n");
+    input.push_str("{\"op\":\"teleport\"}\n");
+
+    // Byte-identity with tracing active, across thread counts. serve_lines
+    // flushes the trace at each batch boundary.
+    let serial_run = svc.serve_lines(&input, 1);
+    for threads in [2, 4] {
+        assert_eq!(
+            svc.serve_lines(&input, threads),
+            serial_run,
+            "{threads} threads diverged with tracing active"
+        );
+    }
+
+    obs::trace::flush().expect("flush trace");
+    let text = std::fs::read_to_string(&trace_path).expect("trace file exists");
+    let doc = Value::parse(&text).expect("trace file is valid JSON");
+    let events = doc.req_arr("traceEvents").expect("traceEvents array");
+    assert!(!events.is_empty(), "spans were recorded");
+    let mut names = std::collections::HashSet::new();
+    for e in events {
+        assert_eq!(e.req_str("ph").unwrap(), "X");
+        assert!(e.req_usize("pid").is_ok());
+        assert!(e.req_usize("tid").is_ok());
+        assert!(e.req_usize("ts").is_ok());
+        assert!(e.req_usize("dur").is_ok());
+        names.insert(e.req_str("name").unwrap().to_string());
+    }
+    assert!(names.contains("op:estimate"), "estimate spans present: {names:?}");
+    assert!(names.contains("op:models"), "models spans present: {names:?}");
+    assert_eq!(doc.req_str("displayTimeUnit").unwrap(), "ms");
+    assert_eq!(obs::trace::dropped(), 0);
+
+    let _ = std::fs::remove_file(&trace_path);
+}

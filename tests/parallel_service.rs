@@ -326,3 +326,32 @@ fn repeated_graphs_hit_the_compiled_cache_consistently() {
     }
     assert!(out[0].contains("\"ok\":true"));
 }
+
+#[test]
+fn telemetry_on_keeps_responses_byte_identical_across_thread_counts() {
+    // The acceptance contract for the obs subsystem: with recording forced
+    // on, response bytes are the same function of the input under any thread
+    // count. (The same property with span tracing also active runs in
+    // tests/obs_trace.rs — the trace sink is per-process, so it gets its own
+    // binary.)
+    annette::obs::set_enabled(true);
+    let svc = service();
+    let (input, count) = request_batch();
+    let serial_run = svc.serve_lines(&input, 1);
+    assert_eq!(serial_run.len(), count);
+    for threads in [2, 4, 8] {
+        assert_eq!(
+            svc.serve_lines(&input, threads),
+            serial_run,
+            "{threads} threads diverged with telemetry on"
+        );
+    }
+    // The traffic above must have landed in the registry, and reading it
+    // back must not disturb the service's answers.
+    let snap = annette::obs::global().snapshot();
+    // 12 of the batch lines are estimates and the batch was served 4 times.
+    assert!(snap.requests[1] >= 48, "estimate lines counted");
+    let stats_resp = svc.handle(r#"{"op":"stats"}"#);
+    assert!(stats_resp.contains("\"format\":\"annette-obs.v1\""));
+    assert_eq!(svc.serve_lines(&input, 4), serial_run, "stats op disturbed serving");
+}
