@@ -1,0 +1,35 @@
+# annette-serve: the ANNETTE estimation service behind the hardened TCP
+# server (connection cap, deadlines, bounded framing, load shedding,
+# graceful drain — docs/ARCHITECTURE.md § Serving).
+#
+#   docker build -t annette-serve .
+#   docker run -p 7878:7878 annette-serve
+#   printf '{"op":"health"}\n' | nc 127.0.0.1 7878
+#
+# The crate is dependency-free, so the build stage needs no crates.io
+# access: only the two base images are pulled.
+
+FROM rust:1.70-slim AS build
+WORKDIR /src
+# Cargo validates every declared target path, so the manifest needs the
+# example and bench sources even though only the binary is built.
+COPY Cargo.toml ./
+COPY src ./src
+COPY examples ./examples
+COPY benches ./benches
+RUN cargo build --release --bin annette-serve
+
+FROM debian:bookworm-slim
+COPY --from=build /src/target/release/annette-serve /usr/local/bin/annette-serve
+# Every serving limit is tunable per container: ANNETTE_MAX_CONNS,
+# ANNETTE_READ_TIMEOUT_MS, ANNETTE_WRITE_TIMEOUT_MS, ANNETTE_IDLE_TIMEOUT_MS,
+# ANNETTE_MAX_REQUEST_BYTES, ANNETTE_QUEUE_CAP, ANNETTE_WORKERS,
+# ANNETTE_DRAIN_TIMEOUT_MS, ANNETTE_OBS_SNAPSHOT.
+ENV ANNETTE_ADDR=0.0.0.0:7878
+EXPOSE 7878
+# The plain-text probe answers `ok` (or `draining`) without touching the
+# request queue, so the check stays honest under load.
+HEALTHCHECK --interval=30s --timeout=5s --start-period=60s CMD \
+    ["bash", "-c", "exec 3<>/dev/tcp/127.0.0.1/7878 && printf 'health\\n' >&3 && head -n1 <&3 | grep -q '^ok$'"]
+ENTRYPOINT ["annette-serve"]
+CMD ["--device", "dpu-zcu102", "--passes", "2"]

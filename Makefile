@@ -1,6 +1,6 @@
 # Convenience targets for the annette reproduction.
 
-.PHONY: build test lint doc examples fleet-demo map-demo explore-demo stats-demo trace-demo prop-extended bench bench-smoke artifacts clean
+.PHONY: build test lint doc examples serve load-test fleet-demo map-demo explore-demo stats-demo trace-demo prop-extended bench bench-smoke artifacts clean
 
 build:
 	cargo build --release
@@ -33,6 +33,23 @@ examples: build
 	cargo run --release --example map_demo
 	cargo run --release --example explore_demo
 	cargo run --release --example stats_demo
+
+# Fit the default device and serve the line protocol over TCP through the
+# hardened server: connection cap, read/write/idle deadlines, bounded
+# request framing, load shedding, graceful drain. The listen address comes
+# from ANNETTE_ADDR (default 127.0.0.1:0, printed as `listening on ...`);
+# every other limit has its own ANNETTE_* override — see
+# docs/ARCHITECTURE.md § Serving. Use `--max-seconds N` for a self-draining
+# run: make serve SERVE_ARGS="--max-seconds 60".
+serve: build
+	cargo run --release --bin annette-serve -- $(SERVE_ARGS)
+
+# End-to-end socket benchmark: stands up an in-process server, drives
+# closed-loop client connections, asserts the health probe and a graceful
+# drain, and merges qps / p50_ms / p99_ms / shed_rate into
+# BENCH_estimator.json under the `serve` key.
+load-test: build
+	cargo run --release --example load_gen
 
 # Fit the whole device fleet, print the 12-network x 3-device latency
 # matrix with best-device placement, and demo the fleet service protocol.

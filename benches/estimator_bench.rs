@@ -315,7 +315,15 @@ fn main() {
         .expect("write BENCH_obs_snapshot.json");
     eprintln!("[bench] wrote BENCH_obs_snapshot.json");
 
-    let doc = Value::Obj(vec![
+    // The serving-layer benchmark (`examples/load_gen.rs`) owns the `serve`
+    // key of BENCH_estimator.json; carry an existing one across estimator
+    // re-runs so the document keeps both measurements.
+    let prior_serve = std::fs::read_to_string("BENCH_estimator.json")
+        .ok()
+        .and_then(|t| Value::parse(&t).ok())
+        .and_then(|v| v.get("serve").cloned());
+
+    let mut fields = vec![
         ("format".to_string(), Value::str("annette-bench.v1")),
         (
             "mode".to_string(),
@@ -347,11 +355,15 @@ fn main() {
             Value::num(round3(scaling_4t)),
         ),
         ("obs".to_string(), obs_summary),
-        (
-            "provenance".to_string(),
-            Value::str("benches/estimator_bench.rs"),
-        ),
-    ]);
+    ];
+    if let Some(serve) = prior_serve {
+        fields.push(("serve".to_string(), serve));
+    }
+    fields.push((
+        "provenance".to_string(),
+        Value::str("benches/estimator_bench.rs"),
+    ));
+    let doc = Value::Obj(fields);
     std::fs::write("BENCH_estimator.json", doc.to_string()).expect("write BENCH_estimator.json");
     eprintln!("[bench] wrote BENCH_estimator.json");
     println!("{doc}");

@@ -1,0 +1,251 @@
+//! Closed-loop load generator for the TCP serving layer.
+//!
+//! Spawns client threads that each open one connection and drive
+//! request/response lockstep traffic (`estimate` on small NASBench
+//! networks), then reports throughput and latency percentiles and merges
+//! them into `BENCH_estimator.json` under the `serve` key:
+//!
+//! ```json
+//! "serve": {"qps": ..., "p50_ms": ..., "p99_ms": ..., "shed_rate": ...}
+//! ```
+//!
+//! ```sh
+//! cargo run --release --example load_gen                 # self-contained
+//! cargo run --release --example load_gen -- --addr 127.0.0.1:7878
+//! cargo run --release --example load_gen -- --smoke      # CI-sized run
+//! ```
+//!
+//! Without `--addr` the example stands up its own in-process
+//! [`annette::coordinator::Server`] on an ephemeral port and drains it at
+//! the end, so it doubles as an end-to-end exercise of accept, framing,
+//! queueing, and graceful shutdown. Responses with
+//! `error_kind:"overloaded"` are counted as shed, not as failures — load
+//! shedding is the contract under saturation, and `shed_rate` reports it.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use annette::coordinator::orchestrator::{default_threads, run_campaign};
+use annette::coordinator::{Server, ServerConfig, Service};
+use annette::graph::serial::graph_to_value;
+use annette::hw::device::Device;
+use annette::hw::dpu::DpuDevice;
+use annette::json::Value;
+use annette::models::platform::PlatformModel;
+use annette::zoo::nasbench;
+
+fn round3(x: f64) -> f64 {
+    (x * 1000.0).round() / 1000.0
+}
+
+fn percentile(sorted_us: &[u64], p: f64) -> f64 {
+    if sorted_us.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted_us.len() - 1) as f64 * p).round() as usize;
+    sorted_us[idx] as f64 / 1000.0
+}
+
+/// Connect with retries: under CI the server may still be fitting its
+/// model when the client starts.
+fn connect(addr: &str, patience: Duration) -> TcpStream {
+    let t0 = Instant::now();
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return s,
+            Err(e) => {
+                if t0.elapsed() > patience {
+                    eprintln!("load_gen: cannot connect to {addr}: {e}");
+                    std::process::exit(1);
+                }
+                std::thread::sleep(Duration::from_millis(200));
+            }
+        }
+    }
+}
+
+struct ConnStats {
+    latencies_us: Vec<u64>,
+    ok: usize,
+    shed: usize,
+    other_errors: usize,
+}
+
+/// One closed-loop client: send a line, wait for its response line, repeat.
+fn run_client(addr: &str, requests: &[String]) -> ConnStats {
+    let stream = connect(addr, Duration::from_secs(60));
+    stream
+        .set_read_timeout(Some(Duration::from_secs(60)))
+        .expect("set read timeout");
+    let mut writer = stream.try_clone().expect("clone stream");
+    let mut reader = BufReader::new(stream);
+    let mut stats = ConnStats {
+        latencies_us: Vec::with_capacity(requests.len()),
+        ok: 0,
+        shed: 0,
+        other_errors: 0,
+    };
+    let mut line = String::new();
+    for req in requests {
+        let t0 = Instant::now();
+        writer.write_all(req.as_bytes()).expect("write request");
+        line.clear();
+        let n = reader.read_line(&mut line).expect("read response");
+        assert!(n > 0, "server closed the connection mid-run");
+        stats.latencies_us.push(t0.elapsed().as_micros() as u64);
+        if line.contains("\"ok\":true") {
+            stats.ok += 1;
+        } else if line.contains("\"error_kind\":\"overloaded\"") {
+            stats.shed += 1;
+        } else {
+            stats.other_errors += 1;
+        }
+    }
+    stats
+}
+
+fn merge_serve_key(serve: Value) {
+    const PATH: &str = "BENCH_estimator.json";
+    let mut fields = match std::fs::read_to_string(PATH)
+        .ok()
+        .and_then(|t| Value::parse(&t).ok())
+    {
+        Some(Value::Obj(fields)) => fields,
+        _ => vec![("format".to_string(), Value::str("annette-bench.v1"))],
+    };
+    if let Some(slot) = fields.iter_mut().find(|(k, _)| k == "serve") {
+        slot.1 = serve;
+    } else {
+        // Keep `provenance` last, where the estimator bench writes it.
+        let at = fields
+            .iter()
+            .position(|(k, _)| k == "provenance")
+            .unwrap_or(fields.len());
+        fields.insert(at, ("serve".to_string(), serve));
+    }
+    let doc = Value::Obj(fields);
+    std::fs::write(PATH, doc.to_string()).expect("write BENCH_estimator.json");
+    eprintln!("[load_gen] merged serve key into {PATH}");
+}
+
+fn main() {
+    let mut addr: Option<String> = None;
+    let mut smoke = false;
+    let mut no_write = false;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--addr" => addr = args.next(),
+            "--smoke" => smoke = true,
+            "--no-write" => no_write = true,
+            other => {
+                eprintln!(
+                    "usage: load_gen [--addr HOST:PORT] [--smoke] [--no-write] \
+                     (unknown arg {other})"
+                );
+                std::process::exit(2);
+            }
+        }
+    }
+    let (conns, per_conn) = if smoke { (2usize, 50usize) } else { (4, 200) };
+
+    // Small distinct networks so the server's graph cache warms quickly and
+    // the run measures serving, not compilation.
+    let nets = nasbench::sample_networks(8, 2024);
+    let requests: Vec<String> = nets
+        .iter()
+        .map(|g| {
+            format!(
+                "{{\"op\":\"estimate\",\"kind\":\"mixed\",\"total_only\":true,\"network\":{}}}\n",
+                graph_to_value(g)
+            )
+        })
+        .cycle()
+        .take(per_conn)
+        .collect();
+
+    // Self-contained mode: stand up an in-process server on an ephemeral
+    // port; it is drained (and its drain verified) at the end of the run.
+    let mut own_server = None;
+    let addr = match addr {
+        Some(a) => a,
+        None => {
+            eprintln!("[load_gen] no --addr: starting in-process server");
+            let dev = DpuDevice::zcu102();
+            let data = run_campaign(&dev, 2, default_threads());
+            let svc = Service::new(PlatformModel::fit(&dev.spec(), &data));
+            let server =
+                Server::bind(svc, ServerConfig::default()).expect("bind in-process server");
+            let handle = server.spawn();
+            let a = handle.addr().to_string();
+            own_server = Some(handle);
+            a
+        }
+    };
+
+    // Liveness first: the plain-text probe must answer before load starts.
+    {
+        let mut probe = connect(&addr, Duration::from_secs(120));
+        probe.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        probe.write_all(b"health\n").expect("write health probe");
+        let mut line = String::new();
+        BufReader::new(&mut probe)
+            .read_line(&mut line)
+            .expect("read health response");
+        assert_eq!(line.trim(), "ok", "health probe failed: {line:?}");
+        eprintln!("[load_gen] health: {}", line.trim());
+    }
+
+    eprintln!("[load_gen] {conns} connections x {per_conn} requests against {addr}");
+    let t0 = Instant::now();
+    let stats: Vec<ConnStats> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..conns)
+            .map(|_| s.spawn(|| run_client(&addr, &requests)))
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("client thread")).collect()
+    });
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut latencies: Vec<u64> = stats.iter().flat_map(|s| s.latencies_us.clone()).collect();
+    latencies.sort_unstable();
+    let total = latencies.len();
+    let ok: usize = stats.iter().map(|s| s.ok).sum();
+    let shed: usize = stats.iter().map(|s| s.shed).sum();
+    let other: usize = stats.iter().map(|s| s.other_errors).sum();
+    let qps = total as f64 / wall;
+    let p50_ms = percentile(&latencies, 0.50);
+    let p99_ms = percentile(&latencies, 0.99);
+    let shed_rate = if total == 0 {
+        0.0
+    } else {
+        shed as f64 / total as f64
+    };
+
+    println!(
+        "load_gen: {total} requests in {wall:.3}s | qps {qps:.1} | p50 {p50_ms:.3} ms | \
+         p99 {p99_ms:.3} ms | ok {ok} | shed {shed} | errors {other}"
+    );
+    assert_eq!(other, 0, "unexpected non-shed errors under well-formed load");
+    assert!(qps > 0.0, "throughput must be positive");
+
+    if let Some(handle) = own_server {
+        let report = handle.shutdown();
+        eprintln!(
+            "[load_gen] drained={} connections_left={}",
+            report.drained, report.connections_left
+        );
+        assert!(report.drained, "in-process server failed to drain");
+    }
+
+    if !no_write {
+        merge_serve_key(Value::Obj(vec![
+            ("qps".to_string(), Value::num(round3(qps))),
+            ("p50_ms".to_string(), Value::num(round3(p50_ms))),
+            ("p99_ms".to_string(), Value::num(round3(p99_ms))),
+            ("shed_rate".to_string(), Value::num(round3(shed_rate))),
+            ("connections".to_string(), Value::int(conns)),
+            ("requests".to_string(), Value::int(total)),
+        ]));
+    }
+}

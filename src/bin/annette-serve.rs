@@ -1,0 +1,130 @@
+//! `annette-serve` — the estimation service on a TCP socket.
+//!
+//! Fits a platform model (or the whole device fleet) at startup, then
+//! serves the line-delimited JSON protocol through the hardened
+//! [`annette::coordinator::Server`]: connection cap, read/write/idle
+//! deadlines, bounded request framing, load shedding, graceful drain.
+//!
+//! ```sh
+//! annette-serve [--device dpu-zcu102|vpu-ncs2|tpu-edge|all]
+//!               [--addr HOST:PORT] [--passes N] [--max-seconds N]
+//! ```
+//!
+//! Every serving limit also has an `ANNETTE_*` environment override — see
+//! `ServerConfig::from_env` / docs/ARCHITECTURE.md § Serving. `--addr`
+//! wins over `ANNETTE_ADDR`; port 0 picks an ephemeral port, printed as
+//! `listening on <addr>` once the socket is ready (the line CI and
+//! scripts key on).
+//!
+//! With `--max-seconds N` the server drains itself gracefully after N
+//! seconds — in-flight requests finish, telemetry flushes — which is the
+//! clean way to run it under CI or a batch scheduler. Without it the
+//! process serves until killed.
+
+use std::io::Write;
+
+use annette::coordinator::orchestrator::{default_threads, run_campaign};
+use annette::coordinator::{Server, ServerConfig, Service};
+use annette::hw::device::Device;
+use annette::hw::registry;
+use annette::models::platform::PlatformModel;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: annette-serve [--device <id>|all] [--addr HOST:PORT] \
+         [--passes N] [--max-seconds N]\n       registered devices: {}",
+        registry::ids().join(", ")
+    );
+    std::process::exit(2);
+}
+
+fn take(args: &mut impl Iterator<Item = String>, name: &str) -> String {
+    args.next().unwrap_or_else(|| {
+        eprintln!("annette-serve: {name} needs a value");
+        usage();
+    })
+}
+
+fn fit(id: &str, passes: usize) -> (String, PlatformModel) {
+    let dev = registry::build(id).unwrap_or_else(|e| {
+        eprintln!("annette-serve: {e}");
+        std::process::exit(2);
+    });
+    eprintln!("[serve] fitting {id} ({passes} campaign passes) ...");
+    let data = run_campaign(&*dev, passes, default_threads());
+    (id.to_string(), PlatformModel::fit(&dev.spec(), &data))
+}
+
+fn main() {
+    let mut device = "dpu-zcu102".to_string();
+    let mut addr: Option<String> = None;
+    let mut passes = 2usize;
+    let mut max_seconds = 0u64;
+
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--device" => device = take(&mut args, "--device"),
+            "--addr" => addr = Some(take(&mut args, "--addr")),
+            "--passes" => {
+                passes = take(&mut args, "--passes").parse().unwrap_or_else(|_| usage())
+            }
+            "--max-seconds" => {
+                max_seconds = take(&mut args, "--max-seconds").parse().unwrap_or_else(|_| usage())
+            }
+            "--help" | "-h" => usage(),
+            _ => usage(),
+        }
+    }
+
+    let targets: Vec<(String, PlatformModel)> = if device == "all" {
+        registry::ids().iter().map(|id| fit(id, passes)).collect()
+    } else {
+        vec![fit(&device, passes)]
+    };
+    let service = Service::multi(targets).expect("service construction");
+
+    let mut cfg = ServerConfig::from_env();
+    if let Some(a) = addr {
+        cfg.addr = a;
+    }
+    eprintln!(
+        "[serve] config: max_conns={} read_timeout={}ms write_timeout={}ms \
+         idle_timeout={}ms max_request_bytes={} queue_cap={} workers={} \
+         drain_timeout={}ms",
+        cfg.max_conns,
+        cfg.read_timeout.as_millis(),
+        cfg.write_timeout.as_millis(),
+        cfg.idle_timeout.as_millis(),
+        cfg.max_request_bytes,
+        cfg.queue_cap,
+        cfg.workers,
+        cfg.drain_timeout.as_millis(),
+    );
+
+    let server = Server::bind(service, cfg).unwrap_or_else(|e| {
+        eprintln!("annette-serve: bind failed: {e}");
+        std::process::exit(1);
+    });
+    println!("listening on {}", server.addr());
+    let _ = std::io::stdout().flush();
+
+    let handle = server.spawn();
+    if max_seconds == 0 {
+        // Serve until the process is killed. (Graceful drain needs
+        // --max-seconds; the crate is dependency-free, so there is no
+        // signal handler to turn SIGTERM into a drain.)
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
+    std::thread::sleep(std::time::Duration::from_secs(max_seconds));
+    eprintln!("[serve] --max-seconds {max_seconds} elapsed; draining");
+    let report = handle.shutdown();
+    eprintln!(
+        "[serve] drained={} connections_left={}",
+        report.drained, report.connections_left
+    );
+    println!("drained");
+    std::process::exit(if report.drained { 0 } else { 1 });
+}

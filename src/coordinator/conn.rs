@@ -1,0 +1,249 @@
+//! Per-connection loop of the TCP serving layer.
+//!
+//! One thread per accepted connection (the [`super::server::ServerConfig`]
+//! connection cap bounds the thread count). The loop reads chunks into a
+//! bounded [`LineFramer`], turns each complete line into a worker-pool job,
+//! and blocks on that job's completion ack before framing the next request
+//! — at most one in-flight request per connection, which is the built-in
+//! per-connection backpressure. Responses are written by the worker through
+//! a shared `Arc<Mutex<_>>` writer, so error lines emitted here and
+//! response lines emitted there never interleave mid-line.
+//!
+//! Everything that can go wrong has one in-band answer and one obs counter:
+//! oversized line → `too_large` (connection survives, framer resyncs);
+//! full queue → `overloaded` (connection survives); request that stops
+//! arriving mid-line → `timeout` + close (slow-loris); idle keep-alive
+//! expiry → silent close; server draining → one final `shutdown` line +
+//! close. A write failure of any of these closes the connection — a peer
+//! that won't read has already left.
+
+use std::io::Read;
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::server::{Shared, POLL};
+use crate::coordinator::Service;
+use crate::error::Error;
+use crate::net::framer::{FrameEvent, LineFramer};
+use crate::net::pool::Job;
+use crate::obs;
+
+/// Upper bound on waiting for a submitted job's completion ack. Orders of
+/// magnitude above any real request; purely a defense against a lost
+/// worker, not a tuning knob.
+const ACK_WAIT: Duration = Duration::from_secs(600);
+
+/// Plain-text liveness probe: the line `health` (no JSON) answers `ok` or
+/// `draining` without touching the queue, so load balancers can probe a
+/// saturated server.
+const HEALTH_LINE: &[u8] = b"health";
+
+enum Next {
+    Continue,
+    Close,
+}
+
+pub(crate) fn serve(mut stream: TcpStream, shared: &Shared) {
+    let cfg = &shared.cfg;
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_write_timeout(Some(cfg.write_timeout));
+    // Short read timeout as a poll interval: the loop owns the real
+    // deadlines (read/idle) and the shutdown check.
+    let _ = stream.set_read_timeout(Some(POLL));
+    let sink: Arc<Mutex<dyn Write + Send>> = match stream.try_clone() {
+        Ok(w) => Arc::new(Mutex::new(w)),
+        Err(_) => return,
+    };
+
+    let mut framer = LineFramer::new(cfg.max_request_bytes);
+    let mut events: Vec<FrameEvent> = Vec::new();
+    let mut chunk = [0u8; 4096];
+    let mut scratch = String::new();
+    let mut last_activity = Instant::now();
+    let mut request_started: Option<Instant> = None;
+
+    loop {
+        if shared.stopping() {
+            // One final in-band line so a client mid-send learns why the
+            // connection is going away, then close.
+            let _ = send_error(&sink, &mut scratch, &shutdown_error());
+            return;
+        }
+        match stream.read(&mut chunk) {
+            Ok(0) => return,
+            Ok(n) => {
+                last_activity = Instant::now();
+                framer.push(&chunk[..n], &mut events);
+                for ev in events.drain(..) {
+                    match handle_event(ev, shared, &sink, &mut scratch) {
+                        Next::Continue => {}
+                        Next::Close => return,
+                    }
+                }
+                if framer.has_partial() {
+                    if request_started.is_none() {
+                        request_started = Some(Instant::now());
+                    }
+                } else {
+                    request_started = None;
+                }
+                // The deadline also applies on the data path: a peer
+                // dripping one byte per poll never hits WouldBlock.
+                if exceeded(request_started, cfg.read_timeout) {
+                    read_timed_out(&sink, &mut scratch, cfg.read_timeout);
+                    return;
+                }
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                if exceeded(request_started, cfg.read_timeout) {
+                    read_timed_out(&sink, &mut scratch, cfg.read_timeout);
+                    return;
+                }
+                if request_started.is_none() && last_activity.elapsed() > cfg.idle_timeout {
+                    if obs::enabled() {
+                        obs::global().srv_idle_closed.incr();
+                    }
+                    return;
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => return,
+        }
+    }
+}
+
+fn handle_event(
+    ev: FrameEvent,
+    shared: &Shared,
+    sink: &Arc<Mutex<dyn Write + Send>>,
+    scratch: &mut String,
+) -> Next {
+    let line = match ev {
+        FrameEvent::TooLarge => {
+            if obs::enabled() {
+                obs::global().srv_too_large.incr();
+                obs::global().record_error(None, "too_large");
+            }
+            let e = Error::TooLarge(format!(
+                "request line exceeds {} bytes (ANNETTE_MAX_REQUEST_BYTES); \
+                 discarded to next newline",
+                shared.cfg.max_request_bytes
+            ));
+            return match send_error(sink, scratch, &e) {
+                Ok(()) => Next::Continue,
+                Err(_) => Next::Close,
+            };
+        }
+        FrameEvent::Line(bytes) => bytes,
+    };
+    if obs::enabled() {
+        obs::global().srv_lines.incr();
+    }
+    if line == HEALTH_LINE {
+        scratch.clear();
+        scratch.push_str(if shared.stopping() { "draining" } else { "ok" });
+        return match send_line(sink, scratch) {
+            Ok(()) => Next::Continue,
+            Err(_) => Next::Close,
+        };
+    }
+    let line = match String::from_utf8(line) {
+        Ok(s) => s,
+        Err(_) => {
+            if obs::enabled() {
+                obs::global().record_error(None, "invalid");
+            }
+            let e = Error::Invalid("request line is not valid UTF-8".to_string());
+            return match send_error(sink, scratch, &e) {
+                Ok(()) => Next::Continue,
+                Err(_) => Next::Close,
+            };
+        }
+    };
+
+    let (done, ack) = mpsc::channel();
+    let job = Job {
+        line,
+        out: Arc::clone(sink),
+        done,
+    };
+    match shared.pool.try_submit(job) {
+        Ok(()) => match ack.recv_timeout(ACK_WAIT) {
+            Ok(Ok(())) => Next::Continue,
+            Ok(Err(e)) => {
+                // The worker could not deliver the response: the peer reads
+                // too slowly (timeout kinds) or hung up. Either way the
+                // connection is done.
+                if obs::enabled()
+                    && (e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut)
+                {
+                    obs::global().srv_write_timeouts.incr();
+                }
+                Next::Close
+            }
+            Err(_) => Next::Close,
+        },
+        Err(_refused) => {
+            if shared.stopping() {
+                let _ = send_error(sink, scratch, &shutdown_error());
+                return Next::Close;
+            }
+            if obs::enabled() {
+                obs::global().srv_shed.incr();
+                obs::global().record_error(None, "overloaded");
+            }
+            let e = Error::Overloaded(format!(
+                "in-flight queue is full at {} requests (ANNETTE_QUEUE_CAP); request shed",
+                shared.cfg.queue_cap
+            ));
+            match send_error(sink, scratch, &e) {
+                Ok(()) => Next::Continue,
+                Err(_) => Next::Close,
+            }
+        }
+    }
+}
+
+fn shutdown_error() -> Error {
+    Error::Shutdown("server is draining; connection closing".to_string())
+}
+
+fn exceeded(started: Option<Instant>, deadline: Duration) -> bool {
+    started.is_some_and(|t0| t0.elapsed() > deadline)
+}
+
+fn read_timed_out(sink: &Arc<Mutex<dyn Write + Send>>, scratch: &mut String, deadline: Duration) {
+    if obs::enabled() {
+        obs::global().srv_read_timeouts.incr();
+        obs::global().record_error(None, "timeout");
+    }
+    let e = Error::Timeout(format!(
+        "request not completed within {} ms (ANNETTE_READ_TIMEOUT_MS)",
+        deadline.as_millis()
+    ));
+    let _ = send_error(sink, scratch, &e);
+}
+
+/// Frame `scratch` (response text, no newline yet) and write it under the
+/// shared writer lock.
+fn send_line(sink: &Arc<Mutex<dyn Write + Send>>, scratch: &mut String) -> std::io::Result<()> {
+    scratch.push('\n');
+    let mut w = sink.lock().expect("connection writer poisoned");
+    w.write_all(scratch.as_bytes()).and_then(|()| w.flush())
+}
+
+fn send_error(
+    sink: &Arc<Mutex<dyn Write + Send>>,
+    scratch: &mut String,
+    e: &Error,
+) -> std::io::Result<()> {
+    Service::write_error_line(e, scratch);
+    send_line(sink, scratch)
+}

@@ -6,12 +6,17 @@
 //! produces the [`BenchData`] document the model generator fits from.
 //! [`service`] is the deployment form of the estimation phase: a resident
 //! [`Service`] answering line-delimited JSON requests (`models`,
-//! `estimate`, `explore`) for one device or a whole fleet, with in-band
-//! errors and deterministic, input-ordered parallel batch serving. The full
-//! wire protocol is specified in `docs/ARCHITECTURE.md`.
+//! `estimate`, `explore`, `stats`, `health`) for one device or a whole
+//! fleet, with in-band errors and deterministic, input-ordered parallel
+//! batch serving. [`server`] puts that service on a `std::net` TCP socket
+//! with backpressure, deadlines, load shedding, and graceful drain. The
+//! full wire protocol is specified in `docs/ARCHITECTURE.md`.
 
+mod conn;
 pub mod orchestrator;
+pub mod server;
 pub mod service;
 
 pub use orchestrator::{default_threads, run_campaign, BenchData};
+pub use server::{DrainReport, Server, ServerConfig, ServerHandle};
 pub use service::Service;

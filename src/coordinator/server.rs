@@ -1,0 +1,461 @@
+//! Hardened TCP front-end for [`Service`]: the deployment form of the
+//! estimation phase.
+//!
+//! The server speaks the same line-delimited JSON protocol as
+//! [`Service::serve_lines`] — one request per line, one response line per
+//! request, errors in-band — but over `std::net` sockets, engineered for
+//! hostile or merely unlucky peers:
+//!
+//! * **Connection cap** ([`ServerConfig::max_conns`]): excess connections
+//!   get one in-band `overloaded` error line and are closed, instead of
+//!   piling up file descriptors.
+//! * **Deadlines**: a per-request read deadline defeats slow-loris senders,
+//!   a write timeout bounds slow readers, and an idle keep-alive timeout
+//!   reclaims abandoned connections.
+//! * **Bounded buffers**: request lines are framed by
+//!   [`crate::net::framer::LineFramer`], so a client streaming an endless
+//!   line costs a capped buffer and gets a `too_large` error with
+//!   truncation-safe resync — never unbounded memory.
+//! * **Load shedding**: requests flow through the bounded queue of a
+//!   [`crate::net::pool::Pool`]; when it is full the request is refused
+//!   in-band with `overloaded` rather than queued without limit.
+//! * **Graceful drain** ([`ServerHandle::shutdown`]): stop accepting,
+//!   complete in-flight requests within a deadline, flush telemetry, and
+//!   report what was left behind.
+//!
+//! For well-formed traffic the response bytes are exactly what
+//! [`Service::handle`] produces, regardless of worker count: framing and
+//! scheduling never leak into the payload. Every limit lives in
+//! [`ServerConfig`], every field has an `ANNETTE_*` environment override
+//! ([`ServerConfig::from_env`]), and every rejection path emits a stable
+//! `error_kind` plus a counter in the [`crate::obs`] registry's `server`
+//! block. The wire contract is specified in docs/ARCHITECTURE.md § Serving.
+
+use std::io::Write;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::conn;
+use crate::coordinator::orchestrator::default_threads;
+use crate::coordinator::service::DEFAULT_MAX_REQUEST_BYTES;
+use crate::coordinator::Service;
+use crate::error::{Error, Result};
+use crate::net::pool::Pool;
+use crate::obs;
+
+/// How often blocked loops (accept, connection read) wake up to check the
+/// shutdown flag and their deadlines.
+pub(crate) const POLL: Duration = Duration::from_millis(25);
+
+/// Every serving limit in one place. Defaults are production-sane;
+/// [`ServerConfig::from_env`] lets deployments override each field without
+/// a config file. All durations of zero are clamped up to something
+/// workable at bind time rather than meaning "no limit".
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Listen address. Port 0 binds an ephemeral port (the tests' mode);
+    /// the bound address is reported by [`Server::addr`]. `ANNETTE_ADDR`.
+    pub addr: String,
+    /// Hard cap on simultaneously open connections; excess get an in-band
+    /// `overloaded` line and are closed. `ANNETTE_MAX_CONNS`.
+    pub max_conns: usize,
+    /// Deadline for a started request line to finish arriving (slow-loris
+    /// defense; the connection is closed with an in-band `timeout`).
+    /// `ANNETTE_READ_TIMEOUT_MS`.
+    pub read_timeout: Duration,
+    /// Socket write timeout; a peer that won't read its responses is
+    /// disconnected. `ANNETTE_WRITE_TIMEOUT_MS`.
+    pub write_timeout: Duration,
+    /// Keep-alive: a connection with no request in progress is silently
+    /// closed after this long. `ANNETTE_IDLE_TIMEOUT_MS`.
+    pub idle_timeout: Duration,
+    /// Maximum request-line length, shared with
+    /// [`Service::set_max_request_bytes`] so the socket framer and the
+    /// in-process dispatch gate enforce the same number.
+    /// `ANNETTE_MAX_REQUEST_BYTES`.
+    pub max_request_bytes: usize,
+    /// Bound on requests queued ahead of the workers; beyond it requests
+    /// are shed in-band with `overloaded`. `ANNETTE_QUEUE_CAP`.
+    pub queue_cap: usize,
+    /// Worker threads executing requests. `ANNETTE_WORKERS`.
+    pub workers: usize,
+    /// How long [`ServerHandle::shutdown`] waits for open connections to
+    /// finish before giving up on them. `ANNETTE_DRAIN_TIMEOUT_MS`.
+    pub drain_timeout: Duration,
+    /// Fault injection: stall every request this long inside the worker.
+    /// Zero (the default) disables it; the chaos tests use it to hold the
+    /// queue full deterministically. `ANNETTE_FAULT_HANDLER_DELAY_MS`.
+    pub handler_delay: Duration,
+    /// When set, shutdown writes the final `annette-obs.v1` snapshot JSON
+    /// to this path. `ANNETTE_OBS_SNAPSHOT`.
+    pub obs_snapshot_path: Option<String>,
+}
+
+impl Default for ServerConfig {
+    fn default() -> ServerConfig {
+        ServerConfig {
+            addr: "127.0.0.1:0".to_string(),
+            max_conns: 256,
+            read_timeout: Duration::from_millis(5_000),
+            write_timeout: Duration::from_millis(5_000),
+            idle_timeout: Duration::from_millis(30_000),
+            max_request_bytes: DEFAULT_MAX_REQUEST_BYTES,
+            queue_cap: 1024,
+            workers: default_threads(),
+            drain_timeout: Duration::from_millis(5_000),
+            handler_delay: Duration::ZERO,
+            obs_snapshot_path: None,
+        }
+    }
+}
+
+fn env_usize(name: &str, default: usize) -> usize {
+    match std::env::var(name) {
+        Ok(v) => v.trim().parse().unwrap_or(default),
+        Err(_) => default,
+    }
+}
+
+fn env_ms(name: &str, default: Duration) -> Duration {
+    match std::env::var(name) {
+        Ok(v) => v
+            .trim()
+            .parse()
+            .map(Duration::from_millis)
+            .unwrap_or(default),
+        Err(_) => default,
+    }
+}
+
+impl ServerConfig {
+    /// The defaults with every `ANNETTE_*` override applied. Unset or
+    /// unparseable variables silently keep the default — a misspelled
+    /// limit must not take the server down.
+    pub fn from_env() -> ServerConfig {
+        let d = ServerConfig::default();
+        ServerConfig {
+            addr: std::env::var("ANNETTE_ADDR").unwrap_or(d.addr),
+            max_conns: env_usize("ANNETTE_MAX_CONNS", d.max_conns),
+            read_timeout: env_ms("ANNETTE_READ_TIMEOUT_MS", d.read_timeout),
+            write_timeout: env_ms("ANNETTE_WRITE_TIMEOUT_MS", d.write_timeout),
+            idle_timeout: env_ms("ANNETTE_IDLE_TIMEOUT_MS", d.idle_timeout),
+            max_request_bytes: env_usize("ANNETTE_MAX_REQUEST_BYTES", d.max_request_bytes),
+            queue_cap: env_usize("ANNETTE_QUEUE_CAP", d.queue_cap),
+            workers: env_usize("ANNETTE_WORKERS", d.workers),
+            drain_timeout: env_ms("ANNETTE_DRAIN_TIMEOUT_MS", d.drain_timeout),
+            handler_delay: env_ms("ANNETTE_FAULT_HANDLER_DELAY_MS", d.handler_delay),
+            obs_snapshot_path: std::env::var("ANNETTE_OBS_SNAPSHOT").ok(),
+        }
+    }
+}
+
+/// Open connections, counted under a mutex so drain can wait on the count
+/// reaching zero with a plain condvar. Mirrored into the obs `srv_active`
+/// gauge on every change.
+pub(crate) struct ConnCount {
+    count: Mutex<usize>,
+    zero: Condvar,
+}
+
+impl ConnCount {
+    fn new() -> ConnCount {
+        ConnCount {
+            count: Mutex::new(0),
+            zero: Condvar::new(),
+        }
+    }
+
+    /// Claim a connection slot; `false` means the cap is already reached
+    /// (the caller rejects the connection).
+    fn try_enter(&self, max: usize) -> bool {
+        let mut c = self.count.lock().expect("conn count poisoned");
+        if *c >= max {
+            return false;
+        }
+        *c += 1;
+        if obs::enabled() {
+            obs::global().srv_active.set(*c as u64);
+        }
+        true
+    }
+
+    pub(crate) fn leave(&self) {
+        let mut c = self.count.lock().expect("conn count poisoned");
+        *c = c.saturating_sub(1);
+        if obs::enabled() {
+            obs::global().srv_active.set(*c as u64);
+        }
+        if *c == 0 {
+            self.zero.notify_all();
+        }
+    }
+
+    /// Wait up to `timeout` for every connection to close; returns how
+    /// many were still open when the wait ended.
+    fn wait_zero(&self, timeout: Duration) -> usize {
+        let deadline = Instant::now() + timeout;
+        let mut c = self.count.lock().expect("conn count poisoned");
+        while *c > 0 {
+            let now = Instant::now();
+            if now >= deadline {
+                return *c;
+            }
+            let (guard, _) = self
+                .zero
+                .wait_timeout(c, deadline - now)
+                .expect("conn count poisoned");
+            c = guard;
+        }
+        0
+    }
+}
+
+/// State shared by the accept loop, every connection thread, and the
+/// shutdown path.
+pub(crate) struct Shared {
+    pub(crate) cfg: ServerConfig,
+    pub(crate) pool: Pool,
+    pub(crate) stopping: AtomicBool,
+    pub(crate) conns: ConnCount,
+}
+
+impl Shared {
+    pub(crate) fn stopping(&self) -> bool {
+        self.stopping.load(Ordering::Acquire)
+    }
+}
+
+/// What a graceful drain left behind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DrainReport {
+    /// Every connection closed within the drain deadline.
+    pub drained: bool,
+    /// Connections still open when the deadline expired (0 when drained).
+    pub connections_left: usize,
+}
+
+/// A bound listener that has not started accepting yet. Produced by
+/// [`Server::bind`]; consumed by [`Server::spawn`].
+pub struct Server {
+    shared: Arc<Shared>,
+    listener: TcpListener,
+    addr: SocketAddr,
+}
+
+impl Server {
+    /// Bind `cfg.addr` and stand up the worker pool around `service`.
+    /// The service's request-size cap is overwritten with
+    /// `cfg.max_request_bytes` so the wire framer and the dispatch gate
+    /// agree on one number.
+    pub fn bind(mut service: Service, cfg: ServerConfig) -> Result<Server> {
+        let mut cfg = cfg;
+        cfg.max_conns = cfg.max_conns.max(1);
+        cfg.queue_cap = cfg.queue_cap.max(1);
+        cfg.workers = cfg.workers.max(1);
+        cfg.max_request_bytes = cfg.max_request_bytes.max(1);
+        // A zero deadline would close every connection instantly; clamp to
+        // the poll interval instead of treating zero as infinity.
+        cfg.read_timeout = cfg.read_timeout.max(POLL);
+        cfg.write_timeout = cfg.write_timeout.max(POLL);
+        cfg.idle_timeout = cfg.idle_timeout.max(POLL);
+        service.set_max_request_bytes(cfg.max_request_bytes);
+
+        let listener = TcpListener::bind(&cfg.addr)?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+
+        let service = Arc::new(service);
+        let pool = Pool::new(
+            cfg.workers,
+            cfg.queue_cap,
+            cfg.handler_delay,
+            move |line, out| service.handle_into(line, out),
+        );
+        Ok(Server {
+            shared: Arc::new(Shared {
+                cfg,
+                pool,
+                stopping: AtomicBool::new(false),
+                conns: ConnCount::new(),
+            }),
+            listener,
+            addr,
+        })
+    }
+
+    /// The actual bound address (resolves port 0 to the ephemeral port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Start the accept loop on its own thread and return the handle that
+    /// controls the running server.
+    pub fn spawn(self) -> ServerHandle {
+        let shared = Arc::clone(&self.shared);
+        let listener = self.listener;
+        let accept = std::thread::Builder::new()
+            .name("annette-accept".to_string())
+            .spawn(move || accept_loop(&listener, &shared))
+            .expect("spawn accept loop");
+        ServerHandle {
+            shared: self.shared,
+            addr: self.addr,
+            accept: Some(accept),
+        }
+    }
+}
+
+/// Control handle for a running server: its address and the graceful
+/// shutdown. Dropping the handle without calling [`ServerHandle::shutdown`]
+/// performs the same drain (so tests can't leak the accept thread), minus
+/// the report.
+pub struct ServerHandle {
+    shared: Arc<Shared>,
+    addr: SocketAddr,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// The address clients should connect to.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Graceful drain: stop accepting, let open connections and queued
+    /// requests finish within [`ServerConfig::drain_timeout`], run every
+    /// queued job to completion, flush span tracing, optionally persist
+    /// the final obs snapshot, and report what was left.
+    pub fn shutdown(mut self) -> DrainReport {
+        self.shutdown_inner()
+    }
+
+    fn shutdown_inner(&mut self) -> DrainReport {
+        self.shared.stopping.store(true, Ordering::Release);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        } else {
+            return DrainReport {
+                drained: true,
+                connections_left: 0,
+            };
+        }
+        let left = self.shared.conns.wait_zero(self.shared.cfg.drain_timeout);
+        // Workers drain the queue before exiting, so anything a connection
+        // managed to submit still completes.
+        self.shared.pool.shutdown();
+        obs::trace::flush_if_active();
+        if obs::enabled() {
+            obs::global().srv_drains.incr();
+        }
+        if let Some(path) = &self.shared.cfg.obs_snapshot_path {
+            let json = obs::global().snapshot().to_value().to_string();
+            let _ = std::fs::write(path, json);
+        }
+        DrainReport {
+            drained: left == 0,
+            connections_left: left,
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        if self.accept.is_some() {
+            let _ = self.shutdown_inner();
+        }
+    }
+}
+
+fn accept_loop(listener: &TcpListener, shared: &Arc<Shared>) {
+    loop {
+        if shared.stopping() {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                if obs::enabled() {
+                    obs::global().srv_accepted.incr();
+                }
+                if !shared.conns.try_enter(shared.cfg.max_conns) {
+                    if obs::enabled() {
+                        obs::global().srv_rejected_cap.incr();
+                        obs::global().record_error(None, "overloaded");
+                    }
+                    reject_at_cap(stream, &shared.cfg);
+                    continue;
+                }
+                let sh = Arc::clone(shared);
+                let spawned = std::thread::Builder::new()
+                    .name("annette-conn".to_string())
+                    .spawn(move || {
+                        conn::serve(stream, &sh);
+                        sh.conns.leave();
+                    });
+                if spawned.is_err() {
+                    shared.conns.leave();
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => std::thread::sleep(POLL),
+            Err(_) => {
+                // Transient accept errors (ECONNABORTED and friends): back
+                // off and keep serving.
+                std::thread::sleep(POLL);
+            }
+        }
+    }
+}
+
+/// One in-band `overloaded` line, then close: the refused client learns
+/// why instead of seeing a bare RST.
+fn reject_at_cap(mut stream: TcpStream, cfg: &ServerConfig) {
+    let _ = stream.set_write_timeout(Some(cfg.write_timeout));
+    let e = Error::Overloaded(format!(
+        "connection cap {} reached (ANNETTE_MAX_CONNS)",
+        cfg.max_conns
+    ));
+    let mut line = String::new();
+    Service::write_error_line(&e, &mut line);
+    line.push('\n');
+    let _ = stream.write_all(line.as_bytes());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn env_overrides_apply_and_garbage_falls_back() {
+        // Process-wide env: use names no other test reads, set and cleared
+        // within this test.
+        std::env::set_var("ANNETTE_MAX_CONNS", "7");
+        std::env::set_var("ANNETTE_READ_TIMEOUT_MS", "250");
+        std::env::set_var("ANNETTE_QUEUE_CAP", "not-a-number");
+        let cfg = ServerConfig::from_env();
+        std::env::remove_var("ANNETTE_MAX_CONNS");
+        std::env::remove_var("ANNETTE_READ_TIMEOUT_MS");
+        std::env::remove_var("ANNETTE_QUEUE_CAP");
+        assert_eq!(cfg.max_conns, 7);
+        assert_eq!(cfg.read_timeout, Duration::from_millis(250));
+        assert_eq!(cfg.queue_cap, ServerConfig::default().queue_cap);
+    }
+
+    #[test]
+    fn conn_count_caps_and_drains() {
+        let c = ConnCount::new();
+        assert!(c.try_enter(2));
+        assert!(c.try_enter(2));
+        assert!(!c.try_enter(2), "third connection must be refused at cap 2");
+        assert_eq!(c.wait_zero(Duration::from_millis(10)), 2);
+        c.leave();
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                std::thread::sleep(Duration::from_millis(30));
+                c.leave();
+            });
+            assert_eq!(c.wait_zero(Duration::from_secs(5)), 0);
+        });
+    }
+}

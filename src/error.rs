@@ -17,6 +17,16 @@ pub enum Error {
     Invalid(String),
     /// A required artifact or resource is absent.
     Missing(String),
+    /// The serving layer is at capacity (connection cap reached or the
+    /// in-flight request queue is full) and shed this request.
+    Overloaded(String),
+    /// A read or write deadline expired (slow or stalled peer).
+    Timeout(String),
+    /// A request exceeded a configured size limit.
+    TooLarge(String),
+    /// The server is draining: late requests are refused, in-flight ones
+    /// complete.
+    Shutdown(String),
 }
 
 impl Error {
@@ -30,6 +40,10 @@ impl Error {
             Error::Json(_) => "json",
             Error::Invalid(_) => "invalid",
             Error::Missing(_) => "missing",
+            Error::Overloaded(_) => "overloaded",
+            Error::Timeout(_) => "timeout",
+            Error::TooLarge(_) => "too_large",
+            Error::Shutdown(_) => "shutdown",
         }
     }
 }
@@ -41,6 +55,10 @@ impl fmt::Display for Error {
             Error::Json(m) => write!(f, "json error: {m}"),
             Error::Invalid(m) => write!(f, "invalid: {m}"),
             Error::Missing(m) => write!(f, "missing: {m}"),
+            Error::Overloaded(m) => write!(f, "overloaded: {m}"),
+            Error::Timeout(m) => write!(f, "timeout: {m}"),
+            Error::TooLarge(m) => write!(f, "too large: {m}"),
+            Error::Shutdown(m) => write!(f, "shutting down: {m}"),
         }
     }
 }

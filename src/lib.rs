@@ -29,7 +29,11 @@
 //!    compile once into struct-of-arrays feature form cached by structural
 //!    fingerprint, and repeated estimates are allocation-free. The
 //!    [`coordinator::Service`] batch layer fans request lines across worker
-//!    threads with deterministic, input-ordered output.
+//!    threads with deterministic, input-ordered output, and the hardened
+//!    [`coordinator::Server`] puts the same protocol on a `std::net` TCP
+//!    socket — connection cap, read/write/idle deadlines, bounded framing
+//!    ([`net`]), load shedding, graceful drain — for deployment
+//!    (`annette-serve`).
 //!
 //! On top of the two phases sits the workload they exist for:
 //! **design-space exploration** ([`explore`]). An [`explore::Explorer`]
@@ -65,6 +69,7 @@ pub mod json;
 pub mod mapping;
 pub mod metrics;
 pub mod models;
+pub mod net;
 pub mod obs;
 pub mod par;
 pub mod repro;
@@ -76,7 +81,7 @@ pub use error::{Error, Result};
 /// Commonly used types, glob-importable: `use annette::prelude::*;`.
 pub mod prelude {
     pub use crate::coordinator::orchestrator::{default_threads, run_campaign, BenchData};
-    pub use crate::coordinator::Service;
+    pub use crate::coordinator::{DrainReport, Server, ServerConfig, ServerHandle, Service};
     pub use crate::error::{Error, Result};
     pub use crate::estim::batch::BatchEstimator;
     pub use crate::estim::compiled::{CompiledGraph, CompiledModel, GraphCache};

@@ -1,0 +1,176 @@
+//! Bounded newline framing with truncation-safe resync.
+//!
+//! The serving layer's wire format is one request per `\n`-terminated line.
+//! A [`LineFramer`] is fed raw byte chunks as they arrive from the socket
+//! and emits [`FrameEvent`]s; it never buffers more than the configured
+//! maximum line length, so a malicious client streaming an endless line
+//! costs a fixed-size buffer. When a line crosses the cap the framer emits
+//! exactly one [`FrameEvent::TooLarge`], drops what it buffered, and
+//! silently discards bytes until the next newline — the connection resyncs
+//! on the following request instead of dying or misparsing a tail fragment
+//! as a fresh request.
+
+/// One framing outcome, in input order.
+#[derive(Debug, PartialEq, Eq)]
+pub enum FrameEvent {
+    /// A complete request line (without its terminating `\n`; a trailing
+    /// `\r` is stripped for telnet-style clients). Never longer than the
+    /// configured cap. Empty lines are skipped, not emitted.
+    Line(Vec<u8>),
+    /// A line crossed the length cap. Emitted once per oversized line, at
+    /// the moment the cap is crossed; the rest of that line is discarded
+    /// up to and including its newline.
+    TooLarge,
+}
+
+/// Incremental bounded line splitter. Memory use is capped at
+/// `max_line_bytes` regardless of what the peer sends.
+pub struct LineFramer {
+    buf: Vec<u8>,
+    max: usize,
+    /// Inside an oversized line: drop bytes until the next `\n`.
+    discarding: bool,
+}
+
+impl LineFramer {
+    /// A framer accepting lines of at most `max_line_bytes` (minimum 1).
+    pub fn new(max_line_bytes: usize) -> LineFramer {
+        LineFramer {
+            buf: Vec::new(),
+            max: max_line_bytes.max(1),
+            discarding: false,
+        }
+    }
+
+    /// Whether a request is mid-flight: bytes of an unterminated line are
+    /// buffered (or being discarded). The connection loop uses this to
+    /// arm the per-request read deadline — the slow-loris defense.
+    pub fn has_partial(&self) -> bool {
+        !self.buf.is_empty() || self.discarding
+    }
+
+    /// Feed one chunk, appending events to `out` in input order.
+    pub fn push(&mut self, chunk: &[u8], out: &mut Vec<FrameEvent>) {
+        let mut rest = chunk;
+        while !rest.is_empty() {
+            let nl = rest.iter().position(|&b| b == b'\n');
+            if self.discarding {
+                match nl {
+                    Some(p) => {
+                        self.discarding = false;
+                        rest = &rest[p + 1..];
+                    }
+                    None => return,
+                }
+                continue;
+            }
+            match nl {
+                Some(p) => {
+                    if self.buf.len() + p > self.max {
+                        out.push(FrameEvent::TooLarge);
+                    } else {
+                        let mut line = std::mem::take(&mut self.buf);
+                        line.extend_from_slice(&rest[..p]);
+                        if line.last() == Some(&b'\r') {
+                            line.pop();
+                        }
+                        if !line.is_empty() {
+                            out.push(FrameEvent::Line(line));
+                        }
+                    }
+                    self.buf.clear();
+                    rest = &rest[p + 1..];
+                }
+                None => {
+                    if self.buf.len() + rest.len() > self.max {
+                        out.push(FrameEvent::TooLarge);
+                        self.buf.clear();
+                        self.discarding = true;
+                    } else {
+                        self.buf.extend_from_slice(rest);
+                    }
+                    return;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn push_all(f: &mut LineFramer, bytes: &[u8]) -> Vec<FrameEvent> {
+        let mut out = Vec::new();
+        f.push(bytes, &mut out);
+        out
+    }
+
+    fn line(s: &str) -> FrameEvent {
+        FrameEvent::Line(s.as_bytes().to_vec())
+    }
+
+    #[test]
+    fn splits_lines_and_strips_cr() {
+        let mut f = LineFramer::new(64);
+        let ev = push_all(&mut f, b"alpha\nbeta\r\n\ngamma");
+        assert_eq!(ev, vec![line("alpha"), line("beta")]);
+        assert!(f.has_partial());
+        assert_eq!(push_all(&mut f, b"!\n"), vec![line("gamma!")]);
+        assert!(!f.has_partial());
+    }
+
+    #[test]
+    fn byte_at_a_time_feeding_reassembles_exactly() {
+        let mut f = LineFramer::new(16);
+        let mut out = Vec::new();
+        for &b in b"health\nnext\n" {
+            f.push(&[b], &mut out);
+        }
+        assert_eq!(out, vec![line("health"), line("next")]);
+    }
+
+    #[test]
+    fn cap_is_inclusive_at_the_boundary() {
+        let mut f = LineFramer::new(5);
+        assert_eq!(push_all(&mut f, b"12345\n"), vec![line("12345")]);
+        assert_eq!(push_all(&mut f, b"123456\n"), vec![FrameEvent::TooLarge]);
+    }
+
+    #[test]
+    fn oversized_line_emits_once_and_resyncs_at_the_next_newline() {
+        let mut f = LineFramer::new(4);
+        // Crossing the cap mid-line: one TooLarge, then silence while the
+        // rest of the line streams in, then clean resync.
+        assert_eq!(push_all(&mut f, b"abcdef"), vec![FrameEvent::TooLarge]);
+        assert!(f.has_partial(), "discard state counts as mid-request");
+        assert_eq!(push_all(&mut f, b"ghijklmnop"), vec![]);
+        assert_eq!(push_all(&mut f, b"qr\nok\n"), vec![line("ok")]);
+        assert!(!f.has_partial());
+    }
+
+    #[test]
+    fn buffered_bytes_never_exceed_the_cap() {
+        let cap = 8;
+        let mut f = LineFramer::new(cap);
+        let mut out = Vec::new();
+        // A megabyte with no newline: memory stays bounded by the cap.
+        for _ in 0..1024 {
+            f.push(&[b'x'; 1024], &mut out);
+            assert!(f.buf.len() <= cap);
+        }
+        assert_eq!(out, vec![FrameEvent::TooLarge]);
+        out.clear();
+        f.push(b"\ntail\n", &mut out);
+        assert_eq!(out, vec![line("tail")]);
+    }
+
+    #[test]
+    fn oversized_line_entirely_within_one_chunk() {
+        // Cap crossing and resync both inside a single chunk: the short
+        // request after the newline still parses.
+        let mut f = LineFramer::new(8);
+        let ev = push_all(&mut f, b"waytoolongline\nshort\n");
+        assert_eq!(ev, vec![FrameEvent::TooLarge, line("short")]);
+    }
+}

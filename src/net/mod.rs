@@ -1,0 +1,20 @@
+//! Zero-dependency networking helpers backing the TCP serving layer
+//! ([`crate::coordinator::Server`]).
+//!
+//! Two pieces, both engineered for hostile peers and both unit-testable
+//! without a socket:
+//!
+//! * [`framer::LineFramer`] — bounded newline framing: accumulates bytes
+//!   into at most one request line of a configured maximum length. An
+//!   oversized line yields a single [`framer::FrameEvent::TooLarge`] event
+//!   and the framer discards bytes until the next newline (truncation-safe
+//!   resync), so a client streaming megabytes without a newline costs a
+//!   bounded buffer, never unbounded memory.
+//! * [`pool::Pool`] — a resident worker pool behind a **bounded** in-flight
+//!   queue. [`pool::Pool::try_submit`] never blocks: when the queue is at
+//!   capacity the job is handed back and the caller sheds it in-band
+//!   (`error_kind:"overloaded"`). Shutdown drains every queued job before
+//!   the workers exit, which is what makes graceful drain possible above.
+
+pub mod framer;
+pub mod pool;

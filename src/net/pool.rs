@@ -1,0 +1,254 @@
+//! A resident worker pool behind a bounded in-flight queue.
+//!
+//! The TCP serving layer submits one job per request line; workers run the
+//! shared handler (the service's zero-alloc [`handle_into`] path) into a
+//! per-worker reusable buffer, append the `\n` frame, and write the
+//! response to the job's output sink themselves — the submitting
+//! connection thread just waits for the completion ack, which is what
+//! bounds every connection to one in-flight request (per-connection
+//! backpressure).
+//!
+//! [`Pool::try_submit`] never blocks and never queues past the configured
+//! capacity: at capacity the job is handed back and the caller sheds it
+//! in-band. [`Pool::shutdown`] drains every already-queued job before the
+//! workers exit, so a graceful server drain completes in-flight work
+//! instead of dropping it.
+//!
+//! [`handle_into`]: crate::coordinator::Service::handle_into
+
+use std::collections::VecDeque;
+use std::io::Write;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Fills `out` (clearing it first) with the single-line response to the
+/// request line. Must never panic on any input — the service contract.
+pub type Handler = dyn Fn(&str, &mut String) + Send + Sync;
+
+/// One queued request: the raw line, where to write the framed response,
+/// and the channel the connection thread blocks on for completion.
+pub struct Job {
+    pub line: String,
+    pub out: Arc<Mutex<dyn Write + Send>>,
+    pub done: Sender<std::io::Result<()>>,
+}
+
+struct Inner {
+    queue: Mutex<VecDeque<Job>>,
+    ready: Condvar,
+    cap: usize,
+    stop: AtomicBool,
+    /// Fault injection for the chaos tests: stall each job this long
+    /// before handling it, so queue pressure and drain windows become
+    /// controllable. Zero in production.
+    delay: Duration,
+    handler: Box<Handler>,
+}
+
+/// Fixed worker threads over a bounded queue. Dropping the pool (or
+/// calling [`Pool::shutdown`]) drains the queue and joins the workers.
+pub struct Pool {
+    inner: Arc<Inner>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl Pool {
+    /// Spawn `workers` threads (minimum 1) sharing `handler`, queueing at
+    /// most `queue_cap` jobs (minimum 1) ahead of them.
+    pub fn new<F>(workers: usize, queue_cap: usize, delay: Duration, handler: F) -> Pool
+    where
+        F: Fn(&str, &mut String) + Send + Sync + 'static,
+    {
+        let inner = Arc::new(Inner {
+            queue: Mutex::new(VecDeque::new()),
+            ready: Condvar::new(),
+            cap: queue_cap.max(1),
+            stop: AtomicBool::new(false),
+            delay,
+            handler: Box::new(handler),
+        });
+        let handles = (0..workers.max(1))
+            .map(|i| {
+                let inner = Arc::clone(&inner);
+                std::thread::Builder::new()
+                    .name(format!("annette-worker-{i}"))
+                    .spawn(move || worker_loop(&inner))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        Pool {
+            inner,
+            workers: Mutex::new(handles),
+        }
+    }
+
+    /// Queue a job without blocking. Returns the job back when the queue
+    /// is at capacity (the caller sheds it) or the pool is stopping (the
+    /// caller refuses it as `shutdown`).
+    pub fn try_submit(&self, job: Job) -> Result<(), Job> {
+        let mut q = self.inner.queue.lock().expect("pool queue poisoned");
+        if self.inner.stop.load(Ordering::Acquire) || q.len() >= self.inner.cap {
+            return Err(job);
+        }
+        q.push_back(job);
+        self.inner.ready.notify_one();
+        Ok(())
+    }
+
+    /// Jobs currently queued (not yet picked up by a worker).
+    pub fn queued(&self) -> usize {
+        self.inner.queue.lock().expect("pool queue poisoned").len()
+    }
+
+    /// Stop accepting, finish every queued job, and join the workers.
+    /// Idempotent.
+    pub fn shutdown(&self) {
+        self.inner.stop.store(true, Ordering::Release);
+        self.inner.ready.notify_all();
+        let handles: Vec<_> = self
+            .workers
+            .lock()
+            .expect("pool worker list poisoned")
+            .drain(..)
+            .collect();
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn worker_loop(inner: &Inner) {
+    // One response buffer per worker, reused across jobs: the steady-state
+    // socket path allocates only the request line itself.
+    let mut buf = String::with_capacity(256);
+    loop {
+        let job = {
+            let mut q = inner.queue.lock().expect("pool queue poisoned");
+            loop {
+                if let Some(j) = q.pop_front() {
+                    break j;
+                }
+                // Drain-then-exit: stop only matters once the queue is dry.
+                if inner.stop.load(Ordering::Acquire) {
+                    return;
+                }
+                q = inner.ready.wait(q).expect("pool queue poisoned");
+            }
+        };
+        if !inner.delay.is_zero() {
+            std::thread::sleep(inner.delay);
+        }
+        (inner.handler)(&job.line, &mut buf);
+        buf.push('\n');
+        let res = {
+            let mut out = job.out.lock().expect("connection writer poisoned");
+            out.write_all(buf.as_bytes()).and_then(|()| out.flush())
+        };
+        // The connection may already have hung up; it simply misses the ack.
+        let _ = job.done.send(res);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    /// A Vec-backed sink the tests can inspect after the fact.
+    #[derive(Clone, Default)]
+    struct Sink(Arc<Mutex<Vec<u8>>>);
+
+    impl Write for Sink {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            self.0.lock().unwrap().extend_from_slice(buf);
+            Ok(buf.len())
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    fn echo_pool(workers: usize, cap: usize, delay_ms: u64) -> Pool {
+        Pool::new(workers, cap, Duration::from_millis(delay_ms), |line, out| {
+            out.clear();
+            out.push_str("echo:");
+            out.push_str(line);
+        })
+    }
+
+    fn job(line: &str, sink: &Sink, done: &Sender<std::io::Result<()>>) -> Job {
+        let data = Arc::clone(&sink.0);
+        Job {
+            line: line.to_string(),
+            out: Arc::new(Mutex::new(Sink(data))),
+            done: done.clone(),
+        }
+    }
+
+    #[test]
+    fn jobs_run_and_ack_with_framed_output() {
+        let pool = echo_pool(2, 8, 0);
+        let sink = Sink::default();
+        let (tx, rx) = mpsc::channel();
+        for i in 0..4 {
+            pool.try_submit(job(&format!("r{i}"), &sink, &tx)).map_err(|_| ()).unwrap();
+        }
+        for _ in 0..4 {
+            rx.recv().unwrap().unwrap();
+        }
+        let text = String::from_utf8(sink.0.lock().unwrap().clone()).unwrap();
+        let mut lines: Vec<&str> = text.lines().collect();
+        lines.sort_unstable();
+        assert_eq!(lines, vec!["echo:r0", "echo:r1", "echo:r2", "echo:r3"]);
+    }
+
+    #[test]
+    fn full_queue_hands_the_job_back() {
+        // One worker stalled 200ms per job, queue of 1: the first job is
+        // picked up, the second queues, the third must be handed back.
+        let pool = echo_pool(1, 1, 200);
+        let sink = Sink::default();
+        let (tx, rx) = mpsc::channel();
+        pool.try_submit(job("a", &sink, &tx)).map_err(|_| ()).unwrap();
+        // Wait until the worker has pulled `a` off the queue so `b` can
+        // occupy the single slot deterministically.
+        let t0 = std::time::Instant::now();
+        while pool.queued() > 0 {
+            assert!(t0.elapsed() < Duration::from_secs(5), "worker never started");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        pool.try_submit(job("b", &sink, &tx)).map_err(|_| ()).unwrap();
+        let shed = pool.try_submit(job("c", &sink, &tx));
+        assert!(shed.is_err(), "third job must be shed, not queued");
+        assert_eq!(shed.err().unwrap().line, "c");
+        for _ in 0..2 {
+            rx.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
+        }
+    }
+
+    #[test]
+    fn shutdown_drains_queued_jobs_then_refuses_new_ones() {
+        let pool = echo_pool(1, 16, 50);
+        let sink = Sink::default();
+        let (tx, rx) = mpsc::channel();
+        for i in 0..5 {
+            pool.try_submit(job(&format!("j{i}"), &sink, &tx)).map_err(|_| ()).unwrap();
+        }
+        pool.shutdown();
+        // Every queued job completed before the workers exited...
+        for _ in 0..5 {
+            rx.try_recv().expect("job dropped by shutdown").unwrap();
+        }
+        // ...and the stopped pool refuses new work.
+        assert!(pool.try_submit(job("late", &sink, &tx)).is_err());
+    }
+}

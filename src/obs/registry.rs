@@ -12,15 +12,31 @@ use crate::json::Value;
 use crate::obs::counter::{Counter, Gauge};
 use crate::obs::hist::{HistSnapshot, Histogram};
 
-/// Service ops tracked per-request. Order is the wire order in snapshots.
-pub const OP_NAMES: [&str; 4] = ["models", "estimate", "explore", "stats"];
+/// Service ops tracked per-request. Order is the wire order in snapshots;
+/// later additions append so existing field positions never move.
+pub const OP_NAMES: [&str; 5] = ["models", "estimate", "explore", "stats", "health"];
 
 /// Error-attribution rows: one per op plus `other` for requests whose op
 /// could not be determined (unparseable line, unknown op).
 pub const OP_OTHER: usize = OP_NAMES.len();
 
-/// Error kinds, mirroring [`crate::error::Error::kind`].
-pub const KIND_NAMES: [&str; 4] = ["io", "json", "invalid", "missing"];
+/// Error kinds, mirroring [`crate::error::Error::kind`], plus a trailing
+/// `other` column that absorbs any kind string the registry does not know
+/// — a forward-compatibility valve, not a real kind.
+pub const KIND_NAMES: [&str; 9] = [
+    "io",
+    "json",
+    "invalid",
+    "missing",
+    "overloaded",
+    "timeout",
+    "too_large",
+    "shutdown",
+    "other",
+];
+
+/// Column index unknown error kinds fall into.
+pub const KIND_OTHER: usize = KIND_NAMES.len() - 1;
 
 /// Request stages timed on the service hot path, in pipeline order.
 pub const STAGE_NAMES: [&str; 5] = ["parse", "cache_lookup", "compile", "score", "serialize"];
@@ -84,6 +100,23 @@ pub struct Registry {
     pub explore_candidates: Counter,
     pub explore_dedup_rejects: Counter,
     pub explore_feasible: Counter,
+
+    /// TCP serving layer ([`crate::coordinator::Server`]): connections
+    /// accepted / refused at the connection cap, request lines received
+    /// over sockets, requests shed at the in-flight queue, deadline
+    /// enforcement (read = slow-loris, write = slow reader, idle =
+    /// keep-alive expiry), oversized lines, currently open connections,
+    /// and graceful drains completed.
+    pub srv_accepted: Counter,
+    pub srv_rejected_cap: Counter,
+    pub srv_lines: Counter,
+    pub srv_shed: Counter,
+    pub srv_read_timeouts: Counter,
+    pub srv_write_timeouts: Counter,
+    pub srv_idle_closed: Counter,
+    pub srv_too_large: Counter,
+    pub srv_active: Gauge,
+    pub srv_drains: Counter,
 }
 
 impl Default for Registry {
@@ -112,6 +145,16 @@ impl Registry {
             explore_candidates: Counter::new(),
             explore_dedup_rejects: Counter::new(),
             explore_feasible: Counter::new(),
+            srv_accepted: Counter::new(),
+            srv_rejected_cap: Counter::new(),
+            srv_lines: Counter::new(),
+            srv_shed: Counter::new(),
+            srv_read_timeouts: Counter::new(),
+            srv_write_timeouts: Counter::new(),
+            srv_idle_closed: Counter::new(),
+            srv_too_large: Counter::new(),
+            srv_active: Gauge::new(),
+            srv_drains: Counter::new(),
         }
     }
 
@@ -121,10 +164,15 @@ impl Registry {
     }
 
     /// Count one in-band error against `op` (or the `other` row when the
-    /// op is unknown/unparseable) under the error's kind.
+    /// op is unknown/unparseable) under the error's kind; kinds the
+    /// registry doesn't know land in the `other` column rather than being
+    /// misattributed or dropped.
     pub fn record_error(&self, op: Option<usize>, kind: &str) {
         let row = op.unwrap_or(OP_OTHER).min(OP_OTHER);
-        let col = KIND_NAMES.iter().position(|&k| k == kind).unwrap_or(0);
+        let col = KIND_NAMES
+            .iter()
+            .position(|&k| k == kind)
+            .unwrap_or(KIND_OTHER);
         self.errors[row][col].incr();
     }
 
@@ -156,6 +204,16 @@ impl Registry {
             explore_candidates: self.explore_candidates.value(),
             explore_dedup_rejects: self.explore_dedup_rejects.value(),
             explore_feasible: self.explore_feasible.value(),
+            srv_accepted: self.srv_accepted.value(),
+            srv_rejected_cap: self.srv_rejected_cap.value(),
+            srv_lines: self.srv_lines.value(),
+            srv_shed: self.srv_shed.value(),
+            srv_read_timeouts: self.srv_read_timeouts.value(),
+            srv_write_timeouts: self.srv_write_timeouts.value(),
+            srv_idle_closed: self.srv_idle_closed.value(),
+            srv_too_large: self.srv_too_large.value(),
+            srv_active: self.srv_active.value(),
+            srv_drains: self.srv_drains.value(),
         }
     }
 
@@ -189,6 +247,15 @@ impl Registry {
         self.explore_candidates.reset();
         self.explore_dedup_rejects.reset();
         self.explore_feasible.reset();
+        self.srv_accepted.reset();
+        self.srv_rejected_cap.reset();
+        self.srv_lines.reset();
+        self.srv_shed.reset();
+        self.srv_read_timeouts.reset();
+        self.srv_write_timeouts.reset();
+        self.srv_idle_closed.reset();
+        self.srv_too_large.reset();
+        self.srv_drains.reset();
     }
 }
 
@@ -225,6 +292,16 @@ pub struct Snapshot {
     pub explore_candidates: u64,
     pub explore_dedup_rejects: u64,
     pub explore_feasible: u64,
+    pub srv_accepted: u64,
+    pub srv_rejected_cap: u64,
+    pub srv_lines: u64,
+    pub srv_shed: u64,
+    pub srv_read_timeouts: u64,
+    pub srv_write_timeouts: u64,
+    pub srv_idle_closed: u64,
+    pub srv_too_large: u64,
+    pub srv_active: u64,
+    pub srv_drains: u64,
 }
 
 fn int(n: u64) -> Value {
@@ -313,6 +390,18 @@ impl Snapshot {
             ("dedup_rejects".to_string(), int(self.explore_dedup_rejects)),
             ("feasible".to_string(), int(self.explore_feasible)),
         ]);
+        let server = Value::Obj(vec![
+            ("accepted".to_string(), int(self.srv_accepted)),
+            ("rejected_cap".to_string(), int(self.srv_rejected_cap)),
+            ("lines".to_string(), int(self.srv_lines)),
+            ("shed".to_string(), int(self.srv_shed)),
+            ("read_timeouts".to_string(), int(self.srv_read_timeouts)),
+            ("write_timeouts".to_string(), int(self.srv_write_timeouts)),
+            ("idle_closed".to_string(), int(self.srv_idle_closed)),
+            ("too_large".to_string(), int(self.srv_too_large)),
+            ("active".to_string(), int(self.srv_active)),
+            ("drains".to_string(), int(self.srv_drains)),
+        ]);
         Value::Obj(vec![
             ("format".to_string(), Value::str("annette-obs.v1")),
             ("requests".to_string(), requests),
@@ -322,6 +411,7 @@ impl Snapshot {
             ("fan".to_string(), fan),
             ("campaign".to_string(), campaign),
             ("explore".to_string(), explore),
+            ("server".to_string(), server),
         ])
     }
 }
@@ -362,6 +452,36 @@ mod tests {
         assert_eq!(cache.req_usize("capacity").unwrap(), 4096);
         let workers = v.get("fan").unwrap().req_arr("workers").unwrap();
         assert_eq!(workers.len(), 1);
+    }
+
+    #[test]
+    fn serving_error_kinds_have_columns_and_unknown_kinds_fall_into_other() {
+        let r = Registry::new();
+        for kind in ["overloaded", "timeout", "too_large", "shutdown"] {
+            r.record_error(Some(1), kind);
+        }
+        // A kind string the registry has never heard of must not be
+        // misattributed to a real kind (or dropped): it lands in `other`.
+        r.record_error(Some(1), "quantum_flux");
+        r.record_error(None, "quantum_flux");
+        let v = r.snapshot().to_value();
+        let row = v.get("errors").unwrap().get("estimate").unwrap();
+        for kind in ["overloaded", "timeout", "too_large", "shutdown"] {
+            assert_eq!(row.req_usize(kind).unwrap(), 1, "kind {kind}");
+        }
+        assert_eq!(row.req_usize("other").unwrap(), 1);
+        let other_row = v.get("errors").unwrap().get("other").unwrap();
+        assert_eq!(other_row.req_usize("other").unwrap(), 1);
+        // The server counter block serializes with its fixed field order.
+        r.srv_accepted.add(2);
+        r.srv_shed.incr();
+        r.srv_active.set(1);
+        let s = r.snapshot().to_value();
+        let srv = s.get("server").unwrap();
+        assert_eq!(srv.req_usize("accepted").unwrap(), 2);
+        assert_eq!(srv.req_usize("shed").unwrap(), 1);
+        assert_eq!(srv.req_usize("active").unwrap(), 1);
+        assert_eq!(srv.req_usize("rejected_cap").unwrap(), 0);
     }
 
     #[test]

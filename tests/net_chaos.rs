@@ -1,0 +1,331 @@
+//! Fault-injection suite for the TCP serving layer: every hardening
+//! feature of `coordinator::Server` exercised over real sockets with a
+//! deliberately hostile client (`net_util::FaultClient`).
+//!
+//! Each test stands up its own server on an ephemeral port with explicit
+//! limits (never from the environment, so the tests compose in one
+//! process), all sharing one fitted platform model. The obs assertions use
+//! before/after snapshot deltas, and each scenario owns its counter —
+//! sheds, rejected connections, read timeouts, idle closes, oversized
+//! lines are each triggered by exactly one test in this binary.
+
+mod net_util;
+
+use std::sync::OnceLock;
+use std::time::{Duration, Instant};
+
+use annette::coordinator::orchestrator::run_campaign;
+use annette::coordinator::{Server, ServerConfig, Service};
+use annette::graph::serial::graph_to_value;
+use annette::hw::device::Device;
+use annette::hw::dpu::DpuDevice;
+use annette::models::platform::PlatformModel;
+use annette::obs;
+use annette::zoo::nasbench;
+
+use net_util::{error_kind, expect_error, FaultClient};
+
+/// One campaign + fit for the whole binary; each test clones the model.
+fn model() -> &'static PlatformModel {
+    static MODEL: OnceLock<PlatformModel> = OnceLock::new();
+    MODEL.get_or_init(|| {
+        let dev = DpuDevice::zcu102();
+        let data = run_campaign(&dev, 1, 4);
+        PlatformModel::fit(&dev.spec(), &data)
+    })
+}
+
+fn estimate_request() -> String {
+    let g = &nasbench::sample_networks(1, 7)[0];
+    format!(
+        "{{\"op\":\"estimate\",\"kind\":\"mixed\",\"total_only\":true,\"network\":{}}}",
+        graph_to_value(g)
+    )
+}
+
+fn config() -> ServerConfig {
+    // Explicit limits: the suite must not depend on what ANNETTE_* happens
+    // to be set in the environment running the tests.
+    ServerConfig {
+        addr: "127.0.0.1:0".to_string(),
+        ..ServerConfig::default()
+    }
+}
+
+#[test]
+fn socket_responses_are_byte_identical_to_in_process_handling() {
+    let reference = Service::new(model().clone());
+    let mut cfg = config();
+    cfg.workers = 4;
+    let handle = Server::bind(Service::new(model().clone()), cfg)
+        .expect("bind")
+        .spawn();
+
+    let requests = vec![
+        r#"{"op":"models"}"#.to_string(),
+        estimate_request(),
+        r#"{"op":"health"}"#.to_string(),
+        "definitely not json".to_string(),
+        r#"{"op":"teleport"}"#.to_string(),
+        estimate_request(),
+    ];
+
+    // Pipelined: the whole batch in one write, responses read back in
+    // order — per-connection ordering is part of the protocol.
+    let mut c = FaultClient::connect(handle.addr());
+    let mut batch = String::new();
+    for r in &requests {
+        batch.push_str(r);
+        batch.push('\n');
+    }
+    c.send_raw(batch.as_bytes());
+    for req in &requests {
+        let resp = c.read_line().expect("response for every request line");
+        assert_eq!(
+            resp,
+            reference.handle(req),
+            "socket bytes must match Service::handle for {req:?}"
+        );
+    }
+    let report = handle.shutdown();
+    assert!(report.drained);
+}
+
+#[test]
+fn plain_text_health_probe_bypasses_json() {
+    let handle = Server::bind(Service::new(model().clone()), config())
+        .expect("bind")
+        .spawn();
+    let mut c = FaultClient::connect(handle.addr());
+    assert_eq!(c.request("health"), "ok");
+    // And the JSON op agrees.
+    let resp = c.request(r#"{"op":"health"}"#);
+    assert!(resp.contains("\"status\":\"serving\""), "got {resp:?}");
+    handle.shutdown();
+}
+
+#[test]
+fn connection_cap_rejects_excess_with_overloaded() {
+    let before = obs::global().snapshot();
+    let mut cfg = config();
+    cfg.max_conns = 2;
+    let handle = Server::bind(Service::new(model().clone()), cfg)
+        .expect("bind")
+        .spawn();
+
+    // Two health round-trips pin both slots before the third connect.
+    let mut a = FaultClient::connect(handle.addr());
+    let mut b = FaultClient::connect(handle.addr());
+    assert_eq!(a.request("health"), "ok");
+    assert_eq!(b.request("health"), "ok");
+
+    let mut c = FaultClient::connect(handle.addr());
+    let resp = c.read_line().expect("in-band rejection line");
+    let msg = expect_error(&resp, "overloaded");
+    assert!(msg.contains("ANNETTE_MAX_CONNS"), "got {msg:?}");
+    c.expect_eof();
+
+    // The capped connections still work.
+    assert_eq!(a.request("health"), "ok");
+    handle.shutdown();
+    let after = obs::global().snapshot();
+    assert!(after.srv_rejected_cap > before.srv_rejected_cap);
+}
+
+#[test]
+fn oversized_line_gets_too_large_and_the_connection_survives() {
+    let before = obs::global().snapshot();
+    let mut cfg = config();
+    cfg.max_request_bytes = 128;
+    let handle = Server::bind(Service::new(model().clone()), cfg)
+        .expect("bind")
+        .spawn();
+
+    let mut c = FaultClient::connect(handle.addr());
+    let resp = c.request(&"x".repeat(500));
+    let msg = expect_error(&resp, "too_large");
+    assert!(msg.contains("ANNETTE_MAX_REQUEST_BYTES"), "got {msg:?}");
+    // Truncation-safe resync: the next request on the same connection
+    // parses cleanly.
+    let resp = c.request(r#"{"op":"models"}"#);
+    assert!(resp.contains("\"ok\":true"), "got {resp:?}");
+
+    // The same limit also guards the in-process dispatch path: a line
+    // under the framer cap but over the service cap fails identically.
+    let resp = c.request(&format!(r#"{{"op":"models","pad":"{}"}}"#, "y".repeat(100)));
+    assert_eq!(error_kind(&resp).as_deref(), Some("too_large"));
+
+    handle.shutdown();
+    let after = obs::global().snapshot();
+    assert!(after.srv_too_large > before.srv_too_large);
+}
+
+#[test]
+fn slow_loris_sender_is_cut_off_with_timeout() {
+    let before = obs::global().snapshot();
+    let mut cfg = config();
+    cfg.read_timeout = Duration::from_millis(200);
+    cfg.idle_timeout = Duration::from_secs(30);
+    let handle = Server::bind(Service::new(model().clone()), cfg)
+        .expect("bind")
+        .spawn();
+
+    // Classic slow-loris: open a request line, then stall. The server must
+    // answer with an in-band timeout and close.
+    let mut c = FaultClient::connect(handle.addr());
+    c.send_raw(br#"{"op":"#);
+    let resp = c.read_line().expect("in-band timeout line");
+    let msg = expect_error(&resp, "timeout");
+    assert!(msg.contains("ANNETTE_READ_TIMEOUT_MS"), "got {msg:?}");
+    c.expect_eof();
+
+    // Continuous dribble: one byte per 40ms keeps the socket readable, so
+    // the deadline must also be enforced on the data path. The client
+    // keeps writing past the cutoff, which can turn the close into a
+    // reset that discards the error line — so this phase only asserts the
+    // connection dies promptly; the obs counter below proves both cutoffs
+    // were deadline enforcement.
+    let mut d = FaultClient::connect(handle.addr());
+    let t0 = Instant::now();
+    while d.try_send_raw(b"x") {
+        std::thread::sleep(Duration::from_millis(40));
+        if t0.elapsed() > Duration::from_secs(10) {
+            break;
+        }
+    }
+    let lines = d.drain_until_closed();
+    assert!(
+        t0.elapsed() < Duration::from_secs(10),
+        "dribbling sender was never cut off (read {lines:?})"
+    );
+
+    handle.shutdown();
+    let after = obs::global().snapshot();
+    assert!(
+        after.srv_read_timeouts >= before.srv_read_timeouts + 2,
+        "both the stalled and the dribbling connection must time out"
+    );
+}
+
+#[test]
+fn idle_keepalive_connections_are_reaped_silently() {
+    let before = obs::global().snapshot();
+    let mut cfg = config();
+    cfg.idle_timeout = Duration::from_millis(150);
+    cfg.read_timeout = Duration::from_secs(30);
+    let handle = Server::bind(Service::new(model().clone()), cfg)
+        .expect("bind")
+        .spawn();
+
+    let mut c = FaultClient::connect(handle.addr());
+    assert_eq!(c.request("health"), "ok");
+    // No request in progress: after the idle window the server closes
+    // without an error line (nothing was asked).
+    let t0 = Instant::now();
+    c.expect_eof();
+    assert!(
+        t0.elapsed() < Duration::from_secs(10),
+        "idle close took too long"
+    );
+
+    handle.shutdown();
+    let after = obs::global().snapshot();
+    assert!(after.srv_idle_closed > before.srv_idle_closed);
+}
+
+#[test]
+fn full_queue_sheds_with_overloaded_instead_of_queueing_unboundedly() {
+    let before = obs::global().snapshot();
+    let mut cfg = config();
+    // Fault injection: one worker stalled 300ms per request over a
+    // one-slot queue, so 4 concurrent requests guarantee sheds.
+    cfg.workers = 1;
+    cfg.queue_cap = 1;
+    cfg.handler_delay = Duration::from_millis(300);
+    let handle = Server::bind(Service::new(model().clone()), cfg)
+        .expect("bind")
+        .spawn();
+    let addr = handle.addr();
+    let req = estimate_request();
+
+    // Connect everyone first, then fire the requests together: the shed
+    // guarantee needs the four submissions inside one 300ms handler stall.
+    let clients: Vec<FaultClient> = (0..4).map(|_| FaultClient::connect(addr)).collect();
+    let req = &req;
+    let responses: Vec<String> = std::thread::scope(|s| {
+        let handles: Vec<_> = clients
+            .into_iter()
+            .map(|mut c| s.spawn(move || c.request(req)))
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("client thread"))
+            .collect()
+    });
+
+    let ok = responses.iter().filter(|r| r.contains("\"ok\":true")).count();
+    let shed = responses
+        .iter()
+        .filter(|r| error_kind(r).as_deref() == Some("overloaded"))
+        .count();
+    assert_eq!(ok + shed, 4, "only ok or overloaded allowed: {responses:?}");
+    assert!(ok >= 2, "the running and queued requests must complete");
+    assert!(shed >= 1, "4 concurrent over cap 1+1 must shed: {responses:?}");
+    handle.shutdown();
+    let after = obs::global().snapshot();
+    // `>=`, not `==`: the registry is process-global and the retry test in
+    // this binary also sheds when the suite runs in parallel.
+    assert!(
+        (after.srv_shed - before.srv_shed) as usize >= shed,
+        "every observed overloaded response must be counted as shed"
+    );
+}
+
+#[test]
+fn shed_connection_survives_and_serves_the_retry() {
+    let mut cfg = config();
+    cfg.workers = 1;
+    cfg.queue_cap = 1;
+    cfg.handler_delay = Duration::from_millis(200);
+    let handle = Server::bind(Service::new(model().clone()), cfg)
+        .expect("bind")
+        .spawn();
+    let addr = handle.addr();
+    let req = estimate_request();
+
+    // Saturate from two background connections, then hammer a third until
+    // it observes a shed; its retry after the burst must succeed on the
+    // same connection.
+    std::thread::scope(|s| {
+        for _ in 0..2 {
+            s.spawn(|| {
+                let mut c = FaultClient::connect(addr);
+                for _ in 0..3 {
+                    let _ = c.request(&req);
+                }
+            });
+        }
+        let mut c = FaultClient::connect(addr);
+        let mut saw_shed = false;
+        let t0 = Instant::now();
+        while !saw_shed && t0.elapsed() < Duration::from_secs(10) {
+            if error_kind(&c.request(&req)).as_deref() == Some("overloaded") {
+                saw_shed = true;
+            }
+        }
+        // Whether or not the race produced a shed, the connection must
+        // still serve; when it did shed, this is the retry-after-shed.
+        let resp = loop {
+            let r = c.request(&req);
+            if error_kind(&r).is_none() {
+                break r;
+            }
+            assert!(
+                t0.elapsed() < Duration::from_secs(30),
+                "retry after shed never succeeded"
+            );
+        };
+        assert!(resp.contains("\"ok\":true"), "retry failed: {resp:?}");
+    });
+    handle.shutdown();
+}

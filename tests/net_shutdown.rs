@@ -1,0 +1,128 @@
+//! Graceful drain of the TCP server, exercised in its own process: this
+//! binary holds a single test because it resolves the process-wide trace
+//! sink programmatically (`obs::trace::enable_to`, first resolution wins
+//! for the process lifetime — same pattern as `obs_killswitch`).
+//!
+//! The scenario: a request is in flight (held by fault-injected handler
+//! delay) when the drain begins. The drain must let it complete, tell
+//! every open connection in-band that the server is going away
+//! (`error_kind:"shutdown"`), close the listener, and flush telemetry —
+//! the trace file and the final obs snapshot — before reporting.
+
+mod net_util;
+
+use std::net::TcpStream;
+use std::time::Duration;
+
+use annette::coordinator::orchestrator::run_campaign;
+use annette::coordinator::{Server, ServerConfig, Service};
+use annette::graph::serial::graph_to_value;
+use annette::hw::device::Device;
+use annette::hw::dpu::DpuDevice;
+use annette::json::Value;
+use annette::models::platform::PlatformModel;
+use annette::obs;
+use annette::zoo::nasbench;
+
+use net_util::{error_kind, FaultClient};
+
+#[test]
+fn graceful_drain_completes_in_flight_work_and_flushes_telemetry() {
+    let trace_path = std::env::temp_dir().join("annette_net_shutdown_trace.json");
+    let snap_path = std::env::temp_dir().join("annette_net_shutdown_obs.json");
+    let _ = std::fs::remove_file(&trace_path);
+    let _ = std::fs::remove_file(&snap_path);
+    assert!(
+        obs::trace::enable_to(trace_path.to_str().unwrap()),
+        "trace sink must be unresolved at test start (single test per binary)"
+    );
+
+    let dev = DpuDevice::zcu102();
+    let data = run_campaign(&dev, 1, 4);
+    let svc = Service::new(PlatformModel::fit(&dev.spec(), &data));
+
+    let cfg = ServerConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 1,
+        // Fault injection holds the in-flight request across the start of
+        // the drain.
+        handler_delay: Duration::from_millis(400),
+        drain_timeout: Duration::from_secs(10),
+        obs_snapshot_path: Some(snap_path.to_str().unwrap().to_string()),
+        ..ServerConfig::default()
+    };
+    let handle = Server::bind(svc, cfg).expect("bind").spawn();
+    let addr = handle.addr();
+
+    // An idle connection open before the drain: it must be told in-band.
+    let mut idle = FaultClient::connect(addr);
+    assert_eq!(idle.request("health"), "ok");
+
+    // The in-flight connection: its request is running inside the stalled
+    // worker when the drain begins.
+    let req = format!(
+        "{{\"op\":\"estimate\",\"kind\":\"mixed\",\"total_only\":true,\"network\":{}}}",
+        graph_to_value(&nasbench::sample_networks(1, 11)[0])
+    );
+    let in_flight = std::thread::spawn(move || {
+        let mut c = FaultClient::connect(addr);
+        c.send_line(&req);
+        let first = c.read_line().expect("in-flight request must be answered");
+        let rest = c.drain_until_closed();
+        (first, rest)
+    });
+
+    // Let the request reach the worker, then drain while it is running.
+    std::thread::sleep(Duration::from_millis(150));
+    let report = handle.shutdown();
+    assert!(
+        report.drained,
+        "drain must complete within its deadline ({} connections left)",
+        report.connections_left
+    );
+    assert_eq!(report.connections_left, 0);
+
+    // The in-flight request completed with its real response...
+    let (first, rest) = in_flight.join().expect("in-flight client thread");
+    assert!(
+        first.contains("\"ok\":true"),
+        "in-flight request must complete, got {first:?}"
+    );
+    // ...followed by the in-band goodbye and the close.
+    assert!(
+        !rest.is_empty() && rest.iter().all(|l| error_kind(l).as_deref() == Some("shutdown")),
+        "draining server must say goodbye in-band, got {rest:?}"
+    );
+
+    // The idle connection got the same goodbye before its close.
+    let goodbye = idle.drain_until_closed();
+    assert!(
+        goodbye
+            .iter()
+            .any(|l| error_kind(l).as_deref() == Some("shutdown")),
+        "open connections must be told about the drain, got {goodbye:?}"
+    );
+
+    // The listener is gone: fresh connections are refused outright.
+    assert!(
+        TcpStream::connect(addr).is_err(),
+        "listener must be closed after drain"
+    );
+
+    // Telemetry flushed on the way out: the final obs snapshot...
+    let snap_text = std::fs::read_to_string(&snap_path).expect("obs snapshot written on drain");
+    let snap = Value::parse(&snap_text).expect("snapshot parses");
+    assert_eq!(snap.req_str("format").unwrap(), "annette-obs.v1");
+    let server = snap.req("server").expect("server block");
+    assert!(server.req_usize("accepted").unwrap() >= 2);
+    assert!(server.req_usize("drains").unwrap() >= 1);
+    assert_eq!(server.req_usize("active").unwrap(), 0, "all connections closed");
+
+    // ...and the trace file, loadable as Chrome trace JSON.
+    let trace_text = std::fs::read_to_string(&trace_path).expect("trace flushed on drain");
+    let trace = Value::parse(&trace_text).expect("trace parses");
+    assert!(
+        !trace.req_arr("traceEvents").unwrap().is_empty(),
+        "campaign + service spans must have been recorded"
+    );
+}

@@ -1,0 +1,156 @@
+//! Shared client harness for the TCP serving-layer tests: a small
+//! fault-injection client that can speak the protocol correctly — or
+//! deliberately badly (dribbled bytes, unterminated lines, abandoned
+//! connections) — plus response-inspection helpers.
+//!
+//! Included from the `net_*` integration tests via `mod net_util;`; not a
+//! test target itself. Each including binary uses a different subset of
+//! the helpers, hence the file-level dead_code allowance.
+#![allow(dead_code)]
+
+use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
+
+use annette::json::Value;
+
+/// A test client with explicit control over framing and pacing. Every
+/// helper panics on unexpected transport errors so test failures point at
+/// the exact exchange that broke.
+pub struct FaultClient {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl FaultClient {
+    /// Connect, retrying briefly (the server's accept thread may not have
+    /// started), with a generous read timeout so a hung test fails fast
+    /// instead of hanging the suite.
+    pub fn connect(addr: SocketAddr) -> FaultClient {
+        let t0 = Instant::now();
+        let stream = loop {
+            match TcpStream::connect(addr) {
+                Ok(s) => break s,
+                Err(e) => {
+                    assert!(
+                        t0.elapsed() < Duration::from_secs(10),
+                        "cannot connect to {addr}: {e}"
+                    );
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+            }
+        };
+        stream
+            .set_read_timeout(Some(Duration::from_secs(30)))
+            .expect("set client read timeout");
+        let writer = stream.try_clone().expect("clone client stream");
+        FaultClient {
+            writer,
+            reader: BufReader::new(stream),
+        }
+    }
+
+    /// Send one correctly framed request line.
+    pub fn send_line(&mut self, line: &str) {
+        self.writer
+            .write_all(line.as_bytes())
+            .and_then(|()| self.writer.write_all(b"\n"))
+            .expect("send request line");
+    }
+
+    /// Send raw bytes with no framing — the building block for slow-loris
+    /// and oversized-line scenarios.
+    pub fn send_raw(&mut self, bytes: &[u8]) {
+        self.writer.write_all(bytes).expect("send raw bytes");
+    }
+
+    /// Like [`FaultClient::send_raw`], but reports failure instead of
+    /// panicking — for scenarios where the server is expected to close the
+    /// connection mid-send (slow-loris cutoff).
+    pub fn try_send_raw(&mut self, bytes: &[u8]) -> bool {
+        self.writer.write_all(bytes).is_ok()
+    }
+
+    /// Read one response line (without the newline). `None` means the
+    /// server closed the connection.
+    pub fn read_line(&mut self) -> Option<String> {
+        let mut line = String::new();
+        match self.reader.read_line(&mut line) {
+            Ok(0) => None,
+            Ok(_) => {
+                while line.ends_with('\n') || line.ends_with('\r') {
+                    line.pop();
+                }
+                Some(line)
+            }
+            Err(e) => panic!("read response line: {e}"),
+        }
+    }
+
+    /// One full request/response exchange.
+    pub fn request(&mut self, line: &str) -> String {
+        self.send_line(line);
+        self.read_line().expect("server closed before responding")
+    }
+
+    /// Read whatever lines remain until the server closes the connection,
+    /// tolerating a reset (which can discard in-flight data) — for
+    /// scenarios where the client misbehaved past the server's close.
+    pub fn drain_until_closed(&mut self) -> Vec<String> {
+        let mut lines = Vec::new();
+        loop {
+            let mut line = String::new();
+            match self.reader.read_line(&mut line) {
+                Ok(0) | Err(_) => return lines,
+                Ok(_) => lines.push(line.trim_end().to_string()),
+            }
+        }
+    }
+
+    /// Assert the connection is closed: the next read returns EOF (0
+    /// bytes) within the client timeout rather than data.
+    pub fn expect_eof(&mut self) {
+        let mut buf = [0u8; 64];
+        loop {
+            match self.reader.read(&mut buf) {
+                Ok(0) => return,
+                // Tolerate any final in-band lines ahead of the close.
+                Ok(_) => continue,
+                Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+                    panic!("expected EOF, connection still open after client timeout")
+                }
+                // A reset also counts as closed.
+                Err(_) => return,
+            }
+        }
+    }
+}
+
+/// The `error_kind` of an in-band error response, if the line is one.
+pub fn error_kind(resp: &str) -> Option<String> {
+    let v = Value::parse(resp).ok()?;
+    if v.get("ok").and_then(|b| b.as_bool()) == Some(false) {
+        v.get("error_kind")
+            .and_then(|k| k.as_str())
+            .map(str::to_string)
+    } else {
+        None
+    }
+}
+
+/// Assert a response is an in-band error of the given kind; returns the
+/// human-readable `error` message for further checks.
+pub fn expect_error(resp: &str, kind: &str) -> String {
+    let v = Value::parse(resp).unwrap_or_else(|e| panic!("unparseable response {resp:?}: {e}"));
+    assert_eq!(
+        v.get("ok").and_then(|b| b.as_bool()),
+        Some(false),
+        "expected an error response, got {resp:?}"
+    );
+    assert_eq!(
+        v.get("error_kind").and_then(|k| k.as_str()),
+        Some(kind),
+        "wrong error_kind in {resp:?}"
+    );
+    v.req_str("error").expect("error message").to_string()
+}

@@ -43,8 +43,8 @@ fn annette_obs_off_disables_all_recording() {
 
     // Nothing landed in the registry.
     let snap = obs::global().snapshot();
-    assert_eq!(snap.requests, [0; 4]);
-    assert_eq!(snap.errors, [[0; 4]; 5]);
+    assert!(snap.requests.iter().all(|&n| n == 0));
+    assert!(snap.errors.iter().flatten().all(|&n| n == 0));
     assert_eq!(snap.cache_hits + snap.cache_misses, 0);
     for h in &snap.stages {
         assert_eq!(h.count(), 0);
