@@ -40,10 +40,17 @@ struct WorkloadResult {
     p50_us: f64,
     p99_us: f64,
     threads: usize,
+    threads_available: usize,
     calls: usize,
 }
 
 impl WorkloadResult {
+    /// Requested more worker threads than the machine has: the measurement
+    /// is contention, not scaling, and must not feed a scaling ratio.
+    fn oversubscribed(&self) -> bool {
+        self.threads > self.threads_available
+    }
+
     fn to_value(&self) -> Value {
         Value::Obj(vec![
             ("workload".to_string(), Value::str(self.workload.clone())),
@@ -54,9 +61,23 @@ impl WorkloadResult {
             ("p50_us".to_string(), Value::num(round3(self.p50_us))),
             ("p99_us".to_string(), Value::num(round3(self.p99_us))),
             ("threads".to_string(), Value::int(self.threads)),
+            (
+                "threads_available".to_string(),
+                Value::int(self.threads_available),
+            ),
+            (
+                "oversubscribed".to_string(),
+                Value::Bool(self.oversubscribed()),
+            ),
             ("calls".to_string(), Value::int(self.calls)),
         ])
     }
+}
+
+fn available_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
 }
 
 fn round3(x: f64) -> f64 {
@@ -101,6 +122,7 @@ fn run_single<F: FnMut(&Graph) -> f64>(
         p50_us: percentile(&lat_us, 0.50),
         p99_us: percentile(&lat_us, 0.99),
         threads: 1,
+        threads_available: available_threads(),
         calls: lat_us.len(),
     }
 }
@@ -133,6 +155,7 @@ fn run_service(
         p50_us: percentile(&pass_mean_us, 0.50),
         p99_us: percentile(&pass_mean_us, 0.99),
         threads,
+        threads_available: available_threads(),
         calls: passes * n_lines,
     }
 }
@@ -254,13 +277,79 @@ fn main() {
             threads,
         );
         eprintln!(
-            "[bench] service x{threads} threads: {:.0} lines/s",
-            r.estimates_per_sec
+            "[bench] service x{threads} threads: {:.0} lines/s{}",
+            r.estimates_per_sec,
+            if r.oversubscribed() {
+                " (oversubscribed)"
+            } else {
+                ""
+            }
         );
         svc_results.push(r);
     }
-    let scaling_2t = svc_results[1].estimates_per_sec / svc_results[0].estimates_per_sec;
-    let scaling_4t = svc_results[2].estimates_per_sec / svc_results[0].estimates_per_sec;
+    // A scaling ratio over an oversubscribed run measures contention, not
+    // the service: skip it and say so in the document instead of shipping a
+    // misleading number.
+    let mut parallel_scaling_skipped: Vec<Value> = Vec::new();
+    let mut scaling_of = |i: usize, key: &str| -> Option<f64> {
+        if svc_results[i].oversubscribed() {
+            parallel_scaling_skipped.push(Value::str(key));
+            return None;
+        }
+        Some(svc_results[i].estimates_per_sec / svc_results[0].estimates_per_sec)
+    };
+    let scaling_2t = scaling_of(1, "parallel_scaling_2t");
+    let scaling_4t = scaling_of(2, "parallel_scaling_4t");
+
+    // --- Batch op: the whole candidate set on one request line --------------
+    // Compact genotype entries, named exactly like the sampled networks so
+    // the batch shares cache entries with the line-at-a-time workloads.
+    // Single-threaded `handle` — the speedup over service_*_1t is pure
+    // request-overhead elimination (one parse, one response line).
+    let mut batch_req =
+        String::from("{\"op\":\"estimate_batch\",\"kind\":\"mixed\",\"graphs\":[");
+    for i in 0..nas_count {
+        if i > 0 {
+            batch_req.push(',');
+        }
+        batch_req.push_str("{\"genotype\":");
+        zoo::nasbench::genotype_to_value(&zoo::nasbench::sample_genotype(i, 2024))
+            .write_into(&mut batch_req);
+        batch_req.push_str(&format!(",\"name\":\"nas-{i:04}\"}}"));
+    }
+    batch_req.push_str("]}");
+    let batch_result = {
+        let mut pass_mean_us: Vec<f64> = Vec::with_capacity(svc_passes);
+        let mut out = String::new();
+        let wall = Instant::now();
+        for _ in 0..svc_passes {
+            let t0 = Instant::now();
+            svc.handle_into(&batch_req, &mut out);
+            let dt = t0.elapsed().as_secs_f64();
+            assert!(
+                out.starts_with("{\"ok\":true"),
+                "batch request failed: {}",
+                &out[..out.len().min(160)]
+            );
+            pass_mean_us.push(dt * 1e6 / nas_count as f64);
+        }
+        let elapsed = wall.elapsed().as_secs_f64();
+        pass_mean_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        WorkloadResult {
+            workload: "service_batch".to_string(),
+            estimates_per_sec: (svc_passes * nas_count) as f64 / elapsed,
+            p50_us: percentile(&pass_mean_us, 0.50),
+            p99_us: percentile(&pass_mean_us, 0.99),
+            threads: 1,
+            threads_available: available_threads(),
+            calls: svc_passes * nas_count,
+        }
+    };
+    let batch_speedup = batch_result.estimates_per_sec / svc_results[0].estimates_per_sec;
+    eprintln!(
+        "[bench] batch op: {:.0} estimates/s ({batch_speedup:.1}x over per-line requests)",
+        batch_result.estimates_per_sec
+    );
 
     results.push(base_nas);
     results.push(base_zoo);
@@ -270,6 +359,7 @@ fn main() {
     results.push(obs_off);
     results.push(obs_on);
     results.extend(svc_results);
+    results.push(batch_result);
 
     // --- Telemetry snapshot --------------------------------------------------
     // Everything above ran with recording on, so the global registry now
@@ -324,7 +414,7 @@ fn main() {
         .and_then(|v| v.get("serve").cloned());
 
     let mut fields = vec![
-        ("format".to_string(), Value::str("annette-bench.v1")),
+        ("format".to_string(), Value::str("annette-estbench.v1")),
         (
             "mode".to_string(),
             Value::str(if smoke { "smoke" } else { "full" }),
@@ -332,11 +422,7 @@ fn main() {
         ("device".to_string(), Value::str(model.spec.name.clone())),
         (
             "threads_available".to_string(),
-            Value::int(
-                std::thread::available_parallelism()
-                    .map(|n| n.get())
-                    .unwrap_or(1),
-            ),
+            Value::int(available_threads()),
         ),
         (
             "workloads".to_string(),
@@ -346,16 +432,22 @@ fn main() {
             "speedup_single_thread".to_string(),
             Value::num(round3(speedup)),
         ),
-        (
-            "parallel_scaling_2t".to_string(),
-            Value::num(round3(scaling_2t)),
-        ),
-        (
-            "parallel_scaling_4t".to_string(),
-            Value::num(round3(scaling_4t)),
-        ),
-        ("obs".to_string(), obs_summary),
     ];
+    if let Some(s) = scaling_2t {
+        fields.push(("parallel_scaling_2t".to_string(), Value::num(round3(s))));
+    }
+    if let Some(s) = scaling_4t {
+        fields.push(("parallel_scaling_4t".to_string(), Value::num(round3(s))));
+    }
+    fields.push((
+        "parallel_scaling_skipped".to_string(),
+        Value::Arr(parallel_scaling_skipped),
+    ));
+    fields.push((
+        "service_batch_speedup".to_string(),
+        Value::num(round3(batch_speedup)),
+    ));
+    fields.push(("obs".to_string(), obs_summary));
     if let Some(serve) = prior_serve {
         fields.push(("serve".to_string(), serve));
     }

@@ -112,7 +112,12 @@ fn merge_serve_key(serve: Value) {
         .and_then(|t| Value::parse(&t).ok())
     {
         Some(Value::Obj(fields)) => fields,
-        _ => vec![("format".to_string(), Value::str("annette-bench.v1"))],
+        // A fresh document gets the estimator-harness format name; an
+        // existing one keeps whatever it declares (the merge reads any
+        // parseable object, so pre-rename `annette-bench.v1` documents —
+        // which collided with the campaign persistence family — and
+        // current `annette-estbench.v1` ones both work).
+        _ => vec![("format".to_string(), Value::str("annette-estbench.v1"))],
     };
     if let Some(slot) = fields.iter_mut().find(|(k, _)| k == "serve") {
         slot.1 = serve;

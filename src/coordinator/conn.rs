@@ -232,10 +232,12 @@ fn read_timed_out(sink: &Arc<Mutex<dyn Write + Send>>, scratch: &mut String, dea
 }
 
 /// Frame `scratch` (response text, no newline yet) and write it under the
-/// shared writer lock.
+/// shared writer lock. Poison is recovered, not propagated: a worker that
+/// panicked while holding the writer lock must not take the connection
+/// thread down with it.
 fn send_line(sink: &Arc<Mutex<dyn Write + Send>>, scratch: &mut String) -> std::io::Result<()> {
     scratch.push('\n');
-    let mut w = sink.lock().expect("connection writer poisoned");
+    let (mut w, _) = crate::sync::lock_recover(sink);
     w.write_all(scratch.as_bytes()).and_then(|()| w.flush())
 }
 

@@ -89,6 +89,12 @@ pub struct ServerConfig {
     /// Zero (the default) disables it; the chaos tests use it to hold the
     /// queue full deterministically. `ANNETTE_FAULT_HANDLER_DELAY_MS`.
     pub handler_delay: Duration,
+    /// Fault injection: a request line containing this token makes the
+    /// handler panic, exercising the pool's panic boundary end-to-end (the
+    /// request must be answered with an in-band `internal` error and the
+    /// service must keep serving). `None` (the default) disables it.
+    /// `ANNETTE_FAULT_PANIC_TOKEN`.
+    pub fault_panic_token: Option<String>,
     /// When set, shutdown writes the final `annette-obs.v1` snapshot JSON
     /// to this path. `ANNETTE_OBS_SNAPSHOT`.
     pub obs_snapshot_path: Option<String>,
@@ -107,6 +113,7 @@ impl Default for ServerConfig {
             workers: default_threads(),
             drain_timeout: Duration::from_millis(5_000),
             handler_delay: Duration::ZERO,
+            fault_panic_token: None,
             obs_snapshot_path: None,
         }
     }
@@ -147,6 +154,7 @@ impl ServerConfig {
             workers: env_usize("ANNETTE_WORKERS", d.workers),
             drain_timeout: env_ms("ANNETTE_DRAIN_TIMEOUT_MS", d.drain_timeout),
             handler_delay: env_ms("ANNETTE_FAULT_HANDLER_DELAY_MS", d.handler_delay),
+            fault_panic_token: std::env::var("ANNETTE_FAULT_PANIC_TOKEN").ok(),
             obs_snapshot_path: std::env::var("ANNETTE_OBS_SNAPSHOT").ok(),
         }
     }
@@ -169,9 +177,11 @@ impl ConnCount {
     }
 
     /// Claim a connection slot; `false` means the cap is already reached
-    /// (the caller rejects the connection).
+    /// (the caller rejects the connection). The count lock recovers from
+    /// poison (the counter is a plain usize — no repair needed) so a
+    /// panicking connection thread cannot wedge accept or drain.
     fn try_enter(&self, max: usize) -> bool {
-        let mut c = self.count.lock().expect("conn count poisoned");
+        let (mut c, _) = crate::sync::lock_recover(&self.count);
         if *c >= max {
             return false;
         }
@@ -183,7 +193,7 @@ impl ConnCount {
     }
 
     pub(crate) fn leave(&self) {
-        let mut c = self.count.lock().expect("conn count poisoned");
+        let (mut c, _) = crate::sync::lock_recover(&self.count);
         *c = c.saturating_sub(1);
         if obs::enabled() {
             obs::global().srv_active.set(*c as u64);
@@ -197,17 +207,13 @@ impl ConnCount {
     /// many were still open when the wait ended.
     fn wait_zero(&self, timeout: Duration) -> usize {
         let deadline = Instant::now() + timeout;
-        let mut c = self.count.lock().expect("conn count poisoned");
+        let (mut c, _) = crate::sync::lock_recover(&self.count);
         while *c > 0 {
             let now = Instant::now();
             if now >= deadline {
                 return *c;
             }
-            let (guard, _) = self
-                .zero
-                .wait_timeout(c, deadline - now)
-                .expect("conn count poisoned");
-            c = guard;
+            c = crate::sync::wait_timeout_recover(&self.zero, &self.count, c, deadline - now).0;
         }
         0
     }
@@ -268,11 +274,21 @@ impl Server {
         let addr = listener.local_addr()?;
 
         let service = Arc::new(service);
+        let panic_token = cfg.fault_panic_token.clone();
         let pool = Pool::new(
             cfg.workers,
             cfg.queue_cap,
             cfg.handler_delay,
-            move |line, out| service.handle_into(line, out),
+            move |line, out| {
+                // Fault injection: panic inside the handler so the chaos
+                // tests exercise the pool's real panic boundary, not a mock.
+                if let Some(tok) = &panic_token {
+                    if !tok.is_empty() && line.contains(tok.as_str()) {
+                        panic!("fault injection: request line contains panic token");
+                    }
+                }
+                service.handle_into(line, out)
+            },
         );
         Ok(Server {
             shared: Arc::new(Shared {

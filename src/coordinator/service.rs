@@ -19,6 +19,18 @@
 //!     plus the predicted-fastest one (mutually exclusive with `device`).
 //!   * `"total_only":true` — skip the per-unit breakdown (the NAS
 //!     screening fast path; implied by fleet mode).
+//! * `{"op":"estimate_batch","graphs":[...]}` — score many candidates in
+//!   one request: one parse, one response line, per-graph results at their
+//!   input index. Each `graphs[i]` entry is either a full network document
+//!   (`annette-graph.v1`, recognized by its `format` field) or a compact
+//!   NASBench genotype `{"genotype":{...},"name":"..."}` decoded
+//!   server-side ([`crate::zoo::nasbench`]) — the design-space-screening
+//!   fast path, where one line carries thousands of candidates in a few
+//!   kilobytes instead of megabytes of graph JSON. `kind` and
+//!   `device`/`fleet` route exactly like `estimate`; answers are totals
+//!   only (no per-unit breakdown). A malformed entry yields an inline
+//!   `{"ok":false,...}` element at its index and never affects its
+//!   neighbors; the batch is capped at [`ESTIMATE_BATCH_MAX`] entries.
 //! * `{"op":"health"}` — liveness probe: answers
 //!   `{"ok":true,"op":"health","status":"serving","devices":N}` without
 //!   touching a model. The TCP serving layer ([`crate::coordinator::Server`])
@@ -80,6 +92,11 @@ fn record_stage_lap(sw: &mut obs::Stopwatch, stage: usize) {
 /// ([`crate::coordinator::ServerConfig`]): both reject longer requests with
 /// `error_kind:"too_large"`, so a client sees one limit wherever it connects.
 pub const DEFAULT_MAX_REQUEST_BYTES: usize = 1 << 20;
+
+/// Most entries one `estimate_batch` request may carry. Together with the
+/// request-line size cap this keeps one batch a bounded unit of work; a
+/// screening run over more candidates sends more lines.
+pub const ESTIMATE_BATCH_MAX: usize = 4096;
 
 /// Most initial candidates one `explore` request may ask for.
 pub const EXPLORE_MAX_CANDIDATES: usize = 512;
@@ -323,6 +340,10 @@ impl Service {
                 let _span = obs::trace::span("op:estimate");
                 self.estimate(&req, out, sw)
             }
+            "estimate_batch" => {
+                let _span = obs::trace::span("op:estimate_batch");
+                self.estimate_batch(&req, out, sw)
+            }
             "explore" => {
                 let _span = obs::trace::span("op:explore");
                 self.explore(&req, out, sw)
@@ -386,7 +407,9 @@ impl Service {
             }
             write_json_str(out, kind.as_str());
         }
-        out.push_str("],\"ops\":[\"models\",\"estimate\",\"explore\",\"stats\",\"health\"]}");
+        out.push_str(
+            "],\"ops\":[\"models\",\"estimate\",\"estimate_batch\",\"explore\",\"stats\",\"health\"]}",
+        );
     }
 
     fn target_index(&self, label: &str) -> Result<usize> {
@@ -573,6 +596,135 @@ impl Service {
         out.push_str(",\"total_ms\":");
         write_json_f64(out, bms);
         out.push_str("}}");
+        record_stage_lap(sw, STAGE_SERIALIZE);
+        Ok(())
+    }
+
+    /// Resolve one `graphs[i]` batch entry: a full network document
+    /// (recognized by its `format` field and parsed exactly like
+    /// `estimate`'s `network`) or a compact NASBench genotype
+    /// (`{"genotype":{...},"name":"..."}`, name defaulting to
+    /// `cand-<index>`). Resolution is all-or-nothing per entry — no bytes
+    /// are written until the entry has a valid graph — which is what lets
+    /// a failure stay an inline element instead of poisoning the line.
+    fn batch_entry_graph(entry: &Value, index: usize) -> Result<crate::graph::Graph> {
+        if entry.get("format").is_some() {
+            return serial::graph_from_value(entry);
+        }
+        if let Some(geno) = entry.get("genotype") {
+            let genotype = crate::zoo::nasbench::genotype_from_value(geno)?;
+            let name = match entry.get("name") {
+                Some(v) => v
+                    .as_str()
+                    .ok_or_else(|| Error::Invalid("entry `name` must be a string".to_string()))?
+                    .to_string(),
+                None => format!("cand-{index:04}"),
+            };
+            return Ok(crate::zoo::nasbench::decode(&genotype, &name));
+        }
+        Err(Error::Invalid(format!(
+            "graphs[{index}] must be a network document (with `format`) or a `genotype` entry"
+        )))
+    }
+
+    /// Answer `{"op":"estimate_batch","graphs":[...]}`: per-entry totals at
+    /// their input index, one line for the whole batch. Envelope problems
+    /// (bad routing, missing/oversized `graphs`) fail the request; a bad
+    /// *entry* becomes an inline `{"ok":false,...}` element, counted
+    /// against the op's error row, and its neighbors still answer. Stage
+    /// laps: `parse` covers envelope decoding, `score` the per-entry
+    /// resolve + lookup + write loop, `serialize` the closing frame.
+    fn estimate_batch(&self, req: &Value, out: &mut String, sw: &mut obs::Stopwatch) -> Result<()> {
+        let kind = Service::req_kind(req)?;
+        let (fleet, device) = Service::req_routing(req)?;
+        let target = match device {
+            Some(label) => self.target(label)?,
+            None => &self.targets[0],
+        };
+        let graphs = req
+            .get("graphs")
+            .ok_or_else(|| {
+                Error::Invalid("`estimate_batch` requires a `graphs` array".to_string())
+            })?
+            .as_arr()
+            .ok_or_else(|| Error::Invalid("`graphs` must be an array".to_string()))?;
+        if graphs.len() > ESTIMATE_BATCH_MAX {
+            return Err(Error::Invalid(format!(
+                "`graphs` carries {} entries, cap is {ESTIMATE_BATCH_MAX}",
+                graphs.len()
+            )));
+        }
+        record_stage_lap(sw, STAGE_PARSE);
+        out.push_str("{\"ok\":true,\"op\":\"estimate_batch\"");
+        if !fleet {
+            out.push_str(",\"device\":");
+            write_json_str(out, &target.label);
+        }
+        out.push_str(",\"kind\":");
+        write_json_str(out, kind.as_str());
+        out.push_str(",\"count\":");
+        write_json_usize(out, graphs.len());
+        out.push_str(",\"results\":[");
+        for (i, entry) in graphs.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let graph = match Service::batch_entry_graph(entry, i) {
+                Ok(g) => g,
+                Err(e) => {
+                    if obs::enabled() {
+                        obs::global().record_error(Registry::op_index("estimate_batch"), e.kind());
+                    }
+                    out.push_str("{\"ok\":false,\"error\":");
+                    write_json_str(out, &e.to_string());
+                    out.push_str(",\"error_kind\":");
+                    write_json_str(out, e.kind());
+                    out.push('}');
+                    continue;
+                }
+            };
+            if fleet {
+                out.push_str("{\"network\":");
+                write_json_str(out, &graph.name);
+                out.push_str(",\"fleet\":[");
+                let mut best: Option<(usize, f64)> = None;
+                for (ti, t) in self.targets.iter().enumerate() {
+                    if ti > 0 {
+                        out.push(',');
+                    }
+                    let total =
+                        self.cache.get_or_compile(&t.compiled, &graph).total_ms(kind);
+                    // Same first-wins argmin as `estimate_fleet`.
+                    let better = match best {
+                        None => true,
+                        Some((_, b)) => total < b,
+                    };
+                    if better {
+                        best = Some((ti, total));
+                    }
+                    out.push_str("{\"device\":");
+                    write_json_str(out, &t.label);
+                    out.push_str(",\"total_ms\":");
+                    write_json_f64(out, total);
+                    out.push('}');
+                }
+                let (bi, bms) = best.expect("a service always has targets");
+                out.push_str("],\"best\":{\"device\":");
+                write_json_str(out, &self.targets[bi].label);
+                out.push_str(",\"total_ms\":");
+                write_json_f64(out, bms);
+                out.push_str("}}");
+            } else {
+                let total = self.cache.get_or_compile(&target.compiled, &graph).total_ms(kind);
+                out.push_str("{\"network\":");
+                write_json_str(out, &graph.name);
+                out.push_str(",\"total_ms\":");
+                write_json_f64(out, total);
+                out.push('}');
+            }
+        }
+        record_stage_lap(sw, STAGE_SCORE);
+        out.push_str("]}");
         record_stage_lap(sw, STAGE_SERIALIZE);
         Ok(())
     }
@@ -774,6 +926,24 @@ mod tests {
         let x = b.conv_bn_relu(i, 16, 3, 1);
         b.classifier(x, 10);
         graph_to_value(&b.finish().unwrap()).to_string()
+    }
+
+    #[test]
+    fn serve_lines_handles_boundary_inputs() {
+        let svc = service();
+        // Empty input → empty output for any thread count.
+        assert!(svc.serve_lines("", 0).is_empty());
+        assert!(svc.serve_lines("", 8).is_empty());
+        // Zero, one, and far-oversubscribed thread counts answer
+        // byte-identically (the fan clamps to the line count).
+        let input = format!("{}\nbogus\n{}", r#"{"op":"health"}"#, r#"{"op":"models"}"#);
+        let base = svc.serve_lines(&input, 1);
+        assert_eq!(base.len(), 3);
+        for threads in [0, 2, 64] {
+            assert_eq!(svc.serve_lines(&input, threads), base, "threads={threads}");
+        }
+        // A trailing newline must not grow a phantom empty-line response.
+        assert_eq!(svc.serve_lines(&format!("{input}\n"), 4), base);
     }
 
     #[test]
@@ -1035,6 +1205,182 @@ mod tests {
         );
         let resp = Value::parse(&svc.handle(&conflicted)).unwrap();
         assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(false));
+    }
+
+    /// A `graphs[i]` genotype entry for NASBench candidate `i` of `seed`,
+    /// named like [`crate::zoo::nasbench::sample_network`] names it.
+    fn genotype_entry(i: usize, seed: u64) -> String {
+        let g = crate::zoo::nasbench::sample_genotype(i, seed);
+        let mut s = String::new();
+        crate::zoo::nasbench::genotype_to_value(&g).write_into(&mut s);
+        format!(r#"{{"genotype":{s},"name":"nas-{i:04}"}}"#)
+    }
+
+    #[test]
+    fn models_op_advertises_the_batch_op() {
+        let svc = service();
+        let resp = Value::parse(&svc.handle(r#"{"op":"models"}"#)).unwrap();
+        let ops: Vec<&str> = resp
+            .req_arr("ops")
+            .unwrap()
+            .iter()
+            .map(|v| v.as_str().unwrap())
+            .collect();
+        assert!(ops.contains(&"estimate_batch"), "ops: {ops:?}");
+    }
+
+    #[test]
+    fn estimate_batch_totals_match_single_estimates_bit_for_bit() {
+        let svc = service();
+        // Mix both entry forms: two genotypes and one full graph document.
+        let req = format!(
+            r#"{{"op":"estimate_batch","kind":"mixed","graphs":[{},{},{}]}}"#,
+            genotype_entry(0, 7),
+            genotype_entry(1, 7),
+            net_json()
+        );
+        let resp = Value::parse(&svc.handle(&req)).unwrap();
+        assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(true));
+        assert_eq!(resp.req_str("op").unwrap(), "estimate_batch");
+        assert_eq!(resp.req_str("device").unwrap(), "ZCU102-DPU-sim");
+        assert_eq!(resp.req_usize("count").unwrap(), 3);
+        let results = resp.req_arr("results").unwrap();
+        assert_eq!(results.len(), 3);
+        // Each batch answer equals the single-request answer, bit for bit —
+        // genotype entries via the graph they decode to.
+        let singles = [
+            crate::graph::serial::graph_to_value(&crate::zoo::nasbench::sample_network(0, 7))
+                .to_string(),
+            crate::graph::serial::graph_to_value(&crate::zoo::nasbench::sample_network(1, 7))
+                .to_string(),
+            net_json(),
+        ];
+        for (entry, net) in results.iter().zip(&singles) {
+            let single = format!(
+                r#"{{"op":"estimate","kind":"mixed","total_only":true,"network":{net}}}"#
+            );
+            let sresp = Value::parse(&svc.handle(&single)).unwrap();
+            assert_eq!(entry.req_str("network").unwrap(), sresp.req_str("network").unwrap());
+            assert_eq!(
+                entry.req_f64("total_ms").unwrap().to_bits(),
+                sresp.req_f64("total_ms").unwrap().to_bits(),
+                "batch and single answers diverged for {}",
+                entry.req_str("network").unwrap()
+            );
+        }
+    }
+
+    #[test]
+    fn estimate_batch_isolates_entry_errors() {
+        obs::set_enabled(true);
+        let svc = service();
+        let req = format!(
+            r#"{{"op":"estimate_batch","graphs":[{},{{"genotype":{{"stem":16,"cells":[[9],[1],[2]],"growth":[2,3]}}}},{{"nonsense":1}},{}]}}"#,
+            genotype_entry(2, 7),
+            net_json()
+        );
+        let resp = Value::parse(&svc.handle(&req)).unwrap();
+        // The batch itself succeeds; the bad entries fail inline, in place.
+        assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(true));
+        assert_eq!(resp.req_usize("count").unwrap(), 4);
+        let results = resp.req_arr("results").unwrap();
+        assert!(results[0].req_f64("total_ms").unwrap() > 0.0);
+        for bad in [&results[1], &results[2]] {
+            assert_eq!(bad.get("ok").and_then(|v| v.as_bool()), Some(false));
+            assert_eq!(bad.req_str("error_kind").unwrap(), "invalid");
+            assert!(bad.get("total_ms").is_none());
+        }
+        assert!(results[3].req_f64("total_ms").unwrap() > 0.0);
+        // The inline failures are visible in telemetry under the batch op.
+        let stats = Value::parse(&svc.handle(r#"{"op":"stats"}"#)).unwrap();
+        let row = stats
+            .req("obs")
+            .unwrap()
+            .req("errors")
+            .unwrap()
+            .req("estimate_batch")
+            .unwrap();
+        assert!(row.req_usize("invalid").unwrap() >= 2);
+    }
+
+    #[test]
+    fn estimate_batch_names_unnamed_genotypes_by_index() {
+        let svc = service();
+        let g = crate::zoo::nasbench::sample_genotype(5, 7);
+        let mut s = String::new();
+        crate::zoo::nasbench::genotype_to_value(&g).write_into(&mut s);
+        let req = format!(
+            r#"{{"op":"estimate_batch","graphs":[{},{{"genotype":{s}}}]}}"#,
+            genotype_entry(0, 7)
+        );
+        let resp = Value::parse(&svc.handle(&req)).unwrap();
+        let results = resp.req_arr("results").unwrap();
+        assert_eq!(results[1].req_str("network").unwrap(), "cand-0001");
+    }
+
+    #[test]
+    fn estimate_batch_fleet_mode_matches_single_fleet_estimates() {
+        let svc = fleet_service();
+        let req = format!(
+            r#"{{"op":"estimate_batch","fleet":true,"graphs":[{}]}}"#,
+            genotype_entry(0, 7)
+        );
+        let resp = Value::parse(&svc.handle(&req)).unwrap();
+        assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(true));
+        assert!(resp.get("device").is_none(), "fleet batches answer for every device");
+        let entry = &resp.req_arr("results").unwrap()[0];
+        let per_dev = entry.req_arr("fleet").unwrap();
+        assert_eq!(per_dev.len(), 3);
+        let net = crate::graph::serial::graph_to_value(&crate::zoo::nasbench::sample_network(
+            0, 7,
+        ))
+        .to_string();
+        let single = format!(r#"{{"op":"estimate","fleet":true,"network":{net}}}"#);
+        let sresp = Value::parse(&svc.handle(&single)).unwrap();
+        let sfleet = sresp.req_arr("fleet").unwrap();
+        for (b, s) in per_dev.iter().zip(sfleet) {
+            assert_eq!(b.req_str("device").unwrap(), s.req_str("device").unwrap());
+            assert_eq!(
+                b.req_f64("total_ms").unwrap().to_bits(),
+                s.req_f64("total_ms").unwrap().to_bits()
+            );
+        }
+        assert_eq!(
+            entry.req("best").unwrap().req_str("device").unwrap(),
+            sresp.req("best").unwrap().req_str("device").unwrap()
+        );
+    }
+
+    #[test]
+    fn estimate_batch_envelope_errors_fail_the_whole_request() {
+        let svc = service();
+        // Empty batches are fine — an empty results array, not an error.
+        let resp = Value::parse(&svc.handle(r#"{"op":"estimate_batch","graphs":[]}"#)).unwrap();
+        assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(true));
+        assert_eq!(resp.req_usize("count").unwrap(), 0);
+        assert!(resp.req_arr("results").unwrap().is_empty());
+        // Envelope problems are whole-request errors: nothing partial.
+        let overcap = format!(
+            r#"{{"op":"estimate_batch","graphs":[{}]}}"#,
+            vec!["0"; ESTIMATE_BATCH_MAX + 1].join(",")
+        );
+        for bad in [
+            r#"{"op":"estimate_batch"}"#.to_string(),
+            r#"{"op":"estimate_batch","graphs":7}"#.to_string(),
+            r#"{"op":"estimate_batch","graphs":[],"kind":"warp"}"#.to_string(),
+            r#"{"op":"estimate_batch","graphs":[],"device":"gpu-h100"}"#.to_string(),
+            r#"{"op":"estimate_batch","graphs":[],"fleet":true,"device":"x"}"#.to_string(),
+            overcap,
+        ] {
+            let resp = Value::parse(&svc.handle(&bad)).unwrap();
+            assert_eq!(
+                resp.get("ok").and_then(|v| v.as_bool()),
+                Some(false),
+                "request must fail in-band: {}",
+                &bad[..bad.len().min(80)]
+            );
+            assert_eq!(resp.req_str("error_kind").unwrap(), "invalid");
+        }
     }
 
     #[test]

@@ -27,6 +27,10 @@ pub enum Error {
     /// The server is draining: late requests are refused, in-flight ones
     /// complete.
     Shutdown(String),
+    /// The service itself failed while handling the request (e.g. a worker
+    /// panic caught at the pool boundary). The request is answered in-band
+    /// and the service keeps serving.
+    Internal(String),
 }
 
 impl Error {
@@ -44,6 +48,7 @@ impl Error {
             Error::Timeout(_) => "timeout",
             Error::TooLarge(_) => "too_large",
             Error::Shutdown(_) => "shutdown",
+            Error::Internal(_) => "internal",
         }
     }
 }
@@ -59,6 +64,7 @@ impl fmt::Display for Error {
             Error::Timeout(m) => write!(f, "timeout: {m}"),
             Error::TooLarge(m) => write!(f, "too large: {m}"),
             Error::Shutdown(m) => write!(f, "shutting down: {m}"),
+            Error::Internal(m) => write!(f, "internal error: {m}"),
         }
     }
 }

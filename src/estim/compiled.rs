@@ -26,7 +26,7 @@
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard};
 
 use crate::graph::{Graph, LayerClass, LayerKind, NUM_CLASSES};
 use crate::hw::device::{class_utils, DeviceSpec};
@@ -364,12 +364,22 @@ impl CompiledGraph {
 /// without limit.
 pub const GRAPH_CACHE_CAP: usize = 4096;
 
-/// The state behind the cache mutex. `order` and `map` always hold the same
-/// key set (keys are queued exactly when freshly inserted and dequeued
+/// Default lock-shard count for [`GraphCache`]. Eight stripes keep the
+/// per-lookup critical section uncontended up to the thread counts the
+/// service runs (the bench pins 1/2/4t; the server defaults to the core
+/// count), while staying well under
+/// [`crate::obs::registry::CACHE_SHARDS_MAX`] per-shard gauges.
+pub const GRAPH_CACHE_SHARDS: usize = 8;
+
+/// The state behind one shard's mutex. `order` and `map` always hold the
+/// same key set (keys are queued exactly when freshly inserted and dequeued
 /// exactly when evicted); `fp_refs` counts how many resident entries share a
 /// graph fingerprint across model ids, which is what lets the telemetry
 /// distinguish a cold miss from a *cross-model recompile* — the same graph
-/// deliberately recompiled under a different model.
+/// deliberately recompiled under a different model. Because shard selection
+/// uses only the fingerprint (never the model id), every model's entry for
+/// a given graph lives in the same shard, so per-shard `fp_refs` sees the
+/// full cross-model picture.
 #[derive(Debug, Default)]
 struct CacheInner {
     map: HashMap<(u64, u64, u64), Arc<CompiledGraph>>,
@@ -377,18 +387,43 @@ struct CacheInner {
     fp_refs: HashMap<(u64, u64), u32>,
 }
 
-/// Bounded cache of compiled graphs, shared across threads, keyed by
-/// **compiled model id + structural fingerprint**. The per-model keying
-/// means one cache can sit behind a whole fleet of devices: the same
+/// One lock stripe: its own mutex, its own slice of the capacity budget.
+#[derive(Debug)]
+struct Shard {
+    inner: Mutex<CacheInner>,
+    cap: usize,
+}
+
+/// Bounded, **striped** cache of compiled graphs, shared across threads,
+/// keyed by **compiled model id + structural fingerprint**. The per-model
+/// keying means one cache can sit behind a whole fleet of devices: the same
 /// network compiled under N models occupies N entries instead of
 /// ping-ponging through a single slot, and an entry can never be served to
-/// the wrong model. At capacity the oldest insertion is evicted (FIFO) —
-/// eviction only ever costs a recompile, never a wrong answer, because
-/// compilation is deterministic. Lookups, misses, cross-model recompiles,
-/// and evictions are reported through [`crate::obs`].
+/// the wrong model.
+///
+/// Concurrency: the key space is striped over [`GRAPH_CACHE_SHARDS`]
+/// independent mutexes selected by fingerprint alone, so concurrent lookups
+/// of different graphs almost never contend — the fix for the service's
+/// thread-scaling regression. Striping is invisible in responses: a lookup
+/// takes exactly one shard lock and the per-graph behaviour (hit, miss,
+/// eviction-then-recompile) is the same as a single-lock cache, and
+/// compilation is deterministic, so response bytes are identical under any
+/// shard count.
+///
+/// Capacity: the global budget is split exactly across shards (shard `i`
+/// gets `cap/n`, the first `cap%n` shards one more), and each shard evicts
+/// its own oldest insertion (FIFO) at its local cap — eviction only ever
+/// costs a recompile, never a wrong answer. Lookups, misses, cross-model
+/// recompiles, evictions, per-shard sizes, and poisoned-shard recoveries
+/// are reported through [`crate::obs`].
+///
+/// Panic safety: a thread panicking inside a shard's critical section
+/// poisons only that shard; the next locker clears the shard (dropping its
+/// cached entries — recompiles, not wrong answers), counts the event in
+/// `obs.cache.poisoned`, and the cache keeps serving.
 #[derive(Debug)]
 pub struct GraphCache {
-    inner: Mutex<CacheInner>,
+    shards: Box<[Shard]>,
     cap: usize,
 }
 
@@ -403,22 +438,74 @@ impl GraphCache {
         GraphCache::default()
     }
 
-    /// A cache bounded to `cap` entries (minimum 1).
+    /// A cache bounded to `cap` entries (minimum 1) striped over the
+    /// default [`GRAPH_CACHE_SHARDS`] lock shards.
     pub fn with_capacity(cap: usize) -> GraphCache {
-        GraphCache {
-            inner: Mutex::new(CacheInner::default()),
-            cap: cap.max(1),
-        }
+        GraphCache::with_capacity_sharded(cap, GRAPH_CACHE_SHARDS)
     }
 
-    /// Maximum number of resident compilations.
+    /// A cache bounded to `cap` entries (minimum 1) striped over `shards`
+    /// lock shards. The shard count is clamped to
+    /// `1..=`[`crate::obs::registry::CACHE_SHARDS_MAX`] and never exceeds
+    /// the capacity (every shard must own at least one slot). `shards = 1`
+    /// reproduces the old single-lock cache exactly — strict global FIFO —
+    /// which the eviction-order tests pin.
+    pub fn with_capacity_sharded(cap: usize, shards: usize) -> GraphCache {
+        let cap = cap.max(1);
+        let n = shards
+            .clamp(1, crate::obs::registry::CACHE_SHARDS_MAX)
+            .min(cap);
+        let base = cap / n;
+        let extra = cap % n;
+        let shards: Box<[Shard]> = (0..n)
+            .map(|i| Shard {
+                inner: Mutex::new(CacheInner::default()),
+                cap: base + usize::from(i < extra),
+            })
+            .collect();
+        GraphCache { shards, cap }
+    }
+
+    /// Maximum number of resident compilations (summed over shards).
     pub fn capacity(&self) -> usize {
         self.cap
     }
 
-    /// Number of cached (model, graph) compilations.
+    /// Number of lock shards the key space is striped over.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Shard owning fingerprint `fp`. Model id deliberately excluded — see
+    /// [`CacheInner`] on cross-model accounting.
+    fn shard_for(&self, fp: (u64, u64)) -> usize {
+        ((fp.0 ^ fp.1) % self.shards.len() as u64) as usize
+    }
+
+    /// Lock shard `si`, recovering from poison. A panic mid-update may have
+    /// left `map`/`order`/`fp_refs` mutually inconsistent, so the repair
+    /// drops the shard's entries — they are cached *derivations*, so the
+    /// cost is recompiles, never wrong answers.
+    fn lock_shard(&self, si: usize) -> MutexGuard<'_, CacheInner> {
+        let (mut g, poisoned) = crate::sync::lock_recover(&self.shards[si].inner);
+        if poisoned {
+            g.map.clear();
+            g.order.clear();
+            g.fp_refs.clear();
+            if crate::obs::enabled() {
+                let r = crate::obs::global();
+                r.cache_poisoned.incr();
+                r.cache_shard_sizes[si].set(0);
+            }
+        }
+        g
+    }
+
+    /// Number of cached (model, graph) compilations, summed over shards.
     pub fn len(&self) -> usize {
-        self.inner.lock().expect("graph cache poisoned").map.len()
+        (0..self.shards.len())
+            .map(|si| self.lock_shard(si).map.len())
+            .sum()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -426,16 +513,18 @@ impl GraphCache {
     }
 
     /// Return the compiled form of `g` under `model`, compiling on first
-    /// sight. A cache hit costs one O(n) fingerprint pass plus a map lookup
-    /// and performs no allocation. The model id is part of the key, so a
-    /// cache shared across devices (the fleet service) keeps one entry per
-    /// (model, graph) pair and never answers from another model's tables.
+    /// sight. A cache hit costs one O(n) fingerprint pass plus one shard
+    /// lock and a map lookup, and performs no allocation. The model id is
+    /// part of the key, so a cache shared across devices (the fleet
+    /// service) keeps one entry per (model, graph) pair and never answers
+    /// from another model's tables.
     pub fn get_or_compile(&self, model: &CompiledModel, g: &Graph) -> Arc<CompiledGraph> {
         let fp = g.fingerprint();
         let key = (model.id, fp.0, fp.1);
+        let si = self.shard_for(fp);
         let telemetry = crate::obs::enabled();
         let cross_model = {
-            let inner = self.inner.lock().expect("graph cache poisoned");
+            let inner = self.lock_shard(si);
             if let Some(cg) = inner.map.get(&key) {
                 // Belt-and-braces against fingerprint collisions: the cheap
                 // invariants must also match.
@@ -464,12 +553,13 @@ impl GraphCache {
         if let Some(us) = sw.elapsed_us() {
             crate::obs::global().record_stage(crate::obs::registry::STAGE_COMPILE, us);
         }
+        let shard_cap = self.shards[si].cap;
         let mut evicted = 0u64;
-        let size;
+        let shard_size;
         {
-            let mut inner = self.inner.lock().expect("graph cache poisoned");
+            let mut inner = self.lock_shard(si);
             if !inner.map.contains_key(&key) {
-                while inner.map.len() >= self.cap {
+                while inner.map.len() >= shard_cap {
                     let Some(old) = inner.order.pop_front() else {
                         break;
                     };
@@ -488,17 +578,34 @@ impl GraphCache {
                 *inner.fp_refs.entry(fp).or_insert(0) += 1;
             }
             inner.map.insert(key, Arc::clone(&cg));
-            size = inner.map.len() as u64;
+            shard_size = inner.map.len() as u64;
         }
         if telemetry {
             let r = crate::obs::global();
             if evicted > 0 {
                 r.cache_evictions.add(evicted);
             }
-            r.cache_size.set(size);
+            r.cache_shard_sizes[si].set(shard_size);
+            r.cache_size.set(self.len() as u64);
             r.cache_capacity.set(self.cap as u64);
+            r.cache_shards.set(self.shards.len() as u64);
         }
         cg
+    }
+
+    /// Test hook: poison the shard that owns fingerprint `fp` by panicking
+    /// a thread while it holds the shard lock.
+    #[cfg(test)]
+    pub(crate) fn poison_shard_for(&self, fp: (u64, u64)) {
+        let shard = &self.shards[self.shard_for(fp)];
+        std::thread::scope(|s| {
+            let h = s.spawn(|| {
+                let _g = shard.inner.lock().unwrap();
+                panic!("poison the cache shard on purpose");
+            });
+            assert!(h.join().is_err(), "the poisoning thread must panic");
+        });
+        assert!(shard.inner.is_poisoned(), "setup: shard must be poisoned");
     }
 }
 
@@ -644,8 +751,12 @@ mod tests {
     fn bounded_cache_evicts_oldest_first() {
         let model = fitted();
         let cm = CompiledModel::compile(&model);
-        let cache = GraphCache::with_capacity(2);
+        // One shard: strict global FIFO, the exact single-lock behaviour.
+        // (With multiple shards FIFO holds per shard, and which graph maps
+        // to which shard depends on the per-process fingerprint seeds.)
+        let cache = GraphCache::with_capacity_sharded(2, 1);
         assert_eq!(cache.capacity(), 2);
+        assert_eq!(cache.shard_count(), 1);
         let graphs: Vec<Graph> = (0..3usize)
             .map(|k| {
                 let mut b = GraphBuilder::new("ev");
@@ -680,9 +791,128 @@ mod tests {
         let cm = CompiledModel::compile(&model);
         let cache = GraphCache::with_capacity(0);
         assert_eq!(cache.capacity(), 1);
+        assert_eq!(cache.shard_count(), 1, "one slot cannot stripe");
         let g = net();
         let a = cache.get_or_compile(&cm, &g);
         assert!(Arc::ptr_eq(&a, &cache.get_or_compile(&cm, &g)));
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn shard_budget_distributes_the_capacity_exactly() {
+        // Default: 8 shards under the default cap.
+        let c = GraphCache::new();
+        assert_eq!(c.capacity(), GRAPH_CACHE_CAP);
+        assert_eq!(c.shard_count(), GRAPH_CACHE_SHARDS);
+        // Uneven split: 10 over 3 shards → 4 + 3 + 3.
+        let c = GraphCache::with_capacity_sharded(10, 3);
+        assert_eq!(c.shard_count(), 3);
+        assert_eq!(
+            c.shards.iter().map(|s| s.cap).collect::<Vec<_>>(),
+            vec![4, 3, 3]
+        );
+        assert_eq!(c.shards.iter().map(|s| s.cap).sum::<usize>(), 10);
+        // Shards never exceed capacity (every shard owns ≥ 1 slot)...
+        let c = GraphCache::with_capacity_sharded(2, 8);
+        assert_eq!(c.shard_count(), 2);
+        assert!(c.shards.iter().all(|s| s.cap == 1));
+        // ...and never exceed the per-shard obs gauge bound.
+        let c = GraphCache::with_capacity_sharded(4096, 64);
+        assert_eq!(c.shard_count(), crate::obs::registry::CACHE_SHARDS_MAX);
+    }
+
+    #[test]
+    fn sharded_cache_enforces_the_global_budget_and_counts_evictions() {
+        crate::obs::set_enabled(true);
+        let model = fitted();
+        let cm = CompiledModel::compile(&model);
+        let cache = GraphCache::with_capacity_sharded(4, 4);
+        let graphs: Vec<Graph> = (0..12usize)
+            .map(|k| {
+                let mut b = GraphBuilder::new("shard");
+                let i = b.input(16, 16, 4);
+                let x = b.conv_bn_relu(i, 8 + k, 3, 1);
+                b.classifier(x, 10);
+                b.finish().unwrap()
+            })
+            .collect();
+        let before = crate::obs::global().snapshot();
+        let firsts: Vec<Arc<CompiledGraph>> =
+            graphs.iter().map(|g| cache.get_or_compile(&cm, g)).collect();
+        // Residency never exceeds the global budget, whatever the shard mix.
+        let len = cache.len();
+        assert!(len <= 4, "cap 4 over 4 shards held {len}");
+        assert!(len >= 1);
+        let after = crate::obs::global().snapshot();
+        // 12 distinct graphs through a budget of 4: at least 8 evictions,
+        // summed across shards (≥ because the registry is process-global).
+        assert!(
+            after.cache_evictions - before.cache_evictions >= (12 - len) as u64,
+            "evictions must sum across shards"
+        );
+        assert!(after.cache_misses - before.cache_misses >= 12);
+        // Eviction never changes an answer: recompiled totals are
+        // bit-identical.
+        for (g, first) in graphs.iter().zip(&firsts) {
+            let again = cache.get_or_compile(&cm, g);
+            assert_eq!(
+                first.total_ms(ModelKind::Mixed).to_bits(),
+                again.total_ms(ModelKind::Mixed).to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn cross_model_recompiles_are_detected_across_shards() {
+        crate::obs::set_enabled(true);
+        let model = fitted();
+        let cm_a = CompiledModel::compile(&model);
+        let cm_b = CompiledModel::compile(&model);
+        let cache = GraphCache::with_capacity_sharded(64, 8);
+        let g = net();
+        let before = crate::obs::global().snapshot();
+        let _ = cache.get_or_compile(&cm_a, &g);
+        // Same fingerprint, different model id: shard selection ignores the
+        // model id, so the second model's miss sees the resident entry and
+        // counts as a cross-model recompile.
+        let _ = cache.get_or_compile(&cm_b, &g);
+        let after = crate::obs::global().snapshot();
+        assert!(
+            after.cache_recompiles - before.cache_recompiles >= 1,
+            "fingerprint-only sharding must preserve cross-model detection"
+        );
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn poisoned_shard_recovers_and_keeps_serving() {
+        crate::obs::set_enabled(true);
+        let model = fitted();
+        let cm = CompiledModel::compile(&model);
+        let cache = GraphCache::new();
+        let g = net();
+        let a = cache.get_or_compile(&cm, &g);
+        assert_eq!(cache.len(), 1);
+
+        let before = crate::obs::global().snapshot();
+        cache.poison_shard_for(g.fingerprint());
+        // The next lookup must not panic: the poisoned shard is cleared
+        // (dropping the cached entry), the event is counted, and the graph
+        // recompiles to the same answer.
+        let b = cache.get_or_compile(&cm, &g);
+        assert!(
+            !Arc::ptr_eq(&a, &b),
+            "the poisoned shard's entries must have been dropped"
+        );
+        assert_eq!(
+            a.total_ms(ModelKind::Mixed).to_bits(),
+            b.total_ms(ModelKind::Mixed).to_bits(),
+            "recovery must never change an answer"
+        );
+        let after = crate::obs::global().snapshot();
+        assert!(after.cache_poisoned > before.cache_poisoned);
+        // Fully healthy afterwards: the recompile is resident and hits.
+        assert!(Arc::ptr_eq(&b, &cache.get_or_compile(&cm, &g)));
         assert_eq!(cache.len(), 1);
     }
 }

@@ -74,6 +74,7 @@ pub mod obs;
 pub mod par;
 pub mod repro;
 pub mod rng;
+pub mod sync;
 pub mod zoo;
 
 pub use error::{Error, Result};

@@ -14,18 +14,31 @@
 //! workers exit, so a graceful server drain completes in-flight work
 //! instead of dropping it.
 //!
+//! **Panic safety.** The pool is the crate's panic boundary: a handler
+//! that panics is caught ([`std::panic::catch_unwind`]), the triggering
+//! request is answered with an in-band `internal` error line, the event is
+//! counted (`obs.server.worker_panics`), and the worker keeps serving. The
+//! queue, worker-list, and writer locks all recover from poison
+//! ([`crate::sync`]) instead of `.expect`-cascading, so one bad request
+//! can never take the whole service down.
+//!
 //! [`handle_into`]: crate::coordinator::Service::handle_into
 
 use std::collections::VecDeque;
 use std::io::Write;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::Sender;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
+use crate::sync::{lock_recover, wait_recover};
+
 /// Fills `out` (clearing it first) with the single-line response to the
-/// request line. Must never panic on any input — the service contract.
+/// request line. Should never panic on any input — the service contract —
+/// but if it does, the worker catches the unwind, answers the request with
+/// an in-band `internal` error, and keeps serving.
 pub type Handler = dyn Fn(&str, &mut String) + Send + Sync;
 
 /// One queued request: the raw line, where to write the framed response,
@@ -89,7 +102,10 @@ impl Pool {
     /// is at capacity (the caller sheds it) or the pool is stopping (the
     /// caller refuses it as `shutdown`).
     pub fn try_submit(&self, job: Job) -> Result<(), Job> {
-        let mut q = self.inner.queue.lock().expect("pool queue poisoned");
+        // Queued jobs survive a poisoned lock unchanged: nothing in the
+        // critical sections half-mutates the queue, so recovery needs no
+        // repair beyond clearing the flag.
+        let (mut q, _) = lock_recover(&self.inner.queue);
         if self.inner.stop.load(Ordering::Acquire) || q.len() >= self.inner.cap {
             return Err(job);
         }
@@ -100,7 +116,7 @@ impl Pool {
 
     /// Jobs currently queued (not yet picked up by a worker).
     pub fn queued(&self) -> usize {
-        self.inner.queue.lock().expect("pool queue poisoned").len()
+        lock_recover(&self.inner.queue).0.len()
     }
 
     /// Stop accepting, finish every queued job, and join the workers.
@@ -108,12 +124,7 @@ impl Pool {
     pub fn shutdown(&self) {
         self.inner.stop.store(true, Ordering::Release);
         self.inner.ready.notify_all();
-        let handles: Vec<_> = self
-            .workers
-            .lock()
-            .expect("pool worker list poisoned")
-            .drain(..)
-            .collect();
+        let handles: Vec<_> = lock_recover(&self.workers).0.drain(..).collect();
         for h in handles {
             let _ = h.join();
         }
@@ -132,7 +143,7 @@ fn worker_loop(inner: &Inner) {
     let mut buf = String::with_capacity(256);
     loop {
         let job = {
-            let mut q = inner.queue.lock().expect("pool queue poisoned");
+            let (mut q, _) = lock_recover(&inner.queue);
             loop {
                 if let Some(j) = q.pop_front() {
                     break j;
@@ -141,16 +152,33 @@ fn worker_loop(inner: &Inner) {
                 if inner.stop.load(Ordering::Acquire) {
                     return;
                 }
-                q = inner.ready.wait(q).expect("pool queue poisoned");
+                q = wait_recover(&inner.ready, &inner.queue, q).0;
             }
         };
         if !inner.delay.is_zero() {
             std::thread::sleep(inner.delay);
         }
-        (inner.handler)(&job.line, &mut buf);
+        // The panic boundary: a handler panic answers *this* request with
+        // an in-band `internal` error instead of unwinding through the
+        // worker (which would poison shared locks and, pre-recovery, cascade
+        // into a total outage). `buf` is fully overwritten on both branches,
+        // so catching the unwind leaves no half-written state behind.
+        let handled = catch_unwind(AssertUnwindSafe(|| (inner.handler)(&job.line, &mut buf)));
+        if handled.is_err() {
+            if crate::obs::enabled() {
+                let r = crate::obs::global();
+                r.srv_worker_panics.incr();
+                r.record_error(None, "internal");
+            }
+            let e = crate::error::Error::Internal(
+                "request handler panicked; this request failed, the service continues"
+                    .to_string(),
+            );
+            crate::coordinator::Service::write_error_line(&e, &mut buf);
+        }
         buf.push('\n');
         let res = {
-            let mut out = job.out.lock().expect("connection writer poisoned");
+            let (mut out, _) = lock_recover(&job.out);
             out.write_all(buf.as_bytes()).and_then(|()| out.flush())
         };
         // The connection may already have hung up; it simply misses the ack.
@@ -233,6 +261,46 @@ mod tests {
         for _ in 0..2 {
             rx.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
         }
+    }
+
+    #[test]
+    fn panicking_handler_answers_internal_and_the_worker_keeps_serving() {
+        crate::obs::set_enabled(true);
+        let before = crate::obs::global().snapshot();
+        // One worker, so the panicking job and the follow-ups are handled
+        // by the *same* thread — proving the worker survives the unwind.
+        let pool = Pool::new(1, 8, Duration::ZERO, |line, out| {
+            if line.contains("boom") {
+                panic!("injected handler panic");
+            }
+            out.clear();
+            out.push_str("echo:");
+            out.push_str(line);
+        });
+        let sink = Sink::default();
+        let (tx, rx) = mpsc::channel();
+        pool.try_submit(job("a", &sink, &tx)).map_err(|_| ()).unwrap();
+        pool.try_submit(job("boom", &sink, &tx)).map_err(|_| ()).unwrap();
+        pool.try_submit(job("b", &sink, &tx)).map_err(|_| ()).unwrap();
+        for _ in 0..3 {
+            // Every job acks — including the panicked one — and every
+            // write succeeded.
+            rx.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
+        }
+        let text = String::from_utf8(sink.0.lock().unwrap().clone()).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        // One worker: responses arrive in submission order.
+        assert_eq!(lines[0], "echo:a");
+        assert!(
+            lines[1].contains("\"ok\":false") && lines[1].contains("\"error_kind\":\"internal\""),
+            "panicked request must get an in-band internal error: {:?}",
+            lines[1]
+        );
+        assert_eq!(lines[2], "echo:b", "the worker must keep serving after the panic");
+        let after = crate::obs::global().snapshot();
+        assert!(after.srv_worker_panics > before.srv_worker_panics);
+        pool.shutdown();
     }
 
     #[test]

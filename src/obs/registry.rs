@@ -14,7 +14,14 @@ use crate::obs::hist::{HistSnapshot, Histogram};
 
 /// Service ops tracked per-request. Order is the wire order in snapshots;
 /// later additions append so existing field positions never move.
-pub const OP_NAMES: [&str; 5] = ["models", "estimate", "explore", "stats", "health"];
+pub const OP_NAMES: [&str; 6] = [
+    "models",
+    "estimate",
+    "explore",
+    "stats",
+    "health",
+    "estimate_batch",
+];
 
 /// Error-attribution rows: one per op plus `other` for requests whose op
 /// could not be determined (unparseable line, unknown op).
@@ -22,8 +29,9 @@ pub const OP_OTHER: usize = OP_NAMES.len();
 
 /// Error kinds, mirroring [`crate::error::Error::kind`], plus a trailing
 /// `other` column that absorbs any kind string the registry does not know
-/// — a forward-compatibility valve, not a real kind.
-pub const KIND_NAMES: [&str; 9] = [
+/// — a forward-compatibility valve, not a real kind. New kinds are
+/// inserted before `other`, which stays last.
+pub const KIND_NAMES: [&str; 10] = [
     "io",
     "json",
     "invalid",
@@ -32,6 +40,7 @@ pub const KIND_NAMES: [&str; 9] = [
     "timeout",
     "too_large",
     "shutdown",
+    "internal",
     "other",
 ];
 
@@ -56,6 +65,11 @@ pub const FAMILY_ELISION: usize = 3;
 /// Per-worker fan-out slots. Workers beyond this index fold into the last
 /// slot; the orchestrator caps at 8 threads so 16 is generous.
 pub const WORKERS_MAX: usize = 16;
+
+/// Per-shard GraphCache size gauges. Must be ≥ the largest shard count a
+/// cache is built with ([`crate::estim::compiled::GraphCache`] clamps to
+/// this bound).
+pub const CACHE_SHARDS_MAX: usize = 16;
 
 /// All metrics the pipeline records. Fields are public: instrumentation
 /// sites touch exactly the counter they need, guarded by
@@ -83,6 +97,12 @@ pub struct Registry {
     pub cache_size: Gauge,
     /// Configured capacity of the most recently touched cache.
     pub cache_capacity: Gauge,
+    /// Shard count of the most recently touched cache.
+    pub cache_shards: Gauge,
+    /// Poisoned cache shards recovered (shard cleared, service continued).
+    pub cache_poisoned: Counter,
+    /// Per-shard entry counts of the most recently touched cache.
+    pub cache_shard_sizes: [Gauge; CACHE_SHARDS_MAX],
 
     /// Items pulled, busy time, and idle time per fan-out worker slot.
     pub fan_items: [Counter; WORKERS_MAX],
@@ -117,6 +137,9 @@ pub struct Registry {
     pub srv_too_large: Counter,
     pub srv_active: Gauge,
     pub srv_drains: Counter,
+    /// Worker panics caught at the pool boundary: the request was answered
+    /// with an in-band `internal` error and the worker kept serving.
+    pub srv_worker_panics: Counter,
 }
 
 impl Default for Registry {
@@ -137,6 +160,9 @@ impl Registry {
             cache_evictions: Counter::new(),
             cache_size: Gauge::new(),
             cache_capacity: Gauge::new(),
+            cache_shards: Gauge::new(),
+            cache_poisoned: Counter::new(),
+            cache_shard_sizes: std::array::from_fn(|_| Gauge::new()),
             fan_items: std::array::from_fn(|_| Counter::new()),
             fan_busy_us: std::array::from_fn(|_| Counter::new()),
             fan_idle_us: std::array::from_fn(|_| Counter::new()),
@@ -155,6 +181,7 @@ impl Registry {
             srv_too_large: Counter::new(),
             srv_active: Gauge::new(),
             srv_drains: Counter::new(),
+            srv_worker_panics: Counter::new(),
         }
     }
 
@@ -194,6 +221,9 @@ impl Registry {
             cache_evictions: self.cache_evictions.value(),
             cache_size: self.cache_size.value(),
             cache_capacity: self.cache_capacity.value(),
+            cache_shards: self.cache_shards.value(),
+            cache_poisoned: self.cache_poisoned.value(),
+            cache_shard_sizes: std::array::from_fn(|i| self.cache_shard_sizes[i].value()),
             fan: std::array::from_fn(|w| WorkerStats {
                 items: self.fan_items[w].value(),
                 busy_us: self.fan_busy_us[w].value(),
@@ -214,6 +244,7 @@ impl Registry {
             srv_too_large: self.srv_too_large.value(),
             srv_active: self.srv_active.value(),
             srv_drains: self.srv_drains.value(),
+            srv_worker_panics: self.srv_worker_panics.value(),
         }
     }
 
@@ -235,6 +266,7 @@ impl Registry {
         self.cache_misses.reset();
         self.cache_recompiles.reset();
         self.cache_evictions.reset();
+        self.cache_poisoned.reset();
         for w in 0..WORKERS_MAX {
             self.fan_items[w].reset();
             self.fan_busy_us[w].reset();
@@ -256,6 +288,7 @@ impl Registry {
         self.srv_idle_closed.reset();
         self.srv_too_large.reset();
         self.srv_drains.reset();
+        self.srv_worker_panics.reset();
     }
 }
 
@@ -286,6 +319,9 @@ pub struct Snapshot {
     pub cache_evictions: u64,
     pub cache_size: u64,
     pub cache_capacity: u64,
+    pub cache_shards: u64,
+    pub cache_poisoned: u64,
+    pub cache_shard_sizes: [u64; CACHE_SHARDS_MAX],
     pub fan: [WorkerStats; WORKERS_MAX],
     pub campaign: [HistSnapshot; FAMILY_NAMES.len()],
     pub explore_generations: u64,
@@ -302,6 +338,7 @@ pub struct Snapshot {
     pub srv_too_large: u64,
     pub srv_active: u64,
     pub srv_drains: u64,
+    pub srv_worker_panics: u64,
 }
 
 fn int(n: u64) -> Value {
@@ -353,6 +390,17 @@ impl Snapshot {
                 .map(|(name, h)| (name.to_string(), h.to_value()))
                 .collect(),
         );
+        // Shard-size array truncated after the last non-zero slot (same
+        // pure-function-of-the-counts rule as `fan.workers` below).
+        let last_shard = self
+            .cache_shard_sizes
+            .iter()
+            .rposition(|&n| n != 0)
+            .map_or(0, |i| i + 1);
+        let shard_sizes: Vec<Value> = self.cache_shard_sizes[..last_shard]
+            .iter()
+            .map(|&n| int(n))
+            .collect();
         let cache = Value::Obj(vec![
             ("hits".to_string(), int(self.cache_hits)),
             ("misses".to_string(), int(self.cache_misses)),
@@ -360,6 +408,9 @@ impl Snapshot {
             ("evictions".to_string(), int(self.cache_evictions)),
             ("size".to_string(), int(self.cache_size)),
             ("capacity".to_string(), int(self.cache_capacity)),
+            ("shards".to_string(), int(self.cache_shards)),
+            ("poisoned".to_string(), int(self.cache_poisoned)),
+            ("shard_sizes".to_string(), Value::Arr(shard_sizes)),
         ]);
         let last_active = self
             .fan
@@ -401,6 +452,7 @@ impl Snapshot {
             ("too_large".to_string(), int(self.srv_too_large)),
             ("active".to_string(), int(self.srv_active)),
             ("drains".to_string(), int(self.srv_drains)),
+            ("worker_panics".to_string(), int(self.srv_worker_panics)),
         ]);
         Value::Obj(vec![
             ("format".to_string(), Value::str("annette-obs.v1")),
@@ -482,6 +534,36 @@ mod tests {
         assert_eq!(srv.req_usize("shed").unwrap(), 1);
         assert_eq!(srv.req_usize("active").unwrap(), 1);
         assert_eq!(srv.req_usize("rejected_cap").unwrap(), 0);
+    }
+
+    #[test]
+    fn sharded_cache_and_worker_panic_fields_serialize() {
+        let r = Registry::new();
+        r.cache_shards.set(8);
+        r.cache_poisoned.incr();
+        r.cache_shard_sizes[0].set(3);
+        r.cache_shard_sizes[2].set(1);
+        r.srv_worker_panics.add(2);
+        // `internal` is a first-class kind column, and `estimate_batch` a
+        // first-class op row.
+        let batch_op = Registry::op_index("estimate_batch").unwrap();
+        r.record_error(Some(batch_op), "internal");
+        let v = r.snapshot().to_value();
+        let cache = v.get("cache").unwrap();
+        assert_eq!(cache.req_usize("shards").unwrap(), 8);
+        assert_eq!(cache.req_usize("poisoned").unwrap(), 1);
+        // Truncated after the last non-zero slot, zeros in between kept.
+        let sizes = cache.req_arr("shard_sizes").unwrap();
+        assert_eq!(sizes.len(), 3);
+        assert_eq!(sizes[0].as_usize(), Some(3));
+        assert_eq!(sizes[1].as_usize(), Some(0));
+        assert_eq!(sizes[2].as_usize(), Some(1));
+        let row = v.get("errors").unwrap().get("estimate_batch").unwrap();
+        assert_eq!(row.req_usize("internal").unwrap(), 1);
+        let srv = v.get("server").unwrap();
+        assert_eq!(srv.req_usize("worker_panics").unwrap(), 2);
+        // `other` must remain the trailing kind column.
+        assert_eq!(KIND_NAMES[KIND_OTHER], "other");
     }
 
     #[test]

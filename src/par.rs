@@ -108,6 +108,20 @@ mod tests {
     }
 
     #[test]
+    fn degenerate_inputs_stay_on_the_calling_thread() {
+        // threads <= 1 and n <= 1 are the documented sequential paths: no
+        // worker threads are spawned, so `f` runs on the caller. The zero
+        // and oversubscribed thread counts clamp instead of panicking.
+        let caller = std::thread::current().id();
+        let ids = fan_indexed(1, 64, |_| std::thread::current().id());
+        assert_eq!(ids, vec![caller]);
+        for threads in [0, 1] {
+            let ids = fan_indexed(3, threads, |_| std::thread::current().id());
+            assert!(ids.iter().all(|&id| id == caller), "threads={threads}");
+        }
+    }
+
+    #[test]
     fn uneven_work_still_lands_in_order() {
         // Make late indices cheap and early ones expensive so workers finish
         // out of submission order.

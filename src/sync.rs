@@ -1,0 +1,152 @@
+//! Poison-tolerant lock helpers for the serving hot path.
+//!
+//! `std::sync::Mutex` poisons itself when a thread panics while holding
+//! the guard, and every later `lock().expect(...)` then panics too. On a
+//! server that turns one bad request into a total outage: the first
+//! panicking worker poisons a shared lock (graph-cache shard, pool queue,
+//! connection writer) and every subsequent request dies on the same
+//! `.expect`. The crate-wide policy (docs/ARCHITECTURE.md § Serving) is
+//! therefore *recover, repair, report*:
+//!
+//! 1. take the guard anyway ([`PoisonError::into_inner`]),
+//! 2. clear the poison flag so later lockers see a healthy mutex,
+//! 3. return a `poisoned` flag so the call site can repair any state the
+//!    interrupted critical section may have left inconsistent (e.g. clear
+//!    a cache shard) and count the event in obs.
+//!
+//! The helpers never panic and never block beyond the underlying lock.
+
+use std::sync::{Condvar, Mutex, MutexGuard};
+use std::time::Duration;
+
+/// Lock `m`, recovering from poison. Returns the guard plus `true` when
+/// the lock was poisoned — the caller decides what state to repair; the
+/// poison flag itself is already cleared.
+#[inline]
+pub fn lock_recover<T: ?Sized>(m: &Mutex<T>) -> (MutexGuard<'_, T>, bool) {
+    match m.lock() {
+        Ok(g) => (g, false),
+        Err(p) => {
+            m.clear_poison();
+            (p.into_inner(), true)
+        }
+    }
+}
+
+/// [`Condvar::wait`] that recovers from poison on wake. `m` must be the
+/// mutex the guard came from (needed to clear the poison flag). Every
+/// caller in this crate re-checks its predicate in a loop, so a poisoned
+/// wake needs no special signalling beyond the flag.
+#[inline]
+pub fn wait_recover<'a, T: ?Sized>(
+    cv: &Condvar,
+    m: &Mutex<T>,
+    g: MutexGuard<'a, T>,
+) -> (MutexGuard<'a, T>, bool) {
+    match cv.wait(g) {
+        Ok(g) => (g, false),
+        Err(p) => {
+            m.clear_poison();
+            (p.into_inner(), true)
+        }
+    }
+}
+
+/// [`Condvar::wait_timeout`] that recovers from poison on wake. `m` must
+/// be the mutex the guard came from (needed to clear the poison flag).
+/// Returns the reacquired guard plus the poisoned flag; the timed-out /
+/// notified distinction is intentionally dropped — every caller in this
+/// crate re-checks its predicate in a loop.
+#[inline]
+pub fn wait_timeout_recover<'a, T: ?Sized>(
+    cv: &Condvar,
+    m: &Mutex<T>,
+    g: MutexGuard<'a, T>,
+    dur: Duration,
+) -> (MutexGuard<'a, T>, bool) {
+    match cv.wait_timeout(g, dur) {
+        Ok((g, _timeout)) => (g, false),
+        Err(p) => {
+            m.clear_poison();
+            (p.into_inner().0, true)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Condvar, Mutex};
+
+    fn poison(m: &Arc<Mutex<Vec<u32>>>) {
+        let m2 = Arc::clone(m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison the lock on purpose");
+        })
+        .join();
+        assert!(m.is_poisoned(), "setup: the lock must be poisoned");
+    }
+
+    #[test]
+    fn lock_recover_reports_and_clears_poison() {
+        let m = Arc::new(Mutex::new(vec![1, 2, 3]));
+        poison(&m);
+
+        let (mut g, was_poisoned) = lock_recover(&m);
+        assert!(was_poisoned);
+        g.push(4);
+        drop(g);
+
+        // The flag is cleared: the next locker sees a healthy mutex and
+        // the data written under the recovered guard.
+        assert!(!m.is_poisoned());
+        let (g, was_poisoned) = lock_recover(&m);
+        assert!(!was_poisoned);
+        assert_eq!(*g, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn lock_recover_is_transparent_on_a_healthy_mutex() {
+        let m = Mutex::new(7u64);
+        let (g, was_poisoned) = lock_recover(&m);
+        assert!(!was_poisoned);
+        assert_eq!(*g, 7);
+    }
+
+    #[test]
+    fn wait_timeout_recover_survives_a_poisoned_wake() {
+        // A thread panicking between lock and notify poisons the mutex the
+        // condvar guards; the waiter must come back with the guard anyway.
+        let pair = Arc::new((Mutex::new(0u32), Condvar::new()));
+        let waiter = {
+            let pair = Arc::clone(&pair);
+            std::thread::spawn(move || {
+                let (m, cv) = &*pair;
+                let (g, _) = lock_recover(m);
+                let (g, _poisoned) = wait_timeout_recover(cv, m, g, Duration::from_secs(5));
+                *g
+            })
+        };
+        // Give the waiter a moment to enter the wait, then poison + notify.
+        std::thread::sleep(Duration::from_millis(50));
+        {
+            let pair = Arc::clone(&pair);
+            let _ = std::thread::spawn(move || {
+                let (m, cv) = &*pair;
+                let mut g = m.lock().unwrap();
+                *g = 42;
+                cv.notify_all();
+                drop(g);
+                let _g = m.lock().unwrap();
+                panic!("poison after notify");
+            })
+            .join();
+        }
+        let got = waiter.join().expect("waiter must not panic");
+        // Either wake order is fine; the waiter must observe the write or
+        // time out cleanly — never panic.
+        assert!(got == 42 || got == 0);
+        assert!(!pair.0.is_poisoned());
+    }
+}

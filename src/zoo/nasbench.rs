@@ -15,7 +15,9 @@
 //! draws from the RNG in exactly the historical order, so the streams are
 //! unchanged.
 
+use crate::error::{Error, Result};
 use crate::graph::{Graph, GraphBuilder};
+use crate::json::Value;
 use crate::rng::{Rng, PHI};
 
 /// Stem-convolution channel choices the sampler draws from.
@@ -182,6 +184,82 @@ fn remove_cell(g: &mut NasGenotype, rng: &mut Rng) -> bool {
     true
 }
 
+/// Serialize a genotype as a JSON value:
+/// `{"stem":N,"cells":[[…],[…],[…]],"growth":[a,b]}`.
+///
+/// The compact wire form of one candidate — tens of bytes against the
+/// kilobytes of a realized `annette-graph.v1` document — used by the
+/// service's `estimate_batch` op and the bench harness to carry thousands
+/// of candidates in a single request line.
+pub fn genotype_to_value(g: &NasGenotype) -> Value {
+    let cells = g
+        .cells
+        .iter()
+        .map(|stack| Value::Arr(stack.iter().map(|&op| Value::int(op as usize)).collect()))
+        .collect();
+    let growth = g.growth.iter().map(|&x| Value::int(x)).collect();
+    Value::Obj(vec![
+        ("stem".to_string(), Value::int(g.stem)),
+        ("cells".to_string(), Value::Arr(cells)),
+        ("growth".to_string(), Value::Arr(growth)),
+    ])
+}
+
+/// Parse a genotype from its [`genotype_to_value`] wire form, enforcing
+/// the sampler's invariants (stack count, cells per stack, operator and
+/// growth ranges) so a decoded graph is always one the search space could
+/// itself have produced. The stem width is bounded by the decoder's
+/// buildable range rather than pinned to [`STEM_CHOICES`]: hand-written
+/// candidates outside the sampled widths are legitimate.
+pub fn genotype_from_value(v: &Value) -> Result<NasGenotype> {
+    let stem = v.req_usize("stem")?;
+    if !(4..=512).contains(&stem) {
+        return Err(Error::Invalid(format!("genotype `stem` {stem} outside 4..=512")));
+    }
+    let cells_v = v.req_arr("cells")?;
+    if cells_v.len() != STACKS {
+        return Err(Error::Invalid(format!(
+            "genotype `cells` must carry exactly {STACKS} stacks, got {}",
+            cells_v.len()
+        )));
+    }
+    let mut cells: [Vec<u8>; STACKS] = Default::default();
+    for (s, stack) in cells_v.iter().enumerate() {
+        let ops = stack
+            .as_arr()
+            .ok_or_else(|| Error::Invalid(format!("genotype `cells[{s}]` is not an array")))?;
+        if ops.is_empty() || ops.len() > MAX_CELLS {
+            return Err(Error::Invalid(format!(
+                "genotype `cells[{s}]` must carry 1..={MAX_CELLS} operator codes, got {}",
+                ops.len()
+            )));
+        }
+        for op in ops {
+            let code = op.as_usize().filter(|&c| c < NUM_OPS).ok_or_else(|| {
+                Error::Invalid(format!(
+                    "genotype `cells[{s}]` operator codes must be integers below {NUM_OPS}"
+                ))
+            })?;
+            cells[s].push(code as u8);
+        }
+    }
+    let growth_v = v.req_arr("growth")?;
+    if growth_v.len() != STACKS - 1 {
+        return Err(Error::Invalid(format!(
+            "genotype `growth` must carry exactly {} offsets, got {}",
+            STACKS - 1,
+            growth_v.len()
+        )));
+    }
+    let mut growth = [0usize; STACKS - 1];
+    for (k, gv) in growth_v.iter().enumerate() {
+        growth[k] = gv.as_usize().filter(|&x| x < 9).ok_or_else(|| {
+            Error::Invalid(format!("genotype `growth[{k}]` must be an integer below 9"))
+        })?;
+    }
+    Ok(NasGenotype { stem, cells, growth })
+}
+
 /// Deterministically sample candidate `i` of the stream identified by `seed`.
 pub fn sample_network(i: usize, seed: u64) -> Graph {
     decode(&sample_genotype(i, seed), &format!("nas-{i:04}"))
@@ -232,6 +310,47 @@ mod tests {
             }
             assert!(g.growth.iter().all(|&x| x < 9));
         }
+    }
+
+    #[test]
+    fn genotype_json_round_trips_exactly() {
+        for i in 0..20 {
+            let g = sample_genotype(i, 42);
+            let mut wire = String::new();
+            genotype_to_value(&g).write_into(&mut wire);
+            let parsed = Value::parse(&wire).unwrap();
+            assert_eq!(genotype_from_value(&parsed).unwrap(), g, "candidate {i}");
+        }
+    }
+
+    #[test]
+    fn malformed_genotype_json_is_rejected() {
+        let cases = [
+            // Wrong stack count.
+            r#"{"stem":16,"cells":[[0],[1]],"growth":[2,3]}"#,
+            // Operator code out of range.
+            r#"{"stem":16,"cells":[[0],[9],[1]],"growth":[2,3]}"#,
+            // Empty stack.
+            r#"{"stem":16,"cells":[[],[1],[2]],"growth":[2,3]}"#,
+            // Too many cells in a stack.
+            r#"{"stem":16,"cells":[[0,1,2,3],[1],[2]],"growth":[2,3]}"#,
+            // Growth offset out of range.
+            r#"{"stem":16,"cells":[[0],[1],[2]],"growth":[2,9]}"#,
+            // Wrong growth count.
+            r#"{"stem":16,"cells":[[0],[1],[2]],"growth":[2]}"#,
+            // Stem outside the buildable range.
+            r#"{"stem":2,"cells":[[0],[1],[2]],"growth":[2,3]}"#,
+            // Missing field.
+            r#"{"cells":[[0],[1],[2]],"growth":[2,3]}"#,
+        ];
+        for text in cases {
+            let v = Value::parse(text).unwrap();
+            assert!(genotype_from_value(&v).is_err(), "must reject {text}");
+        }
+        // The happy path next to them, as a control.
+        let ok = Value::parse(r#"{"stem":16,"cells":[[0],[1],[2]],"growth":[2,3]}"#).unwrap();
+        let g = genotype_from_value(&ok).unwrap();
+        assert!(decode(&g, "ctl").validate().is_ok());
     }
 
     #[test]

@@ -282,6 +282,37 @@ fn full_queue_sheds_with_overloaded_instead_of_queueing_unboundedly() {
 }
 
 #[test]
+fn injected_worker_panic_answers_internal_and_the_service_keeps_serving() {
+    let before = obs::global().snapshot();
+    let mut cfg = config();
+    // One worker: the thread that panics is provably the thread that must
+    // answer the follow-ups. The token makes the handler itself panic, so
+    // the whole real path (pool catch_unwind → in-band internal error →
+    // recovered writer lock) is exercised over a live socket.
+    cfg.workers = 1;
+    cfg.fault_panic_token = Some("panic-now".to_string());
+    let handle = Server::bind(Service::new(model().clone()), cfg)
+        .expect("bind")
+        .spawn();
+
+    let mut c = FaultClient::connect(handle.addr());
+    assert!(c.request(r#"{"op":"health"}"#).contains("\"ok\":true"));
+    let resp = c.request(r#"{"op":"estimate","note":"panic-now"}"#);
+    let msg = expect_error(&resp, "internal");
+    assert!(msg.contains("the service continues"), "got {msg:?}");
+    // The same connection keeps serving, a fresh one connects and serves,
+    // and the drain completes — one bad request took down nothing.
+    assert!(c.request(r#"{"op":"health"}"#).contains("\"ok\":true"));
+    assert!(c.request(&estimate_request()).contains("\"ok\":true"));
+    let mut d = FaultClient::connect(handle.addr());
+    assert!(d.request(&estimate_request()).contains("\"ok\":true"));
+    let report = handle.shutdown();
+    assert!(report.drained, "a caught panic must not wedge the drain");
+    let after = obs::global().snapshot();
+    assert!(after.srv_worker_panics > before.srv_worker_panics);
+}
+
+#[test]
 fn shed_connection_survives_and_serves_the_retry() {
     let mut cfg = config();
     cfg.workers = 1;

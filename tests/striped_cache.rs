@@ -1,0 +1,159 @@
+//! Integration tests for the striped GraphCache (`estim::compiled`).
+//!
+//! The sharding is a concurrency optimization and must be *invisible* in
+//! the answers: totals bit-identical to the uncompiled reference and to the
+//! single-lock (one-shard) layout, for any thread count; the global
+//! capacity budget and the obs accounting (misses, evictions, cross-model
+//! recompiles) must hold across shards exactly as they did on one lock.
+
+use annette::coordinator::orchestrator::run_campaign;
+use annette::estim::compiled::{CompiledModel, GraphCache, GRAPH_CACHE_SHARDS};
+use annette::estim::estimator::Estimator;
+use annette::graph::Graph;
+use annette::hw::device::Device;
+use annette::hw::dpu::DpuDevice;
+use annette::hw::registry;
+use annette::models::layer::ModelKind;
+use annette::models::platform::PlatformModel;
+use annette::zoo;
+
+fn model() -> PlatformModel {
+    let dev = DpuDevice::zcu102();
+    let data = run_campaign(&dev, 1, 4);
+    PlatformModel::fit(&dev.spec(), &data)
+}
+
+/// Mixed traffic: the 12-network zoo plus a NASBench sample — the two
+/// request populations the service actually sees.
+fn traffic() -> Vec<Graph> {
+    let mut graphs: Vec<Graph> = zoo::table2().into_iter().map(|e| e.graph).collect();
+    graphs.extend(zoo::nasbench::sample_networks(24, 2024));
+    graphs
+}
+
+#[test]
+fn sharded_lookups_are_bit_identical_across_thread_counts() {
+    let model = model();
+    let compiled = CompiledModel::compile(&model);
+    let est = Estimator::new(&model);
+    let graphs = traffic();
+    let kind = ModelKind::Mixed;
+    // The bit-exact reference: the uncompiled estimator path.
+    let reference: Vec<u64> = graphs
+        .iter()
+        .map(|g| est.estimate_uncompiled_with(g, kind).total_ms().to_bits())
+        .collect();
+    // The single-lock layout agrees with the reference...
+    let single = GraphCache::with_capacity_sharded(4096, 1);
+    let single_totals: Vec<u64> = graphs
+        .iter()
+        .map(|g| single.get_or_compile(&compiled, g).total_ms(kind).to_bits())
+        .collect();
+    assert_eq!(single_totals, reference);
+    // ...and so does the striped layout under 1/2/4/8 concurrent clients,
+    // each walking the whole set at a different offset so the same graph is
+    // compiled-or-hit from several threads at once.
+    for threads in [1usize, 2, 4, 8] {
+        let cache = GraphCache::with_capacity_sharded(4096, GRAPH_CACHE_SHARDS);
+        let totals: Vec<u64> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..threads)
+                .map(|t| {
+                    let cache = &cache;
+                    let compiled = &compiled;
+                    let graphs = &graphs;
+                    s.spawn(move || {
+                        let mut out = Vec::with_capacity(graphs.len());
+                        for i in 0..graphs.len() {
+                            let j = (i + t * 7) % graphs.len();
+                            let ms =
+                                cache.get_or_compile(compiled, &graphs[j]).total_ms(kind);
+                            out.push((j, ms.to_bits()));
+                        }
+                        out
+                    })
+                })
+                .collect();
+            let mut totals = vec![0u64; graphs.len()];
+            for h in handles {
+                for (j, bits) in h.join().expect("cache client must not panic") {
+                    totals[j] = bits;
+                }
+            }
+            totals
+        });
+        assert_eq!(totals, reference, "threads={threads}");
+        // Every distinct graph is resident exactly once, however many
+        // threads raced to compile it.
+        assert_eq!(cache.len(), graphs.len(), "threads={threads}");
+    }
+}
+
+#[test]
+fn eviction_budget_holds_globally_across_shards() {
+    annette::obs::set_enabled(true);
+    let compiled = CompiledModel::compile(&model());
+    let graphs = zoo::nasbench::sample_networks(24, 7);
+    let cap = 6;
+    let cache = GraphCache::with_capacity_sharded(cap, 4);
+    let before = annette::obs::global().snapshot();
+    for g in &graphs {
+        let _ = cache.get_or_compile(&compiled, g);
+    }
+    let after = annette::obs::global().snapshot();
+    // The budget is global: per-shard FIFOs may leave the cache under `cap`
+    // (a hot shard evicts while a cold one has room) but never over it.
+    assert!(cache.len() <= cap, "budget violated: {} > {cap}", cache.len());
+    // The registry is process-global (other tests record too), so deltas
+    // are lower bounds: every distinct graph missed once, and everything
+    // not resident at the end was evicted by *some* shard.
+    let misses = after.cache_misses - before.cache_misses;
+    let evictions = after.cache_evictions - before.cache_evictions;
+    assert!(misses >= graphs.len() as u64, "misses={misses}");
+    assert!(
+        evictions >= (graphs.len() - cache.len()) as u64,
+        "evictions={evictions}, resident={}",
+        cache.len()
+    );
+    // Evicted entries recompile to bit-identical totals on their return.
+    let again = cache.get_or_compile(&compiled, &graphs[0]).total_ms(ModelKind::Mixed);
+    let single = GraphCache::with_capacity_sharded(4096, 1);
+    let reference = single.get_or_compile(&compiled, &graphs[0]).total_ms(ModelKind::Mixed);
+    assert_eq!(again.to_bits(), reference.to_bits());
+}
+
+#[test]
+fn cross_model_recompiles_survive_sharding() {
+    annette::obs::set_enabled(true);
+    // Two genuinely different fitted models sharing one cache — the fleet
+    // service layout.
+    let compiled: Vec<CompiledModel> = registry::entries()
+        .iter()
+        .take(2)
+        .map(|entry| {
+            let dev = (entry.build)();
+            let data = run_campaign(dev.as_ref(), 1, 4);
+            CompiledModel::compile(&PlatformModel::fit(&dev.spec(), &data))
+        })
+        .collect();
+    assert_ne!(compiled[0].id(), compiled[1].id());
+    let cache = GraphCache::with_capacity_sharded(64, GRAPH_CACHE_SHARDS);
+    let g = zoo::nasbench::sample_network(0, 3);
+    let before = annette::obs::global().snapshot();
+    let a1 = cache.get_or_compile(&compiled[0], &g);
+    let b1 = cache.get_or_compile(&compiled[1], &g);
+    let a2 = cache.get_or_compile(&compiled[0], &g);
+    let after = annette::obs::global().snapshot();
+    // Same fingerprint under a second model id is the cross-model case the
+    // cache must detect (and count) even though shard routing ignores the
+    // model id; both compilations stay resident and later lookups hit.
+    assert!(after.cache_recompiles > before.cache_recompiles);
+    assert!(after.cache_hits > before.cache_hits, "third lookup must hit");
+    assert_eq!(cache.len(), 2);
+    let kind = ModelKind::Mixed;
+    assert_eq!(a1.total_ms(kind).to_bits(), a2.total_ms(kind).to_bits());
+    assert_ne!(
+        a1.total_ms(kind).to_bits(),
+        b1.total_ms(kind).to_bits(),
+        "different devices must not share a compiled graph"
+    );
+}
