@@ -1,27 +1,48 @@
-//! Closed-loop load generator for the TCP serving layer.
+//! Load generator for the TCP serving layer: connection-count × pipeline-
+//! depth sweep.
 //!
-//! Spawns client threads that each open one connection and drive
-//! request/response lockstep traffic (`estimate` on small NASBench
-//! networks), then reports throughput and latency percentiles and merges
-//! them into `BENCH_estimator.json` under the `serve` key:
+//! Spawns client threads that each open one connection and drive windowed
+//! pipelined traffic (`estimate` on small NASBench networks): up to
+//! `depth` requests in flight per connection, responses consumed in
+//! order, per-request latency measured from its own send. Each
+//! `(open_conns, pipeline_depth)` workload reports throughput and latency
+//! percentiles; all of them merge into `BENCH_estimator.json` under the
+//! `serve` key:
 //!
 //! ```json
-//! "serve": {"qps": ..., "p50_ms": ..., "p99_ms": ..., "shed_rate": ...}
+//! "serve": {
+//!   "workloads": [
+//!     {"open_conns": 64, "pipeline_depth": 1, "qps": ..., "p50_ms": ...,
+//!      "p99_ms": ..., "shed_rate": ..., "requests": ...},
+//!     ...
+//!   ],
+//!   "qps": ..., "p50_ms": ..., "p99_ms": ..., "shed_rate": ...,
+//!   "connections": ..., "requests": ...
+//! }
 //! ```
+//!
+//! (The top-level fields mirror the last workload — largest sweep point —
+//! for compatibility with readers of the pre-sweep schema.)
 //!
 //! ```sh
 //! cargo run --release --example load_gen                 # self-contained
 //! cargo run --release --example load_gen -- --addr 127.0.0.1:7878
 //! cargo run --release --example load_gen -- --smoke      # CI-sized run
+//! cargo run --release --example load_gen -- --conns 64,512,4096 --depths 1,16
 //! ```
 //!
-//! Without `--addr` the example stands up its own in-process
-//! [`annette::coordinator::Server`] on an ephemeral port and drains it at
-//! the end, so it doubles as an end-to-end exercise of accept, framing,
-//! queueing, and graceful shutdown. Responses with
-//! `error_kind:"overloaded"` are counted as shed, not as failures — load
-//! shedding is the contract under saturation, and `shed_rate` reports it.
+//! The default sweep is 64 and 512 connections at depths 1 and 16; pass
+//! `--conns 64,512,4096` on a host with a raised fd limit to push further
+//! (the server needs `ANNETTE_MAX_CONNS` above the largest point — the
+//! in-process server raises its own cap). Without `--addr` the example
+//! stands up its own in-process [`annette::coordinator::Server`] on an
+//! ephemeral port and drains it at the end, so it doubles as an
+//! end-to-end exercise of accept, framing, pipelining, queueing, and
+//! graceful shutdown. Responses with `error_kind:"overloaded"` are
+//! counted as shed, not as failures — load shedding is the contract under
+//! saturation, and `shed_rate` reports it.
 
+use std::collections::VecDeque;
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::time::{Duration, Instant};
@@ -72,8 +93,10 @@ struct ConnStats {
     other_errors: usize,
 }
 
-/// One closed-loop client: send a line, wait for its response line, repeat.
-fn run_client(addr: &str, requests: &[String]) -> ConnStats {
+/// One pipelined client: keep up to `depth` requests in flight, consume
+/// responses in order (the server's ordering contract), measure each
+/// request from its own send.
+fn run_client(addr: &str, requests: &[String], depth: usize) -> ConnStats {
     let stream = connect(addr, Duration::from_secs(60));
     stream
         .set_read_timeout(Some(Duration::from_secs(60)))
@@ -86,13 +109,19 @@ fn run_client(addr: &str, requests: &[String]) -> ConnStats {
         shed: 0,
         other_errors: 0,
     };
+    let mut starts: VecDeque<Instant> = VecDeque::with_capacity(depth);
+    let mut sent = 0usize;
     let mut line = String::new();
-    for req in requests {
-        let t0 = Instant::now();
-        writer.write_all(req.as_bytes()).expect("write request");
+    while stats.latencies_us.len() < requests.len() {
+        while sent < requests.len() && sent - stats.latencies_us.len() < depth {
+            writer.write_all(requests[sent].as_bytes()).expect("write request");
+            starts.push_back(Instant::now());
+            sent += 1;
+        }
         line.clear();
         let n = reader.read_line(&mut line).expect("read response");
         assert!(n > 0, "server closed the connection mid-run");
+        let t0 = starts.pop_front().expect("response without a request");
         stats.latencies_us.push(t0.elapsed().as_micros() as u64);
         if line.contains("\"ok\":true") {
             stats.ok += 1;
@@ -103,6 +132,62 @@ fn run_client(addr: &str, requests: &[String]) -> ConnStats {
         }
     }
     stats
+}
+
+struct WorkloadResult {
+    conns: usize,
+    depth: usize,
+    requests: usize,
+    qps: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+    shed_rate: f64,
+}
+
+fn run_workload(addr: &str, requests: &[String], conns: usize, depth: usize) -> WorkloadResult {
+    eprintln!(
+        "[load_gen] workload: {conns} connections x {} requests, pipeline depth {depth}",
+        requests.len()
+    );
+    let t0 = Instant::now();
+    let stats: Vec<ConnStats> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..conns)
+            .map(|_| s.spawn(move || run_client(addr, requests, depth)))
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("client thread")).collect()
+    });
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut latencies: Vec<u64> = stats.iter().flat_map(|s| s.latencies_us.clone()).collect();
+    latencies.sort_unstable();
+    let total = latencies.len();
+    let ok: usize = stats.iter().map(|s| s.ok).sum();
+    let shed: usize = stats.iter().map(|s| s.shed).sum();
+    let other: usize = stats.iter().map(|s| s.other_errors).sum();
+    let qps = total as f64 / wall;
+    let p50_ms = percentile(&latencies, 0.50);
+    let p99_ms = percentile(&latencies, 0.99);
+    let shed_rate = if total == 0 {
+        0.0
+    } else {
+        shed as f64 / total as f64
+    };
+    println!(
+        "load_gen: conns {conns} depth {depth} | {total} requests in {wall:.3}s | \
+         qps {qps:.1} | p50 {p50_ms:.3} ms | p99 {p99_ms:.3} ms | ok {ok} | \
+         shed {shed} | errors {other}"
+    );
+    assert_eq!(other, 0, "unexpected non-shed errors under well-formed load");
+    assert!(qps > 0.0, "throughput must be positive");
+    WorkloadResult {
+        conns,
+        depth,
+        requests: total,
+        qps,
+        p50_ms,
+        p99_ms,
+        shed_rate,
+    }
 }
 
 fn merge_serve_key(serve: Value) {
@@ -134,26 +219,59 @@ fn merge_serve_key(serve: Value) {
     eprintln!("[load_gen] merged serve key into {PATH}");
 }
 
+fn parse_list(s: &str, flag: &str) -> Vec<usize> {
+    let v: Vec<usize> = s
+        .split(',')
+        .map(|p| {
+            p.trim().parse().unwrap_or_else(|_| {
+                eprintln!("load_gen: {flag} wants comma-separated integers, got {s:?}");
+                std::process::exit(2);
+            })
+        })
+        .collect();
+    if v.is_empty() {
+        eprintln!("load_gen: {flag} wants at least one value");
+        std::process::exit(2);
+    }
+    v
+}
+
 fn main() {
     let mut addr: Option<String> = None;
     let mut smoke = false;
     let mut no_write = false;
+    let mut conns_sweep: Option<Vec<usize>> = None;
+    let mut depths_sweep: Option<Vec<usize>> = None;
+    let mut per_conn: Option<usize> = None;
     let mut args = std::env::args().skip(1);
     while let Some(a) = args.next() {
         match a.as_str() {
             "--addr" => addr = args.next(),
             "--smoke" => smoke = true,
             "--no-write" => no_write = true,
+            "--conns" => conns_sweep = args.next().map(|v| parse_list(&v, "--conns")),
+            "--depths" => depths_sweep = args.next().map(|v| parse_list(&v, "--depths")),
+            "--per-conn" => {
+                per_conn = args.next().and_then(|v| v.parse().ok());
+                if per_conn.is_none() {
+                    eprintln!("load_gen: --per-conn wants an integer");
+                    std::process::exit(2);
+                }
+            }
             other => {
                 eprintln!(
                     "usage: load_gen [--addr HOST:PORT] [--smoke] [--no-write] \
+                     [--conns N,N,...] [--depths N,N,...] [--per-conn N] \
                      (unknown arg {other})"
                 );
                 std::process::exit(2);
             }
         }
     }
-    let (conns, per_conn) = if smoke { (2usize, 50usize) } else { (4, 200) };
+    let conns_sweep = conns_sweep.unwrap_or_else(|| vec![64, 512]);
+    let depths_sweep = depths_sweep.unwrap_or_else(|| vec![1, 16]);
+    let per_conn = per_conn.unwrap_or(if smoke { 10 } else { 50 });
+    let max_conns = conns_sweep.iter().copied().max().unwrap_or(1);
 
     // Small distinct networks so the server's graph cache warms quickly and
     // the run measures serving, not compilation.
@@ -180,8 +298,14 @@ fn main() {
             let dev = DpuDevice::zcu102();
             let data = run_campaign(&dev, 2, default_threads());
             let svc = Service::new(PlatformModel::fit(&dev.spec(), &data));
-            let server =
-                Server::bind(svc, ServerConfig::default()).expect("bind in-process server");
+            let base = ServerConfig::default();
+            // The sweep's largest point must fit under the connection cap
+            // with room for the health probe.
+            let cfg = ServerConfig {
+                max_conns: base.max_conns.max(max_conns + 16),
+                ..base
+            };
+            let server = Server::bind(svc, cfg).expect("bind in-process server");
             let handle = server.spawn();
             let a = handle.addr().to_string();
             own_server = Some(handle);
@@ -202,37 +326,12 @@ fn main() {
         eprintln!("[load_gen] health: {}", line.trim());
     }
 
-    eprintln!("[load_gen] {conns} connections x {per_conn} requests against {addr}");
-    let t0 = Instant::now();
-    let stats: Vec<ConnStats> = std::thread::scope(|s| {
-        let handles: Vec<_> = (0..conns)
-            .map(|_| s.spawn(|| run_client(&addr, &requests)))
-            .collect();
-        handles.into_iter().map(|h| h.join().expect("client thread")).collect()
-    });
-    let wall = t0.elapsed().as_secs_f64();
-
-    let mut latencies: Vec<u64> = stats.iter().flat_map(|s| s.latencies_us.clone()).collect();
-    latencies.sort_unstable();
-    let total = latencies.len();
-    let ok: usize = stats.iter().map(|s| s.ok).sum();
-    let shed: usize = stats.iter().map(|s| s.shed).sum();
-    let other: usize = stats.iter().map(|s| s.other_errors).sum();
-    let qps = total as f64 / wall;
-    let p50_ms = percentile(&latencies, 0.50);
-    let p99_ms = percentile(&latencies, 0.99);
-    let shed_rate = if total == 0 {
-        0.0
-    } else {
-        shed as f64 / total as f64
-    };
-
-    println!(
-        "load_gen: {total} requests in {wall:.3}s | qps {qps:.1} | p50 {p50_ms:.3} ms | \
-         p99 {p99_ms:.3} ms | ok {ok} | shed {shed} | errors {other}"
-    );
-    assert_eq!(other, 0, "unexpected non-shed errors under well-formed load");
-    assert!(qps > 0.0, "throughput must be positive");
+    let mut results: Vec<WorkloadResult> = Vec::new();
+    for &conns in &conns_sweep {
+        for &depth in &depths_sweep {
+            results.push(run_workload(&addr, &requests, conns, depth.max(1)));
+        }
+    }
 
     if let Some(handle) = own_server {
         let report = handle.shutdown();
@@ -244,13 +343,29 @@ fn main() {
     }
 
     if !no_write {
+        let workloads: Vec<Value> = results
+            .iter()
+            .map(|r| {
+                Value::Obj(vec![
+                    ("open_conns".to_string(), Value::int(r.conns)),
+                    ("pipeline_depth".to_string(), Value::int(r.depth)),
+                    ("qps".to_string(), Value::num(round3(r.qps))),
+                    ("p50_ms".to_string(), Value::num(round3(r.p50_ms))),
+                    ("p99_ms".to_string(), Value::num(round3(r.p99_ms))),
+                    ("shed_rate".to_string(), Value::num(round3(r.shed_rate))),
+                    ("requests".to_string(), Value::int(r.requests)),
+                ])
+            })
+            .collect();
+        let last = results.last().expect("at least one workload");
         merge_serve_key(Value::Obj(vec![
-            ("qps".to_string(), Value::num(round3(qps))),
-            ("p50_ms".to_string(), Value::num(round3(p50_ms))),
-            ("p99_ms".to_string(), Value::num(round3(p99_ms))),
-            ("shed_rate".to_string(), Value::num(round3(shed_rate))),
-            ("connections".to_string(), Value::int(conns)),
-            ("requests".to_string(), Value::int(total)),
+            ("workloads".to_string(), Value::Arr(workloads)),
+            ("qps".to_string(), Value::num(round3(last.qps))),
+            ("p50_ms".to_string(), Value::num(round3(last.p50_ms))),
+            ("p99_ms".to_string(), Value::num(round3(last.p99_ms))),
+            ("shed_rate".to_string(), Value::num(round3(last.shed_rate))),
+            ("connections".to_string(), Value::int(last.conns)),
+            ("requests".to_string(), Value::int(last.requests)),
         ]));
     }
 }

@@ -1,9 +1,10 @@
 //! `annette-serve` — the estimation service on a TCP socket.
 //!
 //! Fits a platform model (or the whole device fleet) at startup, then
-//! serves the line-delimited JSON protocol through the hardened
-//! [`annette::coordinator::Server`]: connection cap, read/write/idle
-//! deadlines, bounded request framing, load shedding, graceful drain.
+//! serves the line-delimited JSON protocol through the event-driven
+//! [`annette::coordinator::Server`]: epoll/poll reactor, pipelined
+//! connections, connection cap, read/write/idle deadlines, bounded
+//! request framing, load shedding, graceful drain.
 //!
 //! ```sh
 //! annette-serve [--device dpu-zcu102|vpu-ncs2|tpu-edge|all]
@@ -16,18 +17,23 @@
 //! `listening on <addr>` once the socket is ready (the line CI and
 //! scripts key on).
 //!
-//! With `--max-seconds N` the server drains itself gracefully after N
-//! seconds — in-flight requests finish, telemetry flushes — which is the
-//! clean way to run it under CI or a batch scheduler. Without it the
-//! process serves until killed.
+//! **SIGTERM and SIGINT drain gracefully**: a raw-syscall handler writes
+//! one byte to a self-pipe registered with the reactor, which stops
+//! accepting, finishes in-flight requests, sends every connection an
+//! in-band `shutdown` goodbye, flushes telemetry, and prints `drained`.
+//! `--max-seconds N` triggers the same drain after N seconds (the clean
+//! way to run under CI or a batch scheduler); without it the process
+//! serves until signalled.
 
 use std::io::Write;
+use std::sync::Arc;
 
 use annette::coordinator::orchestrator::{default_threads, run_campaign};
 use annette::coordinator::{Server, ServerConfig, Service};
 use annette::hw::device::Device;
 use annette::hw::registry;
 use annette::models::platform::PlatformModel;
+use annette::net::reactor::{install_drain_signal_handler, SelfPipe};
 
 fn usage() -> ! {
     eprintln!(
@@ -84,14 +90,25 @@ fn main() {
     };
     let service = Service::multi(targets).expect("service construction");
 
+    // The drain pipe: its read end goes to the reactor; SIGTERM/SIGINT
+    // handlers and the --max-seconds timer poke the write end.
+    let drain_pipe = Arc::new(SelfPipe::new().unwrap_or_else(|e| {
+        eprintln!("annette-serve: drain pipe: {e}");
+        std::process::exit(1);
+    }));
+    if !install_drain_signal_handler(drain_pipe.write_fd()) {
+        eprintln!("[serve] warning: signal handlers not installed; SIGTERM will not drain");
+    }
+
     let mut cfg = ServerConfig::from_env();
     if let Some(a) = addr {
         cfg.addr = a;
     }
+    cfg.drain_fd = Some(drain_pipe.read_fd());
     eprintln!(
         "[serve] config: max_conns={} read_timeout={}ms write_timeout={}ms \
          idle_timeout={}ms max_request_bytes={} queue_cap={} workers={} \
-         drain_timeout={}ms",
+         max_inflight_per_conn={} max_conn_outbuf={} drain_timeout={}ms",
         cfg.max_conns,
         cfg.read_timeout.as_millis(),
         cfg.write_timeout.as_millis(),
@@ -99,6 +116,8 @@ fn main() {
         cfg.max_request_bytes,
         cfg.queue_cap,
         cfg.workers,
+        cfg.max_inflight_per_conn,
+        cfg.max_conn_outbuf_bytes,
         cfg.drain_timeout.as_millis(),
     );
 
@@ -106,21 +125,24 @@ fn main() {
         eprintln!("annette-serve: bind failed: {e}");
         std::process::exit(1);
     });
+    eprintln!("[serve] reactor backend: {}", server.backend_name());
     println!("listening on {}", server.addr());
     let _ = std::io::stdout().flush();
 
     let handle = server.spawn();
-    if max_seconds == 0 {
-        // Serve until the process is killed. (Graceful drain needs
-        // --max-seconds; the crate is dependency-free, so there is no
-        // signal handler to turn SIGTERM into a drain.)
-        loop {
-            std::thread::sleep(std::time::Duration::from_secs(3600));
-        }
+    if max_seconds > 0 {
+        let pipe = Arc::clone(&drain_pipe);
+        std::thread::Builder::new()
+            .name("annette-timer".to_string())
+            .spawn(move || {
+                std::thread::sleep(std::time::Duration::from_secs(max_seconds));
+                eprintln!("[serve] --max-seconds {max_seconds} elapsed; draining");
+                pipe.wake();
+            })
+            .expect("spawn drain timer");
     }
-    std::thread::sleep(std::time::Duration::from_secs(max_seconds));
-    eprintln!("[serve] --max-seconds {max_seconds} elapsed; draining");
-    let report = handle.shutdown();
+    // Block until a signal or the timer triggers the drain.
+    let report = handle.join();
     eprintln!(
         "[serve] drained={} connections_left={}",
         report.drained, report.connections_left

@@ -1,251 +1,867 @@
-//! Per-connection loop of the TCP serving layer.
+//! The reactor event loop of the TCP serving layer.
 //!
-//! One thread per accepted connection (the [`super::server::ServerConfig`]
-//! connection cap bounds the thread count). The loop reads chunks into a
-//! bounded [`LineFramer`], turns each complete line into a worker-pool job,
-//! and blocks on that job's completion ack before framing the next request
-//! — at most one in-flight request per connection, which is the built-in
-//! per-connection backpressure. Responses are written by the worker through
-//! a shared `Arc<Mutex<_>>` writer, so error lines emitted here and
-//! response lines emitted there never interleave mid-line.
+//! One thread owns every socket. The loop multiplexes readiness through
+//! [`crate::net::reactor::Reactor`] (epoll on Linux, `poll(2)` elsewhere),
+//! frames request lines with the bounded
+//! [`crate::net::framer::LineFramer`], and submits them to the worker
+//! [`crate::net::pool::Pool`]. Workers hand finished response lines to the
+//! completion queue and poke the self-pipe; the loop appends them to the
+//! owning connection's output buffer and flushes under write interest.
 //!
-//! Everything that can go wrong has one in-band answer and one obs counter:
-//! oversized line → `too_large` (connection survives, framer resyncs);
-//! full queue → `overloaded` (connection survives); request that stops
-//! arriving mid-line → `timeout` + close (slow-loris); idle keep-alive
-//! expiry → silent close; server draining → one final `shutdown` line +
-//! close. A write failure of any of these closes the connection — a peer
-//! that won't read has already left.
+//! **Pipelining and ordering.** Up to `max_inflight_per_conn` requests per
+//! connection may be in flight at once. Every framing outcome — a request
+//! line, the `health` fast path, a `too_large` or `invalid` error, a
+//! queue-full shed, the drain goodbye — is assigned a per-connection
+//! sequence number at the moment it is decoded, and responses are written
+//! back in strictly that order: out-of-order worker completions park in a
+//! `BTreeMap` until their turn. The wire contract is exactly the
+//! thread-per-connection server's: one response line per request line, in
+//! request order, byte-identical to [`Service::handle`].
+//!
+//! **Backpressure.** A connection stops being read (its read interest is
+//! dropped) while its in-flight budget is exhausted, decoded lines await
+//! submission, or its output buffer is full — a peer that won't read its
+//! responses can't balloon server memory. The output-buffer cap is a pause
+//! threshold, not a hard limit: responses already in flight still land,
+//! so the overshoot is bounded by the in-flight budget times the response
+//! size.
+//!
+//! **Deadlines** ride the [`crate::net::reactor::TimerWheel`]: a
+//! per-request read deadline (slow-loris; in-band `timeout` error, then
+//! close once answered), a write-stall deadline (slow reader; silent
+//! close), and an idle keep-alive (silent close). Backpressure pauses
+//! suspend the read deadline — the server caused the stall, not the peer.
+//!
+//! Everything else keeps the thread-per-connection contract: oversized
+//! line → `too_large` + resync; full queue → `overloaded`; conn cap →
+//! one `overloaded` line at accept; drain → complete in-flight work, send
+//! one `shutdown` goodbye per connection, close, and force-close whatever
+//! remains at the drain deadline.
 
-use std::io::Read;
-use std::io::Write;
-use std::net::TcpStream;
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
+use std::collections::{BTreeMap, VecDeque};
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::io::{AsRawFd, RawFd};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Instant;
 
-use crate::coordinator::server::{Shared, POLL};
+use crate::coordinator::server::{reject_at_cap, Completion, ServerConfig, Shared, POLL};
 use crate::coordinator::Service;
 use crate::error::Error;
 use crate::net::framer::{FrameEvent, LineFramer};
 use crate::net::pool::Job;
+use crate::net::reactor::{drain_readable, Event, Interest, Reactor, TimerWheel};
 use crate::obs;
 
-/// Upper bound on waiting for a submitted job's completion ack. Orders of
-/// magnitude above any real request; purely a defense against a lost
-/// worker, not a tuning knob.
-const ACK_WAIT: Duration = Duration::from_secs(600);
+/// Fixed tokens (the bind path registers fds under them); connection
+/// slots start at [`TOK_CONN0`].
+pub(crate) const TOK_LISTENER: usize = 0;
+pub(crate) const TOK_WAKER: usize = 1;
+pub(crate) const TOK_DRAIN: usize = 2;
+const TOK_CONN0: usize = 3;
+
+/// Bytes read per `read(2)` call and per readiness event. The budget keeps
+/// one firehose connection from starving the rest of the loop; level
+/// triggering re-reports the fd on the next wait.
+const READ_CHUNK: usize = 16 * 1024;
+const READ_BUDGET: usize = 64 * 1024;
+
+/// Compact the output buffer once this many flushed bytes accumulate.
+const COMPACT_AT: usize = 32 * 1024;
 
 /// Plain-text liveness probe: the line `health` (no JSON) answers `ok` or
 /// `draining` without touching the queue, so load balancers can probe a
 /// saturated server.
 const HEALTH_LINE: &[u8] = b"health";
 
-enum Next {
-    Continue,
-    Close,
-}
-
-pub(crate) fn serve(mut stream: TcpStream, shared: &Shared) {
-    let cfg = &shared.cfg;
-    let _ = stream.set_nodelay(true);
-    let _ = stream.set_write_timeout(Some(cfg.write_timeout));
-    // Short read timeout as a poll interval: the loop owns the real
-    // deadlines (read/idle) and the shutdown check.
-    let _ = stream.set_read_timeout(Some(POLL));
-    let sink: Arc<Mutex<dyn Write + Send>> = match stream.try_clone() {
-        Ok(w) => Arc::new(Mutex::new(w)),
-        Err(_) => return,
-    };
-
-    let mut framer = LineFramer::new(cfg.max_request_bytes);
-    let mut events: Vec<FrameEvent> = Vec::new();
-    let mut chunk = [0u8; 4096];
-    let mut scratch = String::new();
-    let mut last_activity = Instant::now();
-    let mut request_started: Option<Instant> = None;
-
-    loop {
-        if shared.stopping() {
-            // One final in-band line so a client mid-send learns why the
-            // connection is going away, then close.
-            let _ = send_error(&sink, &mut scratch, &shutdown_error());
-            return;
-        }
-        match stream.read(&mut chunk) {
-            Ok(0) => return,
-            Ok(n) => {
-                last_activity = Instant::now();
-                framer.push(&chunk[..n], &mut events);
-                for ev in events.drain(..) {
-                    match handle_event(ev, shared, &sink, &mut scratch) {
-                        Next::Continue => {}
-                        Next::Close => return,
-                    }
-                }
-                if framer.has_partial() {
-                    if request_started.is_none() {
-                        request_started = Some(Instant::now());
-                    }
-                } else {
-                    request_started = None;
-                }
-                // The deadline also applies on the data path: a peer
-                // dripping one byte per poll never hits WouldBlock.
-                if exceeded(request_started, cfg.read_timeout) {
-                    read_timed_out(&sink, &mut scratch, cfg.read_timeout);
-                    return;
-                }
-            }
-            Err(e)
-                if e.kind() == std::io::ErrorKind::WouldBlock
-                    || e.kind() == std::io::ErrorKind::TimedOut =>
-            {
-                if exceeded(request_started, cfg.read_timeout) {
-                    read_timed_out(&sink, &mut scratch, cfg.read_timeout);
-                    return;
-                }
-                if request_started.is_none() && last_activity.elapsed() > cfg.idle_timeout {
-                    if obs::enabled() {
-                        obs::global().srv_idle_closed.incr();
-                    }
-                    return;
-                }
-            }
-            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
-            Err(_) => return,
-        }
-    }
-}
-
-fn handle_event(
-    ev: FrameEvent,
-    shared: &Shared,
-    sink: &Arc<Mutex<dyn Write + Send>>,
-    scratch: &mut String,
-) -> Next {
-    let line = match ev {
-        FrameEvent::TooLarge => {
-            if obs::enabled() {
-                obs::global().srv_too_large.incr();
-                obs::global().record_error(None, "too_large");
-            }
-            let e = Error::TooLarge(format!(
-                "request line exceeds {} bytes (ANNETTE_MAX_REQUEST_BYTES); \
-                 discarded to next newline",
-                shared.cfg.max_request_bytes
-            ));
-            return match send_error(sink, scratch, &e) {
-                Ok(()) => Next::Continue,
-                Err(_) => Next::Close,
-            };
-        }
-        FrameEvent::Line(bytes) => bytes,
-    };
-    if obs::enabled() {
-        obs::global().srv_lines.incr();
-    }
-    if line == HEALTH_LINE {
-        scratch.clear();
-        scratch.push_str(if shared.stopping() { "draining" } else { "ok" });
-        return match send_line(sink, scratch) {
-            Ok(()) => Next::Continue,
-            Err(_) => Next::Close,
-        };
-    }
-    let line = match String::from_utf8(line) {
-        Ok(s) => s,
-        Err(_) => {
-            if obs::enabled() {
-                obs::global().record_error(None, "invalid");
-            }
-            let e = Error::Invalid("request line is not valid UTF-8".to_string());
-            return match send_error(sink, scratch, &e) {
-                Ok(()) => Next::Continue,
-                Err(_) => Next::Close,
-            };
-        }
-    };
-
-    let (done, ack) = mpsc::channel();
-    let job = Job {
-        line,
-        out: Arc::clone(sink),
-        done,
-    };
-    match shared.pool.try_submit(job) {
-        Ok(()) => match ack.recv_timeout(ACK_WAIT) {
-            Ok(Ok(())) => Next::Continue,
-            Ok(Err(e)) => {
-                // The worker could not deliver the response: the peer reads
-                // too slowly (timeout kinds) or hung up. Either way the
-                // connection is done.
-                if obs::enabled()
-                    && (e.kind() == std::io::ErrorKind::WouldBlock
-                        || e.kind() == std::io::ErrorKind::TimedOut)
-                {
-                    obs::global().srv_write_timeouts.incr();
-                }
-                Next::Close
-            }
-            Err(_) => Next::Close,
-        },
-        Err(_refused) => {
-            if shared.stopping() {
-                let _ = send_error(sink, scratch, &shutdown_error());
-                return Next::Close;
-            }
-            if obs::enabled() {
-                obs::global().srv_shed.incr();
-                obs::global().record_error(None, "overloaded");
-            }
-            let e = Error::Overloaded(format!(
-                "in-flight queue is full at {} requests (ANNETTE_QUEUE_CAP); request shed",
-                shared.cfg.queue_cap
-            ));
-            match send_error(sink, scratch, &e) {
-                Ok(()) => Next::Continue,
-                Err(_) => Next::Close,
-            }
-        }
-    }
-}
-
 fn shutdown_error() -> Error {
     Error::Shutdown("server is draining; connection closing".to_string())
 }
 
-fn exceeded(started: Option<Instant>, deadline: Duration) -> bool {
-    started.is_some_and(|t0| t0.elapsed() > deadline)
+/// Per-connection state. Sequence numbers order the write-back: `next_seq`
+/// is assigned to each decoded frame event, `write_seq` is the next
+/// response the wire owes, and `parked` holds completions that arrived
+/// ahead of their turn.
+struct Conn {
+    stream: TcpStream,
+    fd: RawFd,
+    /// Creation stamp; completions carry it so a late worker result for a
+    /// closed connection can never reach the slot's next tenant.
+    gen: u64,
+    framer: LineFramer,
+    /// Decoded requests awaiting submission (in-flight budget exhausted).
+    pending: VecDeque<(u64, String)>,
+    /// Out-of-order completions parked until their turn (seq → line).
+    parked: BTreeMap<u64, String>,
+    next_seq: u64,
+    write_seq: u64,
+    /// Jobs submitted to the pool and not yet completed.
+    inflight: usize,
+    out: Vec<u8>,
+    written: usize,
+    interest: Interest,
+    last_activity: Instant,
+    /// First byte of an unterminated request line arrived here.
+    request_started: Option<Instant>,
+    /// A write hit `WouldBlock` here and has not progressed since.
+    write_stalled: Option<Instant>,
+    /// Current timer-wheel stamp; older wheel entries are stale.
+    timer_gen: u64,
+    /// The deadline the current wheel entry points at.
+    scheduled: Option<Instant>,
+    /// Peer half-closed its send side: answer what was decoded, flush,
+    /// close. A partial line at EOF is dropped.
+    eof: bool,
+    /// No further input will be accepted (deadline hit, or the drain
+    /// goodbye is queued): close once every assigned seq is answered and
+    /// flushed.
+    closing: bool,
+    /// The drain goodbye has been queued.
+    goodbye: bool,
 }
 
-fn read_timed_out(sink: &Arc<Mutex<dyn Write + Send>>, scratch: &mut String, deadline: Duration) {
-    if obs::enabled() {
-        obs::global().srv_read_timeouts.incr();
-        obs::global().record_error(None, "timeout");
+impl Conn {
+    fn new(stream: TcpStream, fd: RawFd, gen: u64, max_request_bytes: usize, now: Instant) -> Conn {
+        Conn {
+            stream,
+            fd,
+            gen,
+            framer: LineFramer::new(max_request_bytes),
+            pending: VecDeque::new(),
+            parked: BTreeMap::new(),
+            next_seq: 0,
+            write_seq: 0,
+            inflight: 0,
+            out: Vec::new(),
+            written: 0,
+            interest: Interest::READ,
+            last_activity: now,
+            request_started: None,
+            write_stalled: None,
+            timer_gen: 0,
+            scheduled: None,
+            eof: false,
+            closing: false,
+            goodbye: false,
+        }
     }
-    let e = Error::Timeout(format!(
-        "request not completed within {} ms (ANNETTE_READ_TIMEOUT_MS)",
-        deadline.as_millis()
-    ));
-    let _ = send_error(sink, scratch, &e);
+
+    fn unflushed(&self) -> usize {
+        self.out.len() - self.written
+    }
+
+    /// Read-side backpressure: true while the in-flight budget, the
+    /// submission backlog, or the output buffer says "stop reading".
+    fn paused(&self, cfg: &ServerConfig) -> bool {
+        self.inflight >= cfg.max_inflight_per_conn
+            || !self.pending.is_empty()
+            || self.unflushed() >= cfg.max_conn_outbuf_bytes
+    }
+
+    /// Any decoded request not yet fully answered on the wire.
+    fn busy(&self) -> bool {
+        self.inflight > 0
+            || !self.pending.is_empty()
+            || !self.parked.is_empty()
+            || self.unflushed() > 0
+    }
+
+    /// Every assigned sequence number has been answered and appended.
+    fn answered(&self) -> bool {
+        self.inflight == 0
+            && self.pending.is_empty()
+            && self.parked.is_empty()
+            && self.write_seq == self.next_seq
+    }
+
+    /// The earliest live deadline, or `None` when nothing is armed.
+    fn deadline(&self, cfg: &ServerConfig, draining: bool) -> Option<Instant> {
+        let mut d: Option<Instant> = None;
+        let mut consider = |t: Instant| {
+            d = Some(d.map_or(t, |old| old.min(t)));
+        };
+        if let Some(t) = self.write_stalled {
+            consider(t + cfg.write_timeout);
+        }
+        if !draining && !self.eof && !self.closing && !self.paused(cfg) {
+            if let Some(t) = self.request_started {
+                consider(t + cfg.read_timeout);
+            } else if !self.busy() {
+                consider(self.last_activity + cfg.idle_timeout);
+            }
+        }
+        d
+    }
 }
 
-/// Frame `scratch` (response text, no newline yet) and write it under the
-/// shared writer lock. Poison is recovered, not propagated: a worker that
-/// panicked while holding the writer lock must not take the connection
-/// thread down with it.
-fn send_line(sink: &Arc<Mutex<dyn Write + Send>>, scratch: &mut String) -> std::io::Result<()> {
-    scratch.push('\n');
-    let (mut w, _) = crate::sync::lock_recover(sink);
-    w.write_all(scratch.as_bytes()).and_then(|()| w.flush())
+enum Fired {
+    ReadTimeout,
+    WriteTimeout,
+    IdleTimeout,
+    /// The deadline moved since the entry was scheduled; re-arm.
+    Rearm,
 }
 
-fn send_error(
-    sink: &Arc<Mutex<dyn Write + Send>>,
-    scratch: &mut String,
-    e: &Error,
-) -> std::io::Result<()> {
-    Service::write_error_line(e, scratch);
-    send_line(sink, scratch)
+struct EventLoop {
+    shared: Arc<Shared>,
+    reactor: Reactor,
+    listener: Option<TcpListener>,
+    wheel: TimerWheel,
+    conns: Vec<Option<Conn>>,
+    free: Vec<usize>,
+    active: usize,
+    /// Monotonic stamp shared by connection generations and timer entries.
+    stamp: u64,
+    draining: bool,
+    drain_deadline: Option<Instant>,
+    frame_events: Vec<FrameEvent>,
+    completions: Vec<Completion>,
+    due: Vec<(usize, u64)>,
+}
+
+/// Run the serving event loop until drained. `reactor` arrives with the
+/// listener, waker pipe, and optional drain fd already registered (done at
+/// bind so registration errors surface to the caller).
+pub(crate) fn run(shared: Arc<Shared>, reactor: Reactor, listener: TcpListener) {
+    let now = Instant::now();
+    let mut el = EventLoop {
+        shared,
+        reactor,
+        listener: Some(listener),
+        wheel: TimerWheel::new(now, POLL, 256),
+        conns: Vec::new(),
+        free: Vec::new(),
+        active: 0,
+        stamp: 0,
+        draining: false,
+        drain_deadline: None,
+        frame_events: Vec::new(),
+        completions: Vec::new(),
+        due: Vec::new(),
+    };
+    el.update_fds_gauge();
+    el.run();
+}
+
+impl EventLoop {
+    fn run(&mut self) {
+        let mut events: Vec<Event> = Vec::with_capacity(1024);
+        loop {
+            if self.reactor.wait(POLL, &mut events).is_err() {
+                // A broken backend is unrecoverable; treat it as an
+                // immediate forced drain.
+                break;
+            }
+            let now = Instant::now();
+            if obs::enabled() && !events.is_empty() {
+                let r = obs::global();
+                r.srv_wakeups.incr();
+                r.srv_ready_batch.record(events.len() as u64);
+            }
+            if !self.draining && self.shared.stopping() {
+                self.begin_drain(now);
+            }
+            for ev in &events {
+                match ev.token {
+                    TOK_LISTENER => self.accept_ready(now),
+                    TOK_WAKER => self.shared.completions.pipe.drain(),
+                    TOK_DRAIN => {
+                        if let Some(fd) = self.shared.cfg.drain_fd {
+                            drain_readable(fd);
+                        }
+                        self.shared.stopping.store(true, Ordering::Release);
+                        if !self.draining {
+                            self.begin_drain(now);
+                        }
+                    }
+                    t => self.conn_event(t - TOK_CONN0, ev.readable, ev.writable, now),
+                }
+            }
+            self.process_completions(now);
+            self.fire_timers(now);
+            if self.draining {
+                self.progress_drain(now);
+                if self.active == 0 {
+                    break;
+                }
+                if self.drain_deadline.is_some_and(|d| now >= d) {
+                    break;
+                }
+            }
+        }
+        // Whatever is still open missed the drain deadline (or the backend
+        // died). Close it all so the active gauge ends at zero.
+        let left = self.active;
+        for slot in 0..self.conns.len() {
+            self.close_conn(slot);
+        }
+        self.shared.connections_left.store(left, Ordering::SeqCst);
+    }
+
+    // ---- accept path ----------------------------------------------------
+
+    fn accept_ready(&mut self, now: Instant) {
+        loop {
+            let accepted = match self.listener.as_ref() {
+                Some(l) => l.accept(),
+                None => return,
+            };
+            match accepted {
+                Ok((stream, _)) => {
+                    if obs::enabled() {
+                        obs::global().srv_accepted.incr();
+                    }
+                    if self.active >= self.shared.cfg.max_conns {
+                        if obs::enabled() {
+                            obs::global().srv_rejected_cap.incr();
+                            obs::global().record_error(None, "overloaded");
+                        }
+                        reject_at_cap(stream, &self.shared.cfg);
+                        continue;
+                    }
+                    self.register_conn(stream, now);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return,
+                // Transient accept errors (ECONNABORTED and friends):
+                // level triggering re-reports anything still pending.
+                Err(_) => return,
+            }
+        }
+    }
+
+    fn register_conn(&mut self, stream: TcpStream, now: Instant) {
+        if stream.set_nonblocking(true).is_err() {
+            return;
+        }
+        let _ = stream.set_nodelay(true);
+        let fd = stream.as_raw_fd();
+        let slot = self.free.pop().unwrap_or_else(|| {
+            self.conns.push(None);
+            self.conns.len() - 1
+        });
+        self.stamp += 1;
+        let conn = Conn::new(stream, fd, self.stamp, self.shared.cfg.max_request_bytes, now);
+        if self.reactor.add(fd, TOK_CONN0 + slot, Interest::READ).is_err() {
+            self.free.push(slot);
+            return;
+        }
+        self.conns[slot] = Some(conn);
+        self.active += 1;
+        if obs::enabled() {
+            obs::global().srv_active.set(self.active as u64);
+        }
+        self.update_fds_gauge();
+        self.arm_timer(slot, now);
+    }
+
+    // ---- connection events ----------------------------------------------
+
+    fn conn_event(&mut self, slot: usize, readable: bool, writable: bool, now: Instant) {
+        // Stale tokens (the conn closed earlier in this batch) miss here;
+        // a reused slot just gets harmless read/write probes.
+        if self.conns.get(slot).map_or(true, |s| s.is_none()) {
+            return;
+        }
+        if writable && !self.flush(slot, now) {
+            return;
+        }
+        if readable && !self.read_ready(slot, now) {
+            return;
+        }
+        self.after_touch(slot, now);
+    }
+
+    /// Drain the socket up to the per-event budget. Returns `false` when
+    /// the connection was closed.
+    fn read_ready(&mut self, slot: usize, now: Instant) -> bool {
+        let mut buf = [0u8; READ_CHUNK];
+        let mut total = 0usize;
+        loop {
+            let result = {
+                let conn = match self.conns[slot].as_mut() {
+                    Some(c) => c,
+                    None => return false,
+                };
+                if conn.closing || conn.eof || self.draining || conn.paused(&self.shared.cfg) {
+                    return true;
+                }
+                conn.stream.read(&mut buf)
+            };
+            match result {
+                Ok(0) => {
+                    let conn = self.conns[slot].as_mut().unwrap();
+                    conn.eof = true;
+                    conn.last_activity = now;
+                    return true;
+                }
+                Ok(n) => {
+                    let mut evs = std::mem::take(&mut self.frame_events);
+                    {
+                        let conn = self.conns[slot].as_mut().unwrap();
+                        conn.last_activity = now;
+                        conn.framer.push(&buf[..n], &mut evs);
+                        if conn.framer.has_partial() {
+                            if conn.request_started.is_none() {
+                                conn.request_started = Some(now);
+                            }
+                        } else {
+                            conn.request_started = None;
+                        }
+                    }
+                    for ev in evs.drain(..) {
+                        self.handle_frame(slot, ev, now);
+                    }
+                    self.frame_events = evs;
+                    total += n;
+                    if total >= READ_BUDGET {
+                        return true;
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return true,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(_) => {
+                    self.close_conn(slot);
+                    return false;
+                }
+            }
+        }
+    }
+
+    /// One framing outcome → one sequenced response (or a pending
+    /// submission). Never closes the connection.
+    fn handle_frame(&mut self, slot: usize, ev: FrameEvent, _now: Instant) {
+        let bytes = match ev {
+            FrameEvent::TooLarge => {
+                if obs::enabled() {
+                    obs::global().srv_too_large.incr();
+                    obs::global().record_error(None, "too_large");
+                }
+                let e = Error::TooLarge(format!(
+                    "request line exceeds {} bytes (ANNETTE_MAX_REQUEST_BYTES); \
+                     discarded to next newline",
+                    self.shared.cfg.max_request_bytes
+                ));
+                self.respond_error(slot, &e);
+                return;
+            }
+            FrameEvent::Line(bytes) => bytes,
+        };
+        if obs::enabled() {
+            obs::global().srv_lines.incr();
+        }
+        if bytes == HEALTH_LINE {
+            let text = if self.shared.stopping() { "draining" } else { "ok" };
+            let mut line = String::with_capacity(text.len() + 1);
+            line.push_str(text);
+            line.push('\n');
+            self.respond_now(slot, line);
+            return;
+        }
+        match String::from_utf8(bytes) {
+            Ok(s) => {
+                let conn = self.conns[slot].as_mut().unwrap();
+                let seq = conn.next_seq;
+                conn.next_seq += 1;
+                conn.pending.push_back((seq, s));
+            }
+            Err(_) => {
+                if obs::enabled() {
+                    obs::global().record_error(None, "invalid");
+                }
+                let e = Error::Invalid("request line is not valid UTF-8".to_string());
+                self.respond_error(slot, &e);
+            }
+        }
+    }
+
+    /// Assign the next sequence number to an immediately-known response.
+    fn respond_now(&mut self, slot: usize, framed: String) {
+        let seq = {
+            let conn = self.conns[slot].as_mut().unwrap();
+            let seq = conn.next_seq;
+            conn.next_seq += 1;
+            seq
+        };
+        self.enqueue_response(slot, seq, framed);
+    }
+
+    fn respond_error(&mut self, slot: usize, e: &Error) {
+        let mut line = String::new();
+        Service::write_error_line(e, &mut line);
+        line.push('\n');
+        self.respond_now(slot, line);
+    }
+
+    /// Park (or append) a completed response, then append every response
+    /// whose turn has come — the input-order write-back.
+    fn enqueue_response(&mut self, slot: usize, seq: u64, framed: String) {
+        let conn = self.conns[slot].as_mut().unwrap();
+        conn.parked.insert(seq, framed);
+        while let Some(line) = conn.parked.remove(&conn.write_seq) {
+            conn.out.extend_from_slice(line.as_bytes());
+            conn.write_seq += 1;
+        }
+    }
+
+    /// Move pending requests into the pool up to the in-flight budget.
+    fn submit_ready(&mut self, slot: usize) {
+        loop {
+            let (gen, seq, line) = {
+                let cfg = &self.shared.cfg;
+                let conn = match self.conns[slot].as_mut() {
+                    Some(c) => c,
+                    None => return,
+                };
+                if conn.inflight >= cfg.max_inflight_per_conn
+                    || conn.unflushed() >= cfg.max_conn_outbuf_bytes
+                {
+                    return;
+                }
+                match conn.pending.pop_front() {
+                    Some((seq, line)) => (conn.gen, seq, line),
+                    None => return,
+                }
+            };
+            let done = {
+                let shared = Arc::clone(&self.shared);
+                Box::new(move |resp: String| {
+                    shared.completions.push(Completion {
+                        slot,
+                        gen,
+                        seq,
+                        line: resp,
+                    });
+                })
+            };
+            match self.shared.pool.try_submit(Job { line, done }) {
+                Ok(()) => {
+                    let conn = self.conns[slot].as_mut().unwrap();
+                    conn.inflight += 1;
+                    if obs::enabled() {
+                        obs::global().srv_inflight_depth.record(conn.inflight as u64);
+                    }
+                }
+                Err(_refused) => {
+                    if obs::enabled() {
+                        obs::global().srv_shed.incr();
+                        obs::global().record_error(None, "overloaded");
+                    }
+                    let e = Error::Overloaded(format!(
+                        "in-flight queue is full at {} requests (ANNETTE_QUEUE_CAP); \
+                         request shed",
+                        self.shared.cfg.queue_cap
+                    ));
+                    let mut framed = String::new();
+                    Service::write_error_line(&e, &mut framed);
+                    framed.push('\n');
+                    self.enqueue_response(slot, seq, framed);
+                }
+            }
+        }
+    }
+
+    fn process_completions(&mut self, now: Instant) {
+        self.shared.completions.take(&mut self.completions);
+        if self.completions.is_empty() {
+            return;
+        }
+        let mut items = std::mem::take(&mut self.completions);
+        for c in items.drain(..) {
+            let live = self
+                .conns
+                .get(c.slot)
+                .and_then(|s| s.as_ref())
+                .is_some_and(|conn| conn.gen == c.gen);
+            if !live {
+                // The connection died while its request was in flight; the
+                // response has nowhere to go.
+                continue;
+            }
+            {
+                let conn = self.conns[c.slot].as_mut().unwrap();
+                conn.inflight -= 1;
+                conn.last_activity = now;
+            }
+            self.enqueue_response(c.slot, c.seq, c.line);
+            self.after_touch(c.slot, now);
+        }
+        self.completions = items;
+    }
+
+    /// Post-touch invariants: refill the pool, flush, close if finished,
+    /// then re-sync interest and the deadline.
+    fn after_touch(&mut self, slot: usize, now: Instant) {
+        if self.conns.get(slot).map_or(true, |s| s.is_none()) {
+            return;
+        }
+        self.submit_ready(slot);
+        if !self.flush(slot, now) {
+            return;
+        }
+        if self.maybe_close(slot) {
+            return;
+        }
+        self.sync_interest(slot, now);
+        self.arm_timer(slot, now);
+    }
+
+    /// Write as much buffered output as the socket takes. Returns `false`
+    /// when the connection was closed.
+    fn flush(&mut self, slot: usize, now: Instant) -> bool {
+        let fatal = {
+            let conn = match self.conns[slot].as_mut() {
+                Some(c) => c,
+                None => return false,
+            };
+            let mut fatal = false;
+            while conn.written < conn.out.len() {
+                match conn.stream.write(&conn.out[conn.written..]) {
+                    Ok(0) => {
+                        fatal = true;
+                        break;
+                    }
+                    Ok(n) => {
+                        conn.written += n;
+                        conn.write_stalled = None;
+                        conn.last_activity = now;
+                    }
+                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        if conn.write_stalled.is_none() {
+                            conn.write_stalled = Some(now);
+                        }
+                        break;
+                    }
+                    Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                    Err(_) => {
+                        fatal = true;
+                        break;
+                    }
+                }
+            }
+            if !fatal {
+                if conn.written == conn.out.len() {
+                    conn.out.clear();
+                    conn.written = 0;
+                    conn.write_stalled = None;
+                } else if conn.written >= COMPACT_AT {
+                    conn.out.drain(..conn.written);
+                    conn.written = 0;
+                }
+            }
+            fatal
+        };
+        if fatal {
+            self.close_conn(slot);
+            return false;
+        }
+        true
+    }
+
+    /// Close when the connection has answered everything it will ever owe:
+    /// after EOF (half-close) or once `closing` is set by a deadline or
+    /// the drain goodbye. Returns `true` when the connection was closed.
+    fn maybe_close(&mut self, slot: usize) -> bool {
+        let done = {
+            let conn = self.conns[slot].as_ref().unwrap();
+            (conn.eof || conn.closing) && conn.answered() && conn.unflushed() == 0
+        };
+        if done {
+            self.close_conn(slot);
+        }
+        done
+    }
+
+    fn sync_interest(&mut self, slot: usize, now: Instant) {
+        let (fd, cur, want, resumed) = {
+            let conn = self.conns[slot].as_ref().unwrap();
+            let want = Interest {
+                read: !conn.closing
+                    && !conn.eof
+                    && !self.draining
+                    && !conn.paused(&self.shared.cfg),
+                write: conn.unflushed() > 0,
+            };
+            let resumed = want.read && !conn.interest.read;
+            (conn.fd, conn.interest, want, resumed)
+        };
+        if want == cur {
+            return;
+        }
+        if self.reactor.modify(fd, TOK_CONN0 + slot, want).is_err() {
+            self.close_conn(slot);
+            return;
+        }
+        let conn = self.conns[slot].as_mut().unwrap();
+        conn.interest = want;
+        if resumed && conn.request_started.is_some() {
+            // The pause was ours, not the peer's: restart the read clock
+            // on the buffered partial line.
+            conn.request_started = Some(now);
+        }
+    }
+
+    fn close_conn(&mut self, slot: usize) {
+        if let Some(conn) = self.conns.get_mut(slot).and_then(|s| s.take()) {
+            let _ = self.reactor.del(conn.fd);
+            self.free.push(slot);
+            self.active -= 1;
+            if obs::enabled() {
+                obs::global().srv_active.set(self.active as u64);
+            }
+            self.update_fds_gauge();
+            // Dropping `conn.stream` closes the socket.
+        }
+    }
+
+    // ---- timers ---------------------------------------------------------
+
+    /// Reschedule the connection's wheel entry when its earliest deadline
+    /// moved. Old entries stay in the wheel and die by stamp mismatch.
+    fn arm_timer(&mut self, slot: usize, _now: Instant) {
+        let want = {
+            let conn = match self.conns[slot].as_ref() {
+                Some(c) => c,
+                None => return,
+            };
+            conn.deadline(&self.shared.cfg, self.draining)
+        };
+        let conn = self.conns[slot].as_mut().unwrap();
+        if want == conn.scheduled {
+            return;
+        }
+        self.stamp += 1;
+        conn.timer_gen = self.stamp;
+        conn.scheduled = want;
+        if let Some(at) = want {
+            self.wheel.schedule(at, slot, self.stamp);
+        }
+    }
+
+    fn fire_timers(&mut self, now: Instant) {
+        self.due.clear();
+        self.wheel.advance(now, &mut self.due);
+        if self.due.is_empty() {
+            return;
+        }
+        let due = std::mem::take(&mut self.due);
+        for &(slot, gen) in &due {
+            self.fire_timer(slot, gen, now);
+        }
+        self.due = due;
+    }
+
+    fn fire_timer(&mut self, slot: usize, gen: u64, now: Instant) {
+        let fired = {
+            let cfg = &self.shared.cfg;
+            let conn = match self.conns.get_mut(slot).and_then(|s| s.as_mut()) {
+                Some(c) => c,
+                None => return,
+            };
+            if conn.timer_gen != gen {
+                return;
+            }
+            conn.scheduled = None;
+            // Decide which deadline actually expired *now*; state may have
+            // moved since the entry was scheduled.
+            let write_due = conn.write_stalled.map(|t| t + cfg.write_timeout);
+            let read_due = conn.request_started.map(|t| t + cfg.read_timeout);
+            if write_due.is_some_and(|d| now >= d) {
+                Fired::WriteTimeout
+            } else if self.draining || conn.eof || conn.closing || conn.paused(cfg) {
+                Fired::Rearm
+            } else if read_due.is_some_and(|d| now >= d) {
+                Fired::ReadTimeout
+            } else if conn.request_started.is_none()
+                && !conn.busy()
+                && now >= conn.last_activity + cfg.idle_timeout
+            {
+                Fired::IdleTimeout
+            } else {
+                Fired::Rearm
+            }
+        };
+        match fired {
+            Fired::WriteTimeout => {
+                if obs::enabled() {
+                    obs::global().srv_write_timeouts.incr();
+                }
+                self.close_conn(slot);
+            }
+            Fired::ReadTimeout => {
+                if obs::enabled() {
+                    obs::global().srv_read_timeouts.incr();
+                    obs::global().record_error(None, "timeout");
+                }
+                let e = Error::Timeout(format!(
+                    "request not completed within {} ms (ANNETTE_READ_TIMEOUT_MS)",
+                    self.shared.cfg.read_timeout.as_millis()
+                ));
+                self.respond_error(slot, &e);
+                self.conns[slot].as_mut().unwrap().closing = true;
+                self.after_touch(slot, now);
+            }
+            Fired::IdleTimeout => {
+                if obs::enabled() {
+                    obs::global().srv_idle_closed.incr();
+                }
+                self.close_conn(slot);
+            }
+            Fired::Rearm => self.arm_timer(slot, now),
+        }
+    }
+
+    // ---- drain ----------------------------------------------------------
+
+    fn begin_drain(&mut self, now: Instant) {
+        self.draining = true;
+        self.drain_deadline = Some(now + self.shared.cfg.drain_timeout);
+        if let Some(l) = self.listener.take() {
+            let _ = self.reactor.del(l.as_raw_fd());
+            // Dropping the listener closes it: new connects are refused by
+            // the OS from here on.
+        }
+        self.update_fds_gauge();
+        for slot in 0..self.conns.len() {
+            if self.conns[slot].is_some() {
+                self.sync_interest(slot, now);
+            }
+        }
+    }
+
+    /// Queue the goodbye on every connection that has answered everything;
+    /// flushing it closes the connection via `after_touch`.
+    fn progress_drain(&mut self, now: Instant) {
+        for slot in 0..self.conns.len() {
+            let ready = match self.conns[slot].as_ref() {
+                Some(c) => {
+                    !c.goodbye && c.inflight == 0 && c.pending.is_empty() && c.parked.is_empty()
+                }
+                None => false,
+            };
+            if !ready {
+                continue;
+            }
+            {
+                let conn = self.conns[slot].as_mut().unwrap();
+                conn.goodbye = true;
+                conn.closing = true;
+            }
+            let e = shutdown_error();
+            self.respond_error(slot, &e);
+            self.after_touch(slot, now);
+        }
+    }
+
+    // ---- gauges ---------------------------------------------------------
+
+    fn update_fds_gauge(&self) {
+        if !obs::enabled() {
+            return;
+        }
+        let fixed = 1
+            + usize::from(self.listener.is_some())
+            + usize::from(self.shared.cfg.drain_fd.is_some());
+        obs::global().srv_reactor_fds.set((self.active + fixed) as u64);
+    }
 }

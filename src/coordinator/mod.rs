@@ -8,9 +8,11 @@
 //! [`Service`] answering line-delimited JSON requests (`models`,
 //! `estimate`, `explore`, `stats`, `health`) for one device or a whole
 //! fleet, with in-band errors and deterministic, input-ordered parallel
-//! batch serving. [`server`] puts that service on a `std::net` TCP socket
-//! with backpressure, deadlines, load shedding, and graceful drain. The
-//! full wire protocol is specified in `docs/ARCHITECTURE.md`.
+//! batch serving. [`server`] puts that service on a TCP socket behind an
+//! event-driven reactor (epoll/poll, one thread for every socket) with
+//! pipelined connections, backpressure, deadlines, load shedding, and
+//! graceful drain. The full wire protocol is specified in
+//! `docs/ARCHITECTURE.md`.
 
 mod conn;
 pub mod orchestrator;

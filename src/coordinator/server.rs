@@ -3,51 +3,63 @@
 //!
 //! The server speaks the same line-delimited JSON protocol as
 //! [`Service::serve_lines`] — one request per line, one response line per
-//! request, errors in-band — but over `std::net` sockets, engineered for
-//! hostile or merely unlucky peers:
+//! request, errors in-band — over an event-driven reactor: **one thread**
+//! owns every socket through [`crate::net::reactor::Reactor`] (raw-syscall
+//! epoll on Linux, `poll(2)` elsewhere) and a fixed pool of workers runs
+//! the requests. Concurrency therefore scales with open sockets, not OS
+//! threads, and requests **pipeline**: a client may have up to
+//! [`ServerConfig::max_inflight_per_conn`] requests in flight on one
+//! connection and still receives responses in request order,
+//! byte-identical to [`Service::handle`].
+//!
+//! Engineered for hostile or merely unlucky peers:
 //!
 //! * **Connection cap** ([`ServerConfig::max_conns`]): excess connections
 //!   get one in-band `overloaded` error line and are closed, instead of
 //!   piling up file descriptors.
-//! * **Deadlines**: a per-request read deadline defeats slow-loris senders,
-//!   a write timeout bounds slow readers, and an idle keep-alive timeout
-//!   reclaims abandoned connections.
+//! * **Deadlines** (driven by the reactor's timer wheel): a per-request
+//!   read deadline defeats slow-loris senders, a write-stall timeout
+//!   bounds slow readers, and an idle keep-alive timeout reclaims
+//!   abandoned connections.
 //! * **Bounded buffers**: request lines are framed by
-//!   [`crate::net::framer::LineFramer`], so a client streaming an endless
-//!   line costs a capped buffer and gets a `too_large` error with
-//!   truncation-safe resync — never unbounded memory.
+//!   [`crate::net::framer::LineFramer`] (oversized line → `too_large`
+//!   with truncation-safe resync); per-connection output buffers are
+//!   capped and a connection that won't read its responses stops being
+//!   read — backpressure instead of ballooning memory.
 //! * **Load shedding**: requests flow through the bounded queue of a
 //!   [`crate::net::pool::Pool`]; when it is full the request is refused
 //!   in-band with `overloaded` rather than queued without limit.
-//! * **Graceful drain** ([`ServerHandle::shutdown`]): stop accepting,
-//!   complete in-flight requests within a deadline, flush telemetry, and
-//!   report what was left behind.
+//! * **Graceful drain** ([`ServerHandle::shutdown`], or a byte on
+//!   [`ServerConfig::drain_fd`] — how `annette-serve` turns
+//!   SIGTERM/SIGINT into a drain): stop accepting, complete in-flight
+//!   requests within a deadline, send each connection one `shutdown`
+//!   goodbye, flush telemetry, and report what was left behind.
 //!
-//! For well-formed traffic the response bytes are exactly what
-//! [`Service::handle`] produces, regardless of worker count: framing and
-//! scheduling never leak into the payload. Every limit lives in
-//! [`ServerConfig`], every field has an `ANNETTE_*` environment override
-//! ([`ServerConfig::from_env`]), and every rejection path emits a stable
-//! `error_kind` plus a counter in the [`crate::obs`] registry's `server`
-//! block. The wire contract is specified in docs/ARCHITECTURE.md § Serving.
+//! Every limit lives in [`ServerConfig`], every field has an `ANNETTE_*`
+//! environment override ([`ServerConfig::from_env`]), and every rejection
+//! path emits a stable `error_kind` plus a counter in the [`crate::obs`]
+//! registry's `server` block. The wire contract is specified in
+//! docs/ARCHITECTURE.md § Serving.
 
 use std::io::Write;
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::os::unix::io::{AsRawFd, RawFd};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
-use crate::coordinator::conn;
+use crate::coordinator::conn::{self, TOK_DRAIN, TOK_LISTENER, TOK_WAKER};
 use crate::coordinator::orchestrator::default_threads;
 use crate::coordinator::service::DEFAULT_MAX_REQUEST_BYTES;
 use crate::coordinator::Service;
 use crate::error::{Error, Result};
 use crate::net::pool::Pool;
+use crate::net::reactor::{Interest, Reactor, SelfPipe};
 use crate::obs;
 
-/// How often blocked loops (accept, connection read) wake up to check the
-/// shutdown flag and their deadlines.
+/// The reactor's wait quantum: the upper bound on how stale a shutdown
+/// flag or timer deadline can go unnoticed, and the timer wheel's tick.
 pub(crate) const POLL: Duration = Duration::from_millis(25);
 
 /// Every serving limit in one place. Defaults are production-sane;
@@ -66,8 +78,8 @@ pub struct ServerConfig {
     /// defense; the connection is closed with an in-band `timeout`).
     /// `ANNETTE_READ_TIMEOUT_MS`.
     pub read_timeout: Duration,
-    /// Socket write timeout; a peer that won't read its responses is
-    /// disconnected. `ANNETTE_WRITE_TIMEOUT_MS`.
+    /// How long a write may stay blocked on an unwilling reader before the
+    /// connection is closed. `ANNETTE_WRITE_TIMEOUT_MS`.
     pub write_timeout: Duration,
     /// Keep-alive: a connection with no request in progress is silently
     /// closed after this long. `ANNETTE_IDLE_TIMEOUT_MS`.
@@ -82,6 +94,22 @@ pub struct ServerConfig {
     pub queue_cap: usize,
     /// Worker threads executing requests. `ANNETTE_WORKERS`.
     pub workers: usize,
+    /// Pipelining budget: requests one connection may have in flight (in
+    /// the worker queue or executing) at once. While exhausted the
+    /// connection is not read — per-peer backpressure.
+    /// `ANNETTE_MAX_INFLIGHT_PER_CONN`.
+    pub max_inflight_per_conn: usize,
+    /// Output-buffer pause threshold per connection: once this many
+    /// unflushed response bytes accumulate the connection stops being
+    /// read until the peer drains them. `ANNETTE_MAX_CONN_OUTBUF`.
+    pub max_conn_outbuf_bytes: usize,
+    /// Force a reactor backend (`"epoll"` or `"poll"`); `None` picks the
+    /// platform default. `ANNETTE_REACTOR_BACKEND`.
+    pub reactor_backend: Option<String>,
+    /// Read end of a self-pipe that requests a graceful drain when it
+    /// becomes readable — `annette-serve` wires SIGTERM/SIGINT to its
+    /// write end. Programmatic only (fds don't survive an env var).
+    pub drain_fd: Option<RawFd>,
     /// How long [`ServerHandle::shutdown`] waits for open connections to
     /// finish before giving up on them. `ANNETTE_DRAIN_TIMEOUT_MS`.
     pub drain_timeout: Duration,
@@ -111,6 +139,10 @@ impl Default for ServerConfig {
             max_request_bytes: DEFAULT_MAX_REQUEST_BYTES,
             queue_cap: 1024,
             workers: default_threads(),
+            max_inflight_per_conn: 32,
+            max_conn_outbuf_bytes: 256 * 1024,
+            reactor_backend: None,
+            drain_fd: None,
             drain_timeout: Duration::from_millis(5_000),
             handler_delay: Duration::ZERO,
             fault_panic_token: None,
@@ -152,6 +184,13 @@ impl ServerConfig {
             max_request_bytes: env_usize("ANNETTE_MAX_REQUEST_BYTES", d.max_request_bytes),
             queue_cap: env_usize("ANNETTE_QUEUE_CAP", d.queue_cap),
             workers: env_usize("ANNETTE_WORKERS", d.workers),
+            max_inflight_per_conn: env_usize(
+                "ANNETTE_MAX_INFLIGHT_PER_CONN",
+                d.max_inflight_per_conn,
+            ),
+            max_conn_outbuf_bytes: env_usize("ANNETTE_MAX_CONN_OUTBUF", d.max_conn_outbuf_bytes),
+            reactor_backend: std::env::var("ANNETTE_REACTOR_BACKEND").ok(),
+            drain_fd: None,
             drain_timeout: env_ms("ANNETTE_DRAIN_TIMEOUT_MS", d.drain_timeout),
             handler_delay: env_ms("ANNETTE_FAULT_HANDLER_DELAY_MS", d.handler_delay),
             fault_panic_token: std::env::var("ANNETTE_FAULT_PANIC_TOKEN").ok(),
@@ -160,72 +199,63 @@ impl ServerConfig {
     }
 }
 
-/// Open connections, counted under a mutex so drain can wait on the count
-/// reaching zero with a plain condvar. Mirrored into the obs `srv_active`
-/// gauge on every change.
-pub(crate) struct ConnCount {
-    count: Mutex<usize>,
-    zero: Condvar,
+/// A finished response on its way back from a worker to the event loop:
+/// which connection slot (validated by generation) and which sequence
+/// number in that connection's request order.
+pub(crate) struct Completion {
+    pub(crate) slot: usize,
+    pub(crate) gen: u64,
+    pub(crate) seq: u64,
+    pub(crate) line: String,
 }
 
-impl ConnCount {
-    fn new() -> ConnCount {
-        ConnCount {
-            count: Mutex::new(0),
-            zero: Condvar::new(),
+/// The worker→reactor handoff: a mutex-guarded batch plus the self-pipe
+/// that wakes the event loop out of its wait. Pushes coalesce — only the
+/// push that makes the batch non-empty writes the wake byte.
+pub(crate) struct Completions {
+    queue: Mutex<Vec<Completion>>,
+    pub(crate) pipe: SelfPipe,
+}
+
+impl Completions {
+    fn new() -> std::io::Result<Completions> {
+        Ok(Completions {
+            queue: Mutex::new(Vec::new()),
+            pipe: SelfPipe::new()?,
+        })
+    }
+
+    /// Called from worker threads; never blocks beyond the queue mutex.
+    pub(crate) fn push(&self, c: Completion) {
+        let was_empty = {
+            let (mut q, _) = crate::sync::lock_recover(&self.queue);
+            let was_empty = q.is_empty();
+            q.push(c);
+            was_empty
+        };
+        if was_empty {
+            self.pipe.wake();
         }
     }
 
-    /// Claim a connection slot; `false` means the cap is already reached
-    /// (the caller rejects the connection). The count lock recovers from
-    /// poison (the counter is a plain usize — no repair needed) so a
-    /// panicking connection thread cannot wedge accept or drain.
-    fn try_enter(&self, max: usize) -> bool {
-        let (mut c, _) = crate::sync::lock_recover(&self.count);
-        if *c >= max {
-            return false;
-        }
-        *c += 1;
-        if obs::enabled() {
-            obs::global().srv_active.set(*c as u64);
-        }
-        true
-    }
-
-    pub(crate) fn leave(&self) {
-        let (mut c, _) = crate::sync::lock_recover(&self.count);
-        *c = c.saturating_sub(1);
-        if obs::enabled() {
-            obs::global().srv_active.set(*c as u64);
-        }
-        if *c == 0 {
-            self.zero.notify_all();
-        }
-    }
-
-    /// Wait up to `timeout` for every connection to close; returns how
-    /// many were still open when the wait ended.
-    fn wait_zero(&self, timeout: Duration) -> usize {
-        let deadline = Instant::now() + timeout;
-        let (mut c, _) = crate::sync::lock_recover(&self.count);
-        while *c > 0 {
-            let now = Instant::now();
-            if now >= deadline {
-                return *c;
-            }
-            c = crate::sync::wait_timeout_recover(&self.zero, &self.count, c, deadline - now).0;
-        }
-        0
+    /// Swap the batch into `into` (the event loop's reusable, empty
+    /// vector) — one lock hold per wakeup, no per-item locking.
+    pub(crate) fn take(&self, into: &mut Vec<Completion>) {
+        let (mut q, _) = crate::sync::lock_recover(&self.queue);
+        std::mem::swap(&mut *q, into);
     }
 }
 
-/// State shared by the accept loop, every connection thread, and the
-/// shutdown path.
+/// State shared by the event loop, the worker pool's completion callbacks,
+/// and the shutdown path.
 pub(crate) struct Shared {
     pub(crate) cfg: ServerConfig,
     pub(crate) pool: Pool,
     pub(crate) stopping: AtomicBool,
-    pub(crate) conns: ConnCount,
+    pub(crate) completions: Completions,
+    /// Written once by the event loop as it exits: connections the drain
+    /// deadline forced closed (0 on a clean drain).
+    pub(crate) connections_left: AtomicUsize,
 }
 
 impl Shared {
@@ -243,25 +273,30 @@ pub struct DrainReport {
     pub connections_left: usize,
 }
 
-/// A bound listener that has not started accepting yet. Produced by
-/// [`Server::bind`]; consumed by [`Server::spawn`].
+/// A bound listener and reactor that have not started serving yet.
+/// Produced by [`Server::bind`]; consumed by [`Server::spawn`].
 pub struct Server {
     shared: Arc<Shared>,
+    reactor: Reactor,
     listener: TcpListener,
     addr: SocketAddr,
 }
 
 impl Server {
-    /// Bind `cfg.addr` and stand up the worker pool around `service`.
-    /// The service's request-size cap is overwritten with
-    /// `cfg.max_request_bytes` so the wire framer and the dispatch gate
-    /// agree on one number.
+    /// Bind `cfg.addr`, stand up the reactor and the worker pool around
+    /// `service`, and register the listener, the completion waker, and the
+    /// optional drain pipe — so every registration error surfaces here,
+    /// not inside the event loop. The service's request-size cap is
+    /// overwritten with `cfg.max_request_bytes` so the wire framer and the
+    /// dispatch gate agree on one number.
     pub fn bind(mut service: Service, cfg: ServerConfig) -> Result<Server> {
         let mut cfg = cfg;
         cfg.max_conns = cfg.max_conns.max(1);
         cfg.queue_cap = cfg.queue_cap.max(1);
         cfg.workers = cfg.workers.max(1);
         cfg.max_request_bytes = cfg.max_request_bytes.max(1);
+        cfg.max_inflight_per_conn = cfg.max_inflight_per_conn.max(1);
+        cfg.max_conn_outbuf_bytes = cfg.max_conn_outbuf_bytes.max(1024);
         // A zero deadline would close every connection instantly; clamp to
         // the poll interval instead of treating zero as infinity.
         cfg.read_timeout = cfg.read_timeout.max(POLL);
@@ -272,6 +307,14 @@ impl Server {
         let listener = TcpListener::bind(&cfg.addr)?;
         listener.set_nonblocking(true)?;
         let addr = listener.local_addr()?;
+
+        let mut reactor = Reactor::new(cfg.reactor_backend.as_deref())?;
+        let completions = Completions::new()?;
+        reactor.add(listener.as_raw_fd(), TOK_LISTENER, Interest::READ)?;
+        reactor.add(completions.pipe.read_fd(), TOK_WAKER, Interest::READ)?;
+        if let Some(fd) = cfg.drain_fd {
+            reactor.add(fd, TOK_DRAIN, Interest::READ)?;
+        }
 
         let service = Arc::new(service);
         let panic_token = cfg.fault_panic_token.clone();
@@ -295,8 +338,10 @@ impl Server {
                 cfg,
                 pool,
                 stopping: AtomicBool::new(false),
-                conns: ConnCount::new(),
+                completions,
+                connections_left: AtomicUsize::new(0),
             }),
+            reactor,
             listener,
             addr,
         })
@@ -307,31 +352,37 @@ impl Server {
         self.addr
     }
 
-    /// Start the accept loop on its own thread and return the handle that
+    /// The reactor backend serving this listener (`"epoll"` or `"poll"`).
+    pub fn backend_name(&self) -> &'static str {
+        self.reactor.backend_name()
+    }
+
+    /// Start the event loop on its own thread and return the handle that
     /// controls the running server.
     pub fn spawn(self) -> ServerHandle {
         let shared = Arc::clone(&self.shared);
+        let reactor = self.reactor;
         let listener = self.listener;
-        let accept = std::thread::Builder::new()
-            .name("annette-accept".to_string())
-            .spawn(move || accept_loop(&listener, &shared))
-            .expect("spawn accept loop");
+        let thread = std::thread::Builder::new()
+            .name("annette-reactor".to_string())
+            .spawn(move || conn::run(shared, reactor, listener))
+            .expect("spawn reactor event loop");
         ServerHandle {
             shared: self.shared,
             addr: self.addr,
-            accept: Some(accept),
+            thread: Some(thread),
         }
     }
 }
 
 /// Control handle for a running server: its address and the graceful
 /// shutdown. Dropping the handle without calling [`ServerHandle::shutdown`]
-/// performs the same drain (so tests can't leak the accept thread), minus
+/// performs the same drain (so tests can't leak the reactor thread), minus
 /// the report.
 pub struct ServerHandle {
     shared: Arc<Shared>,
     addr: SocketAddr,
-    accept: Option<JoinHandle<()>>,
+    thread: Option<JoinHandle<()>>,
 }
 
 impl ServerHandle {
@@ -340,27 +391,47 @@ impl ServerHandle {
         self.addr
     }
 
-    /// Graceful drain: stop accepting, let open connections and queued
-    /// requests finish within [`ServerConfig::drain_timeout`], run every
-    /// queued job to completion, flush span tracing, optionally persist
-    /// the final obs snapshot, and report what was left.
+    /// Graceful drain: stop accepting, let in-flight requests finish
+    /// within [`ServerConfig::drain_timeout`] (each connection gets one
+    /// in-band `shutdown` goodbye), run every queued job to completion,
+    /// flush span tracing, optionally persist the final obs snapshot, and
+    /// report what was left.
     pub fn shutdown(mut self) -> DrainReport {
         self.shutdown_inner()
     }
 
-    fn shutdown_inner(&mut self) -> DrainReport {
-        self.shared.stopping.store(true, Ordering::Release);
-        if let Some(h) = self.accept.take() {
-            let _ = h.join();
-        } else {
+    /// Block until the server drains on its own — a byte on the drain
+    /// pipe (SIGTERM/SIGINT in `annette-serve`) or a reactor failure —
+    /// then finalize exactly like [`ServerHandle::shutdown`].
+    pub fn join(mut self) -> DrainReport {
+        let Some(h) = self.thread.take() else {
             return DrainReport {
                 drained: true,
                 connections_left: 0,
             };
-        }
-        let left = self.shared.conns.wait_zero(self.shared.cfg.drain_timeout);
-        // Workers drain the queue before exiting, so anything a connection
-        // managed to submit still completes.
+        };
+        let _ = h.join();
+        self.finalize()
+    }
+
+    fn shutdown_inner(&mut self) -> DrainReport {
+        let Some(h) = self.thread.take() else {
+            return DrainReport {
+                drained: true,
+                connections_left: 0,
+            };
+        };
+        self.shared.stopping.store(true, Ordering::Release);
+        // The event loop notices `stopping` within one POLL quantum; the
+        // wake just makes it immediate.
+        self.shared.completions.pipe.wake();
+        let _ = h.join();
+        self.finalize()
+    }
+
+    fn finalize(&self) -> DrainReport {
+        // Workers drain the queue before exiting; completions for already-
+        // closed connections are simply dropped.
         self.shared.pool.shutdown();
         obs::trace::flush_if_active();
         if obs::enabled() {
@@ -370,6 +441,7 @@ impl ServerHandle {
             let json = obs::global().snapshot().to_value().to_string();
             let _ = std::fs::write(path, json);
         }
+        let left = self.shared.connections_left.load(Ordering::SeqCst);
         DrainReport {
             drained: left == 0,
             connections_left: left,
@@ -379,54 +451,18 @@ impl ServerHandle {
 
 impl Drop for ServerHandle {
     fn drop(&mut self) {
-        if self.accept.is_some() {
+        if self.thread.is_some() {
             let _ = self.shutdown_inner();
-        }
-    }
-}
-
-fn accept_loop(listener: &TcpListener, shared: &Arc<Shared>) {
-    loop {
-        if shared.stopping() {
-            return;
-        }
-        match listener.accept() {
-            Ok((stream, _)) => {
-                if obs::enabled() {
-                    obs::global().srv_accepted.incr();
-                }
-                if !shared.conns.try_enter(shared.cfg.max_conns) {
-                    if obs::enabled() {
-                        obs::global().srv_rejected_cap.incr();
-                        obs::global().record_error(None, "overloaded");
-                    }
-                    reject_at_cap(stream, &shared.cfg);
-                    continue;
-                }
-                let sh = Arc::clone(shared);
-                let spawned = std::thread::Builder::new()
-                    .name("annette-conn".to_string())
-                    .spawn(move || {
-                        conn::serve(stream, &sh);
-                        sh.conns.leave();
-                    });
-                if spawned.is_err() {
-                    shared.conns.leave();
-                }
-            }
-            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => std::thread::sleep(POLL),
-            Err(_) => {
-                // Transient accept errors (ECONNABORTED and friends): back
-                // off and keep serving.
-                std::thread::sleep(POLL);
-            }
         }
     }
 }
 
 /// One in-band `overloaded` line, then close: the refused client learns
 /// why instead of seeing a bare RST.
-fn reject_at_cap(mut stream: TcpStream, cfg: &ServerConfig) {
+pub(crate) fn reject_at_cap(mut stream: TcpStream, cfg: &ServerConfig) {
+    // Accepted sockets may inherit the listener's nonblocking flag; this
+    // short farewell write is simplest done blocking, under the timeout.
+    let _ = stream.set_nonblocking(false);
     let _ = stream.set_write_timeout(Some(cfg.write_timeout));
     let e = Error::Overloaded(format!(
         "connection cap {} reached (ANNETTE_MAX_CONNS)",
@@ -448,30 +484,43 @@ mod tests {
         // within this test.
         std::env::set_var("ANNETTE_MAX_CONNS", "7");
         std::env::set_var("ANNETTE_READ_TIMEOUT_MS", "250");
+        std::env::set_var("ANNETTE_MAX_INFLIGHT_PER_CONN", "4");
         std::env::set_var("ANNETTE_QUEUE_CAP", "not-a-number");
         let cfg = ServerConfig::from_env();
         std::env::remove_var("ANNETTE_MAX_CONNS");
         std::env::remove_var("ANNETTE_READ_TIMEOUT_MS");
+        std::env::remove_var("ANNETTE_MAX_INFLIGHT_PER_CONN");
         std::env::remove_var("ANNETTE_QUEUE_CAP");
         assert_eq!(cfg.max_conns, 7);
         assert_eq!(cfg.read_timeout, Duration::from_millis(250));
+        assert_eq!(cfg.max_inflight_per_conn, 4);
         assert_eq!(cfg.queue_cap, ServerConfig::default().queue_cap);
     }
 
     #[test]
-    fn conn_count_caps_and_drains() {
-        let c = ConnCount::new();
-        assert!(c.try_enter(2));
-        assert!(c.try_enter(2));
-        assert!(!c.try_enter(2), "third connection must be refused at cap 2");
-        assert_eq!(c.wait_zero(Duration::from_millis(10)), 2);
-        c.leave();
-        std::thread::scope(|s| {
-            s.spawn(|| {
-                std::thread::sleep(Duration::from_millis(30));
-                c.leave();
-            });
-            assert_eq!(c.wait_zero(Duration::from_secs(5)), 0);
+    fn completions_batch_and_wake_coalesce() {
+        let c = Completions::new().unwrap();
+        c.push(Completion {
+            slot: 0,
+            gen: 1,
+            seq: 0,
+            line: "a\n".to_string(),
         });
+        c.push(Completion {
+            slot: 0,
+            gen: 1,
+            seq: 1,
+            line: "b\n".to_string(),
+        });
+        let mut batch = Vec::new();
+        c.take(&mut batch);
+        assert_eq!(batch.len(), 2, "both completions in one batch");
+        assert_eq!((batch[0].seq, batch[1].seq), (0, 1), "push order kept");
+        batch.clear();
+        c.take(&mut batch);
+        assert!(batch.is_empty(), "second take finds an empty queue");
+        // The coalesced wake is a single pipe byte; draining it leaves the
+        // pipe quiet (covered further by the reactor's self-pipe test).
+        c.pipe.drain();
     }
 }

@@ -131,6 +131,33 @@ mod tests {
     }
 
     #[test]
+    fn one_byte_per_feed_accumulates_across_many_pushes() {
+        // The reactor makes fragmented reads the common case: a request
+        // (and its \r\n) arriving one byte per readiness event must
+        // reassemble exactly, with the partial flag armed the whole way.
+        let mut f = LineFramer::new(32);
+        let mut out = Vec::new();
+        let payload = b"{\"op\":\"models\"}\r\n";
+        for (i, &b) in payload.iter().enumerate() {
+            assert!(out.is_empty(), "no event before the newline (byte {i})");
+            f.push(&[b], &mut out);
+            // Partial from the first byte until the \n lands; the split
+            // \r\n means the \r is buffered as payload, then stripped.
+            let done = i == payload.len() - 1;
+            assert_eq!(f.has_partial(), !done, "partial flag at byte {i}");
+        }
+        assert_eq!(out, vec![line("{\"op\":\"models\"}")]);
+        // A second fragmented line through the same framer: state fully
+        // reset between requests.
+        out.clear();
+        for &b in b"health\r\n" {
+            f.push(&[b], &mut out);
+        }
+        assert_eq!(out, vec![line("health")]);
+        assert!(!f.has_partial());
+    }
+
+    #[test]
     fn cap_is_inclusive_at_the_boundary() {
         let mut f = LineFramer::new(5);
         assert_eq!(push_all(&mut f, b"12345\n"), vec![line("12345")]);

@@ -1,9 +1,16 @@
-//! Zero-dependency networking helpers backing the TCP serving layer
+//! Zero-dependency networking machinery backing the TCP serving layer
 //! ([`crate::coordinator::Server`]).
 //!
-//! Two pieces, both engineered for hostile peers and both unit-testable
-//! without a socket:
+//! Three pieces, engineered for hostile peers and unit-testable without a
+//! live server:
 //!
+//! * [`reactor::Reactor`] — readiness multiplexing over raw-syscall
+//!   `epoll` (Linux) or portable `poll(2)`, behind one level-triggered
+//!   [`reactor::Backend`] trait. Ships with the [`reactor::SelfPipe`]
+//!   waker (worker completions and SIGTERM/SIGINT drains both poke it)
+//!   and the [`reactor::TimerWheel`] that drives every serving deadline.
+//!   This module is Unix-only; the rest of the crate stays
+//!   platform-neutral.
 //! * [`framer::LineFramer`] — bounded newline framing: accumulates bytes
 //!   into at most one request line of a configured maximum length. An
 //!   oversized line yields a single [`framer::FrameEvent::TooLarge`] event
@@ -11,10 +18,14 @@
 //!   resync), so a client streaming megabytes without a newline costs a
 //!   bounded buffer, never unbounded memory.
 //! * [`pool::Pool`] — a resident worker pool behind a **bounded** in-flight
-//!   queue. [`pool::Pool::try_submit`] never blocks: when the queue is at
-//!   capacity the job is handed back and the caller sheds it in-band
-//!   (`error_kind:"overloaded"`). Shutdown drains every queued job before
-//!   the workers exit, which is what makes graceful drain possible above.
+//!   queue. [`pool::Pool::try_submit`] never blocks: when the backlog is
+//!   at capacity (idle workers not counted) the job is handed back and the
+//!   caller sheds it in-band (`error_kind:"overloaded"`). Completions are
+//!   delivered through a per-job callback — for the server, a push onto
+//!   the reactor's completion queue plus a self-pipe wake. Shutdown drains
+//!   every queued job before the workers exit, which is what makes
+//!   graceful drain possible above.
 
 pub mod framer;
 pub mod pool;
+pub mod reactor;

@@ -1,34 +1,36 @@
 //! A resident worker pool behind a bounded in-flight queue.
 //!
-//! The TCP serving layer submits one job per request line; workers run the
-//! shared handler (the service's zero-alloc [`handle_into`] path) into a
-//! per-worker reusable buffer, append the `\n` frame, and write the
-//! response to the job's output sink themselves — the submitting
-//! connection thread just waits for the completion ack, which is what
-//! bounds every connection to one in-flight request (per-connection
-//! backpressure).
+//! The reactor event loop submits one job per decoded request line;
+//! workers run the shared handler (the service's zero-alloc
+//! [`handle_into`] path) into a response `String`, append the `\n` frame,
+//! and hand the finished line to the job's completion callback. For the
+//! TCP server that callback pushes `(conn, seq, response)` onto the
+//! reactor's completion queue and wakes its self-pipe — workers never
+//! touch sockets, so a slow peer can never block a worker.
 //!
-//! [`Pool::try_submit`] never blocks and never queues past the configured
-//! capacity: at capacity the job is handed back and the caller sheds it
-//! in-band. [`Pool::shutdown`] drains every already-queued job before the
-//! workers exit, so a graceful server drain completes in-flight work
-//! instead of dropping it.
+//! [`Pool::try_submit`] never blocks and never queues without bound: a job
+//! is refused when the backlog already covers the configured capacity
+//! *plus* the workers currently idle (an idle worker's imminent pickup is
+//! not backlog — this keeps shedding deterministic regardless of how the
+//! OS interleaves worker wakeups with a burst of submissions). Refused
+//! jobs are handed back and the caller sheds them in-band.
+//! [`Pool::shutdown`] drains every already-queued job before the workers
+//! exit, so a graceful server drain completes in-flight work instead of
+//! dropping it.
 //!
 //! **Panic safety.** The pool is the crate's panic boundary: a handler
 //! that panics is caught ([`std::panic::catch_unwind`]), the triggering
 //! request is answered with an in-band `internal` error line, the event is
 //! counted (`obs.server.worker_panics`), and the worker keeps serving. The
-//! queue, worker-list, and writer locks all recover from poison
-//! ([`crate::sync`]) instead of `.expect`-cascading, so one bad request
-//! can never take the whole service down.
+//! queue and worker-list locks recover from poison ([`crate::sync`])
+//! instead of `.expect`-cascading, so one bad request can never take the
+//! whole service down.
 //!
 //! [`handle_into`]: crate::coordinator::Service::handle_into
 
 use std::collections::VecDeque;
-use std::io::Write;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::Sender;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
@@ -41,18 +43,24 @@ use crate::sync::{lock_recover, wait_recover};
 /// an in-band `internal` error, and keeps serving.
 pub type Handler = dyn Fn(&str, &mut String) + Send + Sync;
 
-/// One queued request: the raw line, where to write the framed response,
-/// and the channel the connection thread blocks on for completion.
+/// One queued request: the raw line and the completion callback that
+/// receives the framed (`\n`-terminated) response. The callback runs on
+/// the worker thread and must not block — the serving layer's pushes onto
+/// a mutex-guarded vector and pokes a self-pipe.
 pub struct Job {
     pub line: String,
-    pub out: Arc<Mutex<dyn Write + Send>>,
-    pub done: Sender<std::io::Result<()>>,
+    pub done: Box<dyn FnOnce(String) + Send>,
 }
 
 struct Inner {
     queue: Mutex<VecDeque<Job>>,
     ready: Condvar,
     cap: usize,
+    /// Workers parked in (or waking from) the condvar wait. Maintained
+    /// under the queue lock, so [`Pool::try_submit`] reads a consistent
+    /// value: `idle > 0` means that many queued jobs are about to be
+    /// picked up without any further submission.
+    idle: AtomicUsize,
     stop: AtomicBool,
     /// Fault injection for the chaos tests: stall each job this long
     /// before handling it, so queue pressure and drain windows become
@@ -70,7 +78,8 @@ pub struct Pool {
 
 impl Pool {
     /// Spawn `workers` threads (minimum 1) sharing `handler`, queueing at
-    /// most `queue_cap` jobs (minimum 1) ahead of them.
+    /// most `queue_cap` jobs (minimum 1, idle workers not counted) ahead
+    /// of them.
     pub fn new<F>(workers: usize, queue_cap: usize, delay: Duration, handler: F) -> Pool
     where
         F: Fn(&str, &mut String) + Send + Sync + 'static,
@@ -79,6 +88,7 @@ impl Pool {
             queue: Mutex::new(VecDeque::new()),
             ready: Condvar::new(),
             cap: queue_cap.max(1),
+            idle: AtomicUsize::new(0),
             stop: AtomicBool::new(false),
             delay,
             handler: Box::new(handler),
@@ -98,15 +108,19 @@ impl Pool {
         }
     }
 
-    /// Queue a job without blocking. Returns the job back when the queue
-    /// is at capacity (the caller sheds it) or the pool is stopping (the
-    /// caller refuses it as `shutdown`).
+    /// Queue a job without blocking. Returns the job back when the backlog
+    /// is at capacity (the caller sheds it in-band) or the pool is
+    /// stopping (the caller refuses it as `shutdown`). Jobs already
+    /// covered by idle workers don't count as backlog, so a burst from a
+    /// single submitter sheds the same requests no matter how worker
+    /// wakeups interleave with it.
     pub fn try_submit(&self, job: Job) -> Result<(), Job> {
         // Queued jobs survive a poisoned lock unchanged: nothing in the
         // critical sections half-mutates the queue, so recovery needs no
         // repair beyond clearing the flag.
         let (mut q, _) = lock_recover(&self.inner.queue);
-        if self.inner.stop.load(Ordering::Acquire) || q.len() >= self.inner.cap {
+        let idle = self.inner.idle.load(Ordering::Relaxed);
+        if self.inner.stop.load(Ordering::Acquire) || q.len() >= self.inner.cap + idle {
             return Err(job);
         }
         q.push_back(job);
@@ -117,6 +131,13 @@ impl Pool {
     /// Jobs currently queued (not yet picked up by a worker).
     pub fn queued(&self) -> usize {
         lock_recover(&self.inner.queue).0.len()
+    }
+
+    /// Workers currently parked waiting for work. Instantaneous; useful
+    /// for tests and diagnostics, not for admission decisions (use
+    /// [`Pool::try_submit`], which reads it under the queue lock).
+    pub fn idle_workers(&self) -> usize {
+        self.inner.idle.load(Ordering::Relaxed)
     }
 
     /// Stop accepting, finish every queued job, and join the workers.
@@ -138,9 +159,6 @@ impl Drop for Pool {
 }
 
 fn worker_loop(inner: &Inner) {
-    // One response buffer per worker, reused across jobs: the steady-state
-    // socket path allocates only the request line itself.
-    let mut buf = String::with_capacity(256);
     loop {
         let job = {
             let (mut q, _) = lock_recover(&inner.queue);
@@ -152,12 +170,20 @@ fn worker_loop(inner: &Inner) {
                 if inner.stop.load(Ordering::Acquire) {
                     return;
                 }
+                // Both edges happen under the queue lock, so try_submit
+                // (which also holds it) sees a consistent idle count.
+                inner.idle.fetch_add(1, Ordering::Relaxed);
                 q = wait_recover(&inner.ready, &inner.queue, q).0;
+                inner.idle.fetch_sub(1, Ordering::Relaxed);
             }
         };
         if !inner.delay.is_zero() {
             std::thread::sleep(inner.delay);
         }
+        // One owned String per response: the completion callback takes the
+        // line to the connection's output buffer, so the worker cannot
+        // reuse it across jobs.
+        let mut buf = String::with_capacity(256);
         // The panic boundary: a handler panic answers *this* request with
         // an in-band `internal` error instead of unwinding through the
         // worker (which would poison shared locks and, pre-recovery, cascade
@@ -177,33 +203,14 @@ fn worker_loop(inner: &Inner) {
             crate::coordinator::Service::write_error_line(&e, &mut buf);
         }
         buf.push('\n');
-        let res = {
-            let (mut out, _) = lock_recover(&job.out);
-            out.write_all(buf.as_bytes()).and_then(|()| out.flush())
-        };
-        // The connection may already have hung up; it simply misses the ack.
-        let _ = job.done.send(res);
+        (job.done)(buf);
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::mpsc;
-
-    /// A Vec-backed sink the tests can inspect after the fact.
-    #[derive(Clone, Default)]
-    struct Sink(Arc<Mutex<Vec<u8>>>);
-
-    impl Write for Sink {
-        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
-            self.0.lock().unwrap().extend_from_slice(buf);
-            Ok(buf.len())
-        }
-        fn flush(&mut self) -> std::io::Result<()> {
-            Ok(())
-        }
-    }
+    use std::sync::mpsc::{self, Sender};
 
     fn echo_pool(workers: usize, cap: usize, delay_ms: u64) -> Pool {
         Pool::new(workers, cap, Duration::from_millis(delay_ms), |line, out| {
@@ -213,30 +220,26 @@ mod tests {
         })
     }
 
-    fn job(line: &str, sink: &Sink, done: &Sender<std::io::Result<()>>) -> Job {
-        let data = Arc::clone(&sink.0);
+    fn job(line: &str, done: &Sender<String>) -> Job {
+        let done = done.clone();
         Job {
             line: line.to_string(),
-            out: Arc::new(Mutex::new(Sink(data))),
-            done: done.clone(),
+            done: Box::new(move |resp| {
+                let _ = done.send(resp);
+            }),
         }
     }
 
     #[test]
-    fn jobs_run_and_ack_with_framed_output() {
+    fn jobs_complete_with_framed_output() {
         let pool = echo_pool(2, 8, 0);
-        let sink = Sink::default();
         let (tx, rx) = mpsc::channel();
         for i in 0..4 {
-            pool.try_submit(job(&format!("r{i}"), &sink, &tx)).map_err(|_| ()).unwrap();
+            pool.try_submit(job(&format!("r{i}"), &tx)).map_err(|_| ()).unwrap();
         }
-        for _ in 0..4 {
-            rx.recv().unwrap().unwrap();
-        }
-        let text = String::from_utf8(sink.0.lock().unwrap().clone()).unwrap();
-        let mut lines: Vec<&str> = text.lines().collect();
-        lines.sort_unstable();
-        assert_eq!(lines, vec!["echo:r0", "echo:r1", "echo:r2", "echo:r3"]);
+        let mut got: Vec<String> = (0..4).map(|_| rx.recv().unwrap()).collect();
+        got.sort_unstable();
+        assert_eq!(got, vec!["echo:r0\n", "echo:r1\n", "echo:r2\n", "echo:r3\n"]);
     }
 
     #[test]
@@ -244,9 +247,8 @@ mod tests {
         // One worker stalled 200ms per job, queue of 1: the first job is
         // picked up, the second queues, the third must be handed back.
         let pool = echo_pool(1, 1, 200);
-        let sink = Sink::default();
         let (tx, rx) = mpsc::channel();
-        pool.try_submit(job("a", &sink, &tx)).map_err(|_| ()).unwrap();
+        pool.try_submit(job("a", &tx)).map_err(|_| ()).unwrap();
         // Wait until the worker has pulled `a` off the queue so `b` can
         // occupy the single slot deterministically.
         let t0 = std::time::Instant::now();
@@ -254,12 +256,37 @@ mod tests {
             assert!(t0.elapsed() < Duration::from_secs(5), "worker never started");
             std::thread::sleep(Duration::from_millis(5));
         }
-        pool.try_submit(job("b", &sink, &tx)).map_err(|_| ()).unwrap();
-        let shed = pool.try_submit(job("c", &sink, &tx));
+        pool.try_submit(job("b", &tx)).map_err(|_| ()).unwrap();
+        let shed = pool.try_submit(job("c", &tx));
         assert!(shed.is_err(), "third job must be shed, not queued");
         assert_eq!(shed.err().unwrap().line, "c");
         for _ in 0..2 {
-            rx.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
+            rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        }
+    }
+
+    #[test]
+    fn idle_workers_extend_the_admission_bound_deterministically() {
+        // One worker parked in the condvar wait, queue cap 1: a burst of
+        // three submissions must accept exactly two — one for the idle
+        // worker, one for the queue slot — no matter whether the worker
+        // wakes between the submissions or after all of them.
+        let pool = echo_pool(1, 1, 300);
+        // Let the worker reach its idle wait.
+        let t0 = std::time::Instant::now();
+        while pool.idle_workers() == 0 {
+            assert!(t0.elapsed() < Duration::from_secs(5), "worker never parked");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let (tx, rx) = mpsc::channel();
+        let a = pool.try_submit(job("a", &tx)).is_ok();
+        let b = pool.try_submit(job("b", &tx)).is_ok();
+        let c = pool.try_submit(job("c", &tx)).is_ok();
+        assert!(a, "first job always admitted");
+        assert!(b, "second job covered by the idle worker or the queue slot");
+        assert!(!c, "third job must shed: backlog is cap(1) + idle(1)");
+        for _ in 0..2 {
+            rx.recv_timeout(Duration::from_secs(10)).unwrap();
         }
     }
 
@@ -277,27 +304,21 @@ mod tests {
             out.push_str("echo:");
             out.push_str(line);
         });
-        let sink = Sink::default();
         let (tx, rx) = mpsc::channel();
-        pool.try_submit(job("a", &sink, &tx)).map_err(|_| ()).unwrap();
-        pool.try_submit(job("boom", &sink, &tx)).map_err(|_| ()).unwrap();
-        pool.try_submit(job("b", &sink, &tx)).map_err(|_| ()).unwrap();
-        for _ in 0..3 {
-            // Every job acks — including the panicked one — and every
-            // write succeeded.
-            rx.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
-        }
-        let text = String::from_utf8(sink.0.lock().unwrap().clone()).unwrap();
-        let lines: Vec<&str> = text.lines().collect();
-        assert_eq!(lines.len(), 3);
-        // One worker: responses arrive in submission order.
-        assert_eq!(lines[0], "echo:a");
+        pool.try_submit(job("a", &tx)).map_err(|_| ()).unwrap();
+        pool.try_submit(job("boom", &tx)).map_err(|_| ()).unwrap();
+        pool.try_submit(job("b", &tx)).map_err(|_| ()).unwrap();
+        let lines: Vec<String> = (0..3)
+            .map(|_| rx.recv_timeout(Duration::from_secs(10)).unwrap())
+            .collect();
+        // One worker: completions arrive in submission order.
+        assert_eq!(lines[0], "echo:a\n");
         assert!(
             lines[1].contains("\"ok\":false") && lines[1].contains("\"error_kind\":\"internal\""),
             "panicked request must get an in-band internal error: {:?}",
             lines[1]
         );
-        assert_eq!(lines[2], "echo:b", "the worker must keep serving after the panic");
+        assert_eq!(lines[2], "echo:b\n", "the worker must keep serving after the panic");
         let after = crate::obs::global().snapshot();
         assert!(after.srv_worker_panics > before.srv_worker_panics);
         pool.shutdown();
@@ -306,17 +327,16 @@ mod tests {
     #[test]
     fn shutdown_drains_queued_jobs_then_refuses_new_ones() {
         let pool = echo_pool(1, 16, 50);
-        let sink = Sink::default();
         let (tx, rx) = mpsc::channel();
         for i in 0..5 {
-            pool.try_submit(job(&format!("j{i}"), &sink, &tx)).map_err(|_| ()).unwrap();
+            pool.try_submit(job(&format!("j{i}"), &tx)).map_err(|_| ()).unwrap();
         }
         pool.shutdown();
         // Every queued job completed before the workers exited...
         for _ in 0..5 {
-            rx.try_recv().expect("job dropped by shutdown").unwrap();
+            rx.try_recv().expect("job dropped by shutdown");
         }
         // ...and the stopped pool refuses new work.
-        assert!(pool.try_submit(job("late", &sink, &tx)).is_err());
+        assert!(pool.try_submit(job("late", &tx)).is_err());
     }
 }

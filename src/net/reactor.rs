@@ -1,0 +1,778 @@
+//! Readiness reactor for the serving layer: raw-syscall `epoll` on Linux
+//! with a portable `poll(2)` fallback behind one [`Backend`] trait, plus
+//! the self-pipe waker and the hashed timer wheel the event loop schedules
+//! its deadlines on.
+//!
+//! Zero dependencies: the handful of syscalls (`epoll_create1`/`epoll_ctl`/
+//! `epoll_wait`, `poll`, `pipe`, `fcntl`, `read`/`write`/`close`,
+//! `signal`) are declared by hand against the platform libc that `std`
+//! already links. The serving layer is therefore Unix-only; the rest of
+//! the crate stays platform-neutral.
+//!
+//! Three pieces:
+//!
+//! * [`Reactor`] — owns a [`Backend`] (level-triggered `epoll` where
+//!   available, `poll(2)` everywhere else; `ANNETTE_REACTOR_BACKEND`
+//!   forces one) and multiplexes readiness for every registered fd. Error
+//!   and hangup conditions are reported as both readable and writable, so
+//!   the owning loop discovers them through the ordinary `read`/`write`
+//!   calls instead of a separate error path.
+//! * [`SelfPipe`] — the classic waker: a nonblocking pipe whose read end
+//!   is registered with the reactor. Worker threads (and signal handlers —
+//!   `write(2)` is async-signal-safe) wake the event loop by writing one
+//!   byte; [`install_drain_signal_handler`] wires SIGTERM/SIGINT to a
+//!   pipe so a kill becomes a graceful drain.
+//! * [`TimerWheel`] — a hashed wheel over coarse ticks with lazy
+//!   cancellation: entries are `(token, gen)` pairs and a fired entry
+//!   whose generation no longer matches the connection's is simply stale.
+//!   Rescheduling never removes old entries; it bumps the generation.
+
+use std::collections::HashMap;
+use std::io;
+use std::os::unix::io::RawFd;
+use std::sync::atomic::{AtomicI32, Ordering};
+use std::time::{Duration, Instant};
+
+/// Raw syscall surface. Private: everything above speaks `io::Result`.
+mod sys {
+    pub use std::os::raw::{c_int, c_void};
+
+    #[cfg(target_os = "linux")]
+    pub type NfdsT = std::os::raw::c_ulong;
+    #[cfg(not(target_os = "linux"))]
+    pub type NfdsT = std::os::raw::c_uint;
+
+    /// `struct pollfd` from `<poll.h>`; identical layout on every Unix.
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    pub struct PollFd {
+        pub fd: c_int,
+        pub events: i16,
+        pub revents: i16,
+    }
+
+    pub const POLLIN: i16 = 0x001;
+    pub const POLLOUT: i16 = 0x004;
+    pub const POLLERR: i16 = 0x008;
+    pub const POLLHUP: i16 = 0x010;
+    pub const POLLNVAL: i16 = 0x020;
+
+    pub const F_GETFL: c_int = 3;
+    pub const F_SETFL: c_int = 4;
+    #[cfg(target_os = "linux")]
+    pub const O_NONBLOCK: c_int = 0o4000;
+    #[cfg(not(target_os = "linux"))]
+    pub const O_NONBLOCK: c_int = 0x0004;
+
+    pub const SIGINT: c_int = 2;
+    pub const SIGTERM: c_int = 15;
+    /// `SIG_ERR` is `(void (*)(int)) -1`.
+    pub const SIG_ERR: usize = usize::MAX;
+
+    extern "C" {
+        pub fn poll(fds: *mut PollFd, nfds: NfdsT, timeout: c_int) -> c_int;
+        pub fn pipe(fds: *mut c_int) -> c_int;
+        pub fn read(fd: c_int, buf: *mut c_void, count: usize) -> isize;
+        pub fn write(fd: c_int, buf: *const c_void, count: usize) -> isize;
+        pub fn close(fd: c_int) -> c_int;
+        pub fn fcntl(fd: c_int, cmd: c_int, ...) -> c_int;
+        pub fn signal(signum: c_int, handler: usize) -> usize;
+    }
+
+    #[cfg(target_os = "linux")]
+    pub mod ep {
+        use super::c_int;
+
+        /// `struct epoll_event`: packed on x86-64 (the kernel ABI), natural
+        /// alignment elsewhere — mirrors glibc's `__EPOLL_PACKED`.
+        #[cfg_attr(target_arch = "x86_64", repr(C, packed))]
+        #[cfg_attr(not(target_arch = "x86_64"), repr(C))]
+        #[derive(Clone, Copy)]
+        pub struct EpollEvent {
+            pub events: u32,
+            pub data: u64,
+        }
+
+        pub const EPOLL_CLOEXEC: c_int = 0o2000000;
+        pub const EPOLL_CTL_ADD: c_int = 1;
+        pub const EPOLL_CTL_DEL: c_int = 2;
+        pub const EPOLL_CTL_MOD: c_int = 3;
+        pub const EPOLLIN: u32 = 0x001;
+        pub const EPOLLOUT: u32 = 0x004;
+        pub const EPOLLERR: u32 = 0x008;
+        pub const EPOLLHUP: u32 = 0x010;
+
+        extern "C" {
+            pub fn epoll_create1(flags: c_int) -> c_int;
+            pub fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut EpollEvent) -> c_int;
+            pub fn epoll_wait(
+                epfd: c_int,
+                events: *mut EpollEvent,
+                maxevents: c_int,
+                timeout: c_int,
+            ) -> c_int;
+        }
+    }
+}
+
+/// Which readiness a registration asks for. Level-triggered on every
+/// backend: an armed interest keeps firing while the condition holds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Interest {
+    pub read: bool,
+    pub write: bool,
+}
+
+impl Interest {
+    pub const READ: Interest = Interest {
+        read: true,
+        write: false,
+    };
+    pub const WRITE: Interest = Interest {
+        read: false,
+        write: true,
+    };
+}
+
+/// One readiness notification. Error/hangup conditions surface as
+/// `readable && writable`, so the owner always discovers them through the
+/// next `read`/`write` syscall on the fd.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Event {
+    pub token: usize,
+    pub readable: bool,
+    pub writable: bool,
+}
+
+/// A readiness-multiplexing backend. Implementations are level-triggered
+/// and single-threaded: one event loop owns the backend and every fd in it.
+pub trait Backend: Send {
+    fn name(&self) -> &'static str;
+    fn add(&mut self, fd: RawFd, token: usize, interest: Interest) -> io::Result<()>;
+    fn modify(&mut self, fd: RawFd, token: usize, interest: Interest) -> io::Result<()>;
+    fn del(&mut self, fd: RawFd) -> io::Result<()>;
+    /// Blocks up to `timeout` for readiness; fills `out` (cleared first).
+    /// A signal-interrupted wait returns `Ok` with no events.
+    fn wait(&mut self, timeout: Duration, out: &mut Vec<Event>) -> io::Result<()>;
+}
+
+fn timeout_ms(timeout: Duration) -> sys::c_int {
+    timeout.as_millis().min(i32::MAX as u128) as sys::c_int
+}
+
+/// `epoll(7)` backend (Linux): O(ready) wakeups independent of the number
+/// of registered fds.
+#[cfg(target_os = "linux")]
+pub struct EpollBackend {
+    epfd: RawFd,
+    buf: Vec<sys::ep::EpollEvent>,
+}
+
+#[cfg(target_os = "linux")]
+impl EpollBackend {
+    pub fn new() -> io::Result<EpollBackend> {
+        let epfd = unsafe { sys::ep::epoll_create1(sys::ep::EPOLL_CLOEXEC) };
+        if epfd < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(EpollBackend {
+            epfd,
+            buf: vec![sys::ep::EpollEvent { events: 0, data: 0 }; 1024],
+        })
+    }
+
+    fn ctl(&self, op: sys::c_int, fd: RawFd, token: usize, interest: Interest) -> io::Result<()> {
+        let mut mask = 0u32;
+        if interest.read {
+            mask |= sys::ep::EPOLLIN;
+        }
+        if interest.write {
+            mask |= sys::ep::EPOLLOUT;
+        }
+        let mut ev = sys::ep::EpollEvent {
+            events: mask,
+            data: token as u64,
+        };
+        if unsafe { sys::ep::epoll_ctl(self.epfd, op, fd, &mut ev) } < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(target_os = "linux")]
+impl Backend for EpollBackend {
+    fn name(&self) -> &'static str {
+        "epoll"
+    }
+
+    fn add(&mut self, fd: RawFd, token: usize, interest: Interest) -> io::Result<()> {
+        self.ctl(sys::ep::EPOLL_CTL_ADD, fd, token, interest)
+    }
+
+    fn modify(&mut self, fd: RawFd, token: usize, interest: Interest) -> io::Result<()> {
+        self.ctl(sys::ep::EPOLL_CTL_MOD, fd, token, interest)
+    }
+
+    fn del(&mut self, fd: RawFd) -> io::Result<()> {
+        // A dummy event keeps pre-2.6.9 kernels happy (they reject NULL).
+        let mut ev = sys::ep::EpollEvent { events: 0, data: 0 };
+        if unsafe { sys::ep::epoll_ctl(self.epfd, sys::ep::EPOLL_CTL_DEL, fd, &mut ev) } < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(())
+    }
+
+    fn wait(&mut self, timeout: Duration, out: &mut Vec<Event>) -> io::Result<()> {
+        out.clear();
+        let n = unsafe {
+            sys::ep::epoll_wait(
+                self.epfd,
+                self.buf.as_mut_ptr(),
+                self.buf.len() as sys::c_int,
+                timeout_ms(timeout),
+            )
+        };
+        if n < 0 {
+            let e = io::Error::last_os_error();
+            if e.kind() == io::ErrorKind::Interrupted {
+                return Ok(());
+            }
+            return Err(e);
+        }
+        for ev in &self.buf[..n as usize] {
+            // Field copies, not references: the struct is packed on x86-64.
+            let bits = ev.events;
+            let token = ev.data;
+            out.push(Event {
+                token: token as usize,
+                readable: bits & (sys::ep::EPOLLIN | sys::ep::EPOLLERR | sys::ep::EPOLLHUP) != 0,
+                writable: bits & (sys::ep::EPOLLOUT | sys::ep::EPOLLERR | sys::ep::EPOLLHUP) != 0,
+            });
+        }
+        Ok(())
+    }
+}
+
+#[cfg(target_os = "linux")]
+impl Drop for EpollBackend {
+    fn drop(&mut self) {
+        unsafe {
+            sys::close(self.epfd);
+        }
+    }
+}
+
+/// `poll(2)` backend: portable across Unix, O(fds) per wait. The fallback
+/// when epoll is unavailable, and the reference semantics for tests.
+pub struct PollBackend {
+    fds: Vec<sys::PollFd>,
+    tokens: Vec<usize>,
+    index: HashMap<RawFd, usize>,
+}
+
+impl PollBackend {
+    pub fn new() -> io::Result<PollBackend> {
+        Ok(PollBackend {
+            fds: Vec::new(),
+            tokens: Vec::new(),
+            index: HashMap::new(),
+        })
+    }
+
+    fn events_for(interest: Interest) -> i16 {
+        let mut ev = 0i16;
+        if interest.read {
+            ev |= sys::POLLIN;
+        }
+        if interest.write {
+            ev |= sys::POLLOUT;
+        }
+        ev
+    }
+}
+
+impl Backend for PollBackend {
+    fn name(&self) -> &'static str {
+        "poll"
+    }
+
+    fn add(&mut self, fd: RawFd, token: usize, interest: Interest) -> io::Result<()> {
+        if self.index.contains_key(&fd) {
+            return Err(io::Error::new(
+                io::ErrorKind::AlreadyExists,
+                "fd already registered",
+            ));
+        }
+        self.index.insert(fd, self.fds.len());
+        self.fds.push(sys::PollFd {
+            fd,
+            events: Self::events_for(interest),
+            revents: 0,
+        });
+        self.tokens.push(token);
+        Ok(())
+    }
+
+    fn modify(&mut self, fd: RawFd, token: usize, interest: Interest) -> io::Result<()> {
+        let &i = self.index.get(&fd).ok_or_else(|| {
+            io::Error::new(io::ErrorKind::NotFound, "fd not registered")
+        })?;
+        self.fds[i].events = Self::events_for(interest);
+        self.tokens[i] = token;
+        Ok(())
+    }
+
+    fn del(&mut self, fd: RawFd) -> io::Result<()> {
+        let i = self.index.remove(&fd).ok_or_else(|| {
+            io::Error::new(io::ErrorKind::NotFound, "fd not registered")
+        })?;
+        self.fds.swap_remove(i);
+        self.tokens.swap_remove(i);
+        if i < self.fds.len() {
+            self.index.insert(self.fds[i].fd, i);
+        }
+        Ok(())
+    }
+
+    fn wait(&mut self, timeout: Duration, out: &mut Vec<Event>) -> io::Result<()> {
+        out.clear();
+        for f in self.fds.iter_mut() {
+            f.revents = 0;
+        }
+        let n = unsafe {
+            sys::poll(
+                self.fds.as_mut_ptr(),
+                self.fds.len() as sys::NfdsT,
+                timeout_ms(timeout),
+            )
+        };
+        if n < 0 {
+            let e = io::Error::last_os_error();
+            if e.kind() == io::ErrorKind::Interrupted {
+                return Ok(());
+            }
+            return Err(e);
+        }
+        for (f, &token) in self.fds.iter().zip(self.tokens.iter()) {
+            if f.revents == 0 {
+                continue;
+            }
+            let r = f.revents;
+            out.push(Event {
+                token,
+                readable: r & (sys::POLLIN | sys::POLLERR | sys::POLLHUP | sys::POLLNVAL) != 0,
+                writable: r & (sys::POLLOUT | sys::POLLERR | sys::POLLHUP) != 0,
+            });
+        }
+        Ok(())
+    }
+}
+
+/// The backend behind one event loop. Picks `epoll` on Linux and `poll`
+/// elsewhere; `ANNETTE_REACTOR_BACKEND=epoll|poll` (or the explicit
+/// `prefer` argument, which wins) forces one. An unknown or unavailable
+/// preference falls back rather than failing — a misspelled env var must
+/// not take the server down.
+pub struct Reactor {
+    backend: Box<dyn Backend>,
+}
+
+impl Reactor {
+    pub fn new(prefer: Option<&str>) -> io::Result<Reactor> {
+        let pref = match prefer {
+            Some(p) => Some(p.to_string()),
+            None => std::env::var("ANNETTE_REACTOR_BACKEND").ok(),
+        };
+        let backend: Box<dyn Backend> = match pref.as_deref() {
+            Some("poll") => Box::new(PollBackend::new()?),
+            _ => default_backend()?,
+        };
+        Ok(Reactor { backend })
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    pub fn add(&mut self, fd: RawFd, token: usize, interest: Interest) -> io::Result<()> {
+        self.backend.add(fd, token, interest)
+    }
+
+    pub fn modify(&mut self, fd: RawFd, token: usize, interest: Interest) -> io::Result<()> {
+        self.backend.modify(fd, token, interest)
+    }
+
+    pub fn del(&mut self, fd: RawFd) -> io::Result<()> {
+        self.backend.del(fd)
+    }
+
+    pub fn wait(&mut self, timeout: Duration, out: &mut Vec<Event>) -> io::Result<()> {
+        self.backend.wait(timeout, out)
+    }
+}
+
+#[cfg(target_os = "linux")]
+fn default_backend() -> io::Result<Box<dyn Backend>> {
+    match EpollBackend::new() {
+        Ok(b) => Ok(Box::new(b)),
+        Err(_) => Ok(Box::new(PollBackend::new()?)),
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+fn default_backend() -> io::Result<Box<dyn Backend>> {
+    Ok(Box::new(PollBackend::new()?))
+}
+
+/// A nonblocking pipe used to wake the event loop from outside it: worker
+/// threads write a byte when a completion lands, signal handlers write a
+/// byte to request a drain (`write(2)` is async-signal-safe). The read end
+/// is registered with the reactor; [`SelfPipe::drain`] empties it.
+pub struct SelfPipe {
+    r: RawFd,
+    w: RawFd,
+}
+
+impl SelfPipe {
+    pub fn new() -> io::Result<SelfPipe> {
+        let mut fds = [0 as sys::c_int; 2];
+        if unsafe { sys::pipe(fds.as_mut_ptr()) } != 0 {
+            return Err(io::Error::last_os_error());
+        }
+        let sp = SelfPipe {
+            r: fds[0],
+            w: fds[1],
+        };
+        set_nonblocking(sp.r)?;
+        set_nonblocking(sp.w)?;
+        Ok(sp)
+    }
+
+    /// The end to register with the reactor (read interest).
+    pub fn read_fd(&self) -> RawFd {
+        self.r
+    }
+
+    /// The end writers (threads, signal handlers) poke.
+    pub fn write_fd(&self) -> RawFd {
+        self.w
+    }
+
+    /// Wake the event loop. Never blocks: a full pipe already guarantees a
+    /// pending wakeup, so the dropped byte is harmless.
+    pub fn wake(&self) {
+        notify_fd(self.w);
+    }
+
+    /// Empty the pipe (called by the event loop once per wakeup).
+    pub fn drain(&self) {
+        drain_readable(self.r);
+    }
+}
+
+/// Read and discard everything currently readable on a nonblocking `fd`.
+/// Used to empty self-pipes — including ones owned elsewhere, like the
+/// drain pipe `annette-serve` hands the server by fd.
+pub fn drain_readable(fd: RawFd) {
+    let mut buf = [0u8; 64];
+    loop {
+        let n = unsafe { sys::read(fd, buf.as_mut_ptr() as *mut sys::c_void, buf.len()) };
+        if n <= 0 {
+            return;
+        }
+    }
+}
+
+impl Drop for SelfPipe {
+    fn drop(&mut self) {
+        unsafe {
+            sys::close(self.r);
+            sys::close(self.w);
+        }
+    }
+}
+
+/// Write one byte to `fd`, ignoring the result — the wake-a-reactor
+/// primitive, usable from any thread or from a signal handler.
+pub fn notify_fd(fd: RawFd) {
+    let byte = [b'!'];
+    let _ = unsafe { sys::write(fd, byte.as_ptr() as *const sys::c_void, 1) };
+}
+
+fn set_nonblocking(fd: RawFd) -> io::Result<()> {
+    let flags = unsafe { sys::fcntl(fd, sys::F_GETFL) };
+    if flags < 0 {
+        return Err(io::Error::last_os_error());
+    }
+    if unsafe { sys::fcntl(fd, sys::F_SETFL, flags | sys::O_NONBLOCK) } < 0 {
+        return Err(io::Error::last_os_error());
+    }
+    Ok(())
+}
+
+static DRAIN_FD: AtomicI32 = AtomicI32::new(-1);
+
+extern "C" fn drain_signal_handler(_sig: sys::c_int) {
+    // Async-signal-safe: one atomic load and one write(2). No allocation,
+    // no locks, no stdio.
+    let fd = DRAIN_FD.load(Ordering::Relaxed);
+    if fd >= 0 {
+        let byte = [b'!'];
+        let _ = unsafe { sys::write(fd, byte.as_ptr() as *const sys::c_void, 1) };
+    }
+}
+
+/// Route SIGTERM and SIGINT into a self-pipe write so a kill triggers the
+/// server's graceful drain instead of an abrupt exit. `write_fd` must be
+/// the write end of the pipe whose read end is the server's
+/// `ServerConfig::drain_fd`. Returns `false` when either handler could not
+/// be installed (the process still serves; it just won't drain on signal).
+pub fn install_drain_signal_handler(write_fd: RawFd) -> bool {
+    DRAIN_FD.store(write_fd, Ordering::SeqCst);
+    let h = drain_signal_handler as extern "C" fn(sys::c_int) as usize;
+    let a = unsafe { sys::signal(sys::SIGTERM, h) };
+    let b = unsafe { sys::signal(sys::SIGINT, h) };
+    a != sys::SIG_ERR && b != sys::SIG_ERR
+}
+
+/// A hashed timer wheel over fixed-width ticks, sized for coarse serving
+/// deadlines (tens of milliseconds and up).
+///
+/// Cancellation is lazy: entries are `(token, gen)` and the owner keeps
+/// one current generation per token. Rescheduling bumps the generation and
+/// inserts a new entry; stale entries fire and are discarded by the
+/// generation check. Entries beyond one wheel revolution stay in their
+/// slot and are re-examined once per revolution — cheap at serving scale.
+pub struct TimerWheel {
+    base: Instant,
+    granularity_ms: u64,
+    slots: Vec<Vec<TimerEntry>>,
+    cursor: u64,
+}
+
+struct TimerEntry {
+    tick: u64,
+    token: usize,
+    gen: u64,
+}
+
+impl TimerWheel {
+    /// `granularity` is the tick width (clamped to ≥ 1 ms); `slots` the
+    /// wheel circumference (clamped to ≥ 8).
+    pub fn new(now: Instant, granularity: Duration, slots: usize) -> TimerWheel {
+        TimerWheel {
+            base: now,
+            granularity_ms: (granularity.as_millis() as u64).max(1),
+            slots: (0..slots.max(8)).map(|_| Vec::new()).collect(),
+            cursor: 0,
+        }
+    }
+
+    fn tick_of(&self, t: Instant) -> u64 {
+        let ms = t.saturating_duration_since(self.base).as_millis() as u64;
+        ms / self.granularity_ms
+    }
+
+    /// Schedule `(token, gen)` to fire at (or just after) `at`. Deadlines
+    /// in the past fire on the next [`TimerWheel::advance`], never
+    /// immediately within the current tick.
+    pub fn schedule(&mut self, at: Instant, token: usize, gen: u64) {
+        let tick = self.tick_of(at).max(self.cursor + 1);
+        let slot = (tick % self.slots.len() as u64) as usize;
+        self.slots[slot].push(TimerEntry { tick, token, gen });
+    }
+
+    /// Move the wheel forward to `now`, appending every due `(token, gen)`
+    /// to `due` (not cleared). The caller validates each against its
+    /// current generation — mismatches are cancelled timers.
+    pub fn advance(&mut self, now: Instant, due: &mut Vec<(usize, u64)>) {
+        let target = self.tick_of(now);
+        while self.cursor < target {
+            self.cursor += 1;
+            let slot = (self.cursor % self.slots.len() as u64) as usize;
+            if self.slots[slot].is_empty() {
+                continue;
+            }
+            let entries = std::mem::take(&mut self.slots[slot]);
+            for e in entries {
+                if e.tick <= self.cursor {
+                    due.push((e.token, e.gen));
+                } else {
+                    // A later revolution owns this entry; put it back.
+                    self.slots[slot].push(e);
+                }
+            }
+        }
+    }
+
+    /// Entries currently parked in the wheel (live and stale alike).
+    pub fn pending(&self) -> usize {
+        self.slots.iter().map(|s| s.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+    use std::net::{TcpListener, TcpStream};
+    use std::os::unix::io::AsRawFd;
+
+    #[test]
+    fn timer_wheel_fires_in_order_and_not_early() {
+        let t0 = Instant::now();
+        let mut w = TimerWheel::new(t0, Duration::from_millis(10), 16);
+        w.schedule(t0 + Duration::from_millis(35), 1, 7);
+        w.schedule(t0 + Duration::from_millis(15), 2, 9);
+        let mut due = Vec::new();
+        w.advance(t0 + Duration::from_millis(5), &mut due);
+        assert!(due.is_empty(), "nothing is due yet: {due:?}");
+        w.advance(t0 + Duration::from_millis(20), &mut due);
+        assert_eq!(due, vec![(2, 9)]);
+        due.clear();
+        w.advance(t0 + Duration::from_millis(60), &mut due);
+        assert_eq!(due, vec![(1, 7)]);
+        assert_eq!(w.pending(), 0);
+    }
+
+    #[test]
+    fn timer_wheel_entry_beyond_one_revolution_survives_laps() {
+        let t0 = Instant::now();
+        // 8 slots x 10ms: one revolution is 80ms; schedule at 250ms.
+        let mut w = TimerWheel::new(t0, Duration::from_millis(10), 8);
+        w.schedule(t0 + Duration::from_millis(250), 3, 1);
+        let mut due = Vec::new();
+        w.advance(t0 + Duration::from_millis(240), &mut due);
+        assert!(due.is_empty(), "must not fire a lap early: {due:?}");
+        assert_eq!(w.pending(), 1);
+        w.advance(t0 + Duration::from_millis(260), &mut due);
+        assert_eq!(due, vec![(3, 1)]);
+    }
+
+    #[test]
+    fn timer_wheel_past_deadline_fires_on_next_advance() {
+        let t0 = Instant::now();
+        let mut w = TimerWheel::new(t0, Duration::from_millis(10), 16);
+        let mut due = Vec::new();
+        w.advance(t0 + Duration::from_millis(100), &mut due);
+        // Scheduled "in the past" relative to the cursor: lands one tick out.
+        w.schedule(t0 + Duration::from_millis(20), 5, 2);
+        w.advance(t0 + Duration::from_millis(115), &mut due);
+        assert_eq!(due, vec![(5, 2)]);
+    }
+
+    fn backends() -> Vec<Box<dyn Backend>> {
+        let mut v: Vec<Box<dyn Backend>> = vec![Box::new(PollBackend::new().unwrap())];
+        #[cfg(target_os = "linux")]
+        v.push(Box::new(EpollBackend::new().unwrap()));
+        v
+    }
+
+    #[test]
+    fn backends_report_listener_accept_readiness() {
+        for mut b in backends() {
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            listener.set_nonblocking(true).unwrap();
+            b.add(listener.as_raw_fd(), 42, Interest::READ).unwrap();
+            let mut events = Vec::new();
+            b.wait(Duration::from_millis(10), &mut events).unwrap();
+            assert!(events.is_empty(), "{}: no client yet: {events:?}", b.name());
+            let _client = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+            let t0 = Instant::now();
+            loop {
+                b.wait(Duration::from_millis(50), &mut events).unwrap();
+                if events.iter().any(|e| e.token == 42 && e.readable) {
+                    break;
+                }
+                assert!(
+                    t0.elapsed() < Duration::from_secs(5),
+                    "{}: accept readiness never arrived",
+                    b.name()
+                );
+            }
+            b.del(listener.as_raw_fd()).unwrap();
+        }
+    }
+
+    #[test]
+    fn backends_honor_write_interest_and_modify() {
+        for mut b in backends() {
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            let mut client = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+            let (server_side, _) = listener.accept().unwrap();
+            server_side.set_nonblocking(true).unwrap();
+            let fd = server_side.as_raw_fd();
+            b.add(fd, 7, Interest::WRITE).unwrap();
+            let mut events = Vec::new();
+            let t0 = Instant::now();
+            loop {
+                b.wait(Duration::from_millis(50), &mut events).unwrap();
+                if events.iter().any(|e| e.token == 7 && e.writable) {
+                    break;
+                }
+                assert!(
+                    t0.elapsed() < Duration::from_secs(5),
+                    "{}: connected socket must be writable",
+                    b.name()
+                );
+            }
+            // Switch to read interest: the still-writable socket goes quiet
+            // until the peer actually sends bytes.
+            b.modify(fd, 7, Interest::READ).unwrap();
+            for _ in 0..3 {
+                b.wait(Duration::from_millis(20), &mut events).unwrap();
+                assert!(
+                    events.iter().all(|e| e.token != 7),
+                    "{}: read-only interest must suppress writable: {events:?}",
+                    b.name()
+                );
+            }
+            client.write_all(b"ping").unwrap();
+            let t0 = Instant::now();
+            loop {
+                b.wait(Duration::from_millis(50), &mut events).unwrap();
+                if events.iter().any(|e| e.token == 7 && e.readable) {
+                    break;
+                }
+                assert!(
+                    t0.elapsed() < Duration::from_secs(5),
+                    "{}: sent bytes must surface as readable",
+                    b.name()
+                );
+            }
+            b.del(fd).unwrap();
+        }
+    }
+
+    #[test]
+    fn self_pipe_wakes_and_drains() {
+        let sp = SelfPipe::new().unwrap();
+        let mut b = PollBackend::new().unwrap();
+        b.add(sp.read_fd(), 1, Interest::READ).unwrap();
+        let mut events = Vec::new();
+        b.wait(Duration::from_millis(10), &mut events).unwrap();
+        assert!(events.is_empty(), "no wake yet: {events:?}");
+        sp.wake();
+        sp.wake();
+        b.wait(Duration::from_secs(5), &mut events).unwrap();
+        assert!(
+            events.iter().any(|e| e.token == 1 && e.readable),
+            "wake must surface: {events:?}"
+        );
+        sp.drain();
+        b.wait(Duration::from_millis(10), &mut events).unwrap();
+        assert!(events.is_empty(), "drained pipe must go quiet: {events:?}");
+    }
+
+    #[test]
+    fn reactor_backend_selection_honors_preference() {
+        let r = Reactor::new(Some("poll")).unwrap();
+        assert_eq!(r.backend_name(), "poll");
+        let d = Reactor::new(None).unwrap();
+        #[cfg(target_os = "linux")]
+        assert_eq!(d.backend_name(), "epoll");
+        #[cfg(not(target_os = "linux"))]
+        assert_eq!(d.backend_name(), "poll");
+    }
+}

@@ -140,6 +140,15 @@ pub struct Registry {
     /// Worker panics caught at the pool boundary: the request was answered
     /// with an in-band `internal` error and the worker kept serving.
     pub srv_worker_panics: Counter,
+    /// Reactor gauges: file descriptors currently registered with the
+    /// event loop (connections + listener + waker + drain pipe), reactor
+    /// wakeups that delivered at least one event, the size distribution of
+    /// those ready batches, and the per-connection in-flight depth
+    /// observed at each submission (pipelining in action).
+    pub srv_reactor_fds: Gauge,
+    pub srv_wakeups: Counter,
+    pub srv_ready_batch: Histogram,
+    pub srv_inflight_depth: Histogram,
 }
 
 impl Default for Registry {
@@ -182,6 +191,10 @@ impl Registry {
             srv_active: Gauge::new(),
             srv_drains: Counter::new(),
             srv_worker_panics: Counter::new(),
+            srv_reactor_fds: Gauge::new(),
+            srv_wakeups: Counter::new(),
+            srv_ready_batch: Histogram::new(),
+            srv_inflight_depth: Histogram::new(),
         }
     }
 
@@ -245,6 +258,10 @@ impl Registry {
             srv_active: self.srv_active.value(),
             srv_drains: self.srv_drains.value(),
             srv_worker_panics: self.srv_worker_panics.value(),
+            srv_reactor_fds: self.srv_reactor_fds.value(),
+            srv_wakeups: self.srv_wakeups.value(),
+            srv_ready_batch: self.srv_ready_batch.snapshot(),
+            srv_inflight_depth: self.srv_inflight_depth.snapshot(),
         }
     }
 
@@ -289,6 +306,9 @@ impl Registry {
         self.srv_too_large.reset();
         self.srv_drains.reset();
         self.srv_worker_panics.reset();
+        self.srv_wakeups.reset();
+        self.srv_ready_batch.reset();
+        self.srv_inflight_depth.reset();
     }
 }
 
@@ -339,6 +359,10 @@ pub struct Snapshot {
     pub srv_active: u64,
     pub srv_drains: u64,
     pub srv_worker_panics: u64,
+    pub srv_reactor_fds: u64,
+    pub srv_wakeups: u64,
+    pub srv_ready_batch: HistSnapshot,
+    pub srv_inflight_depth: HistSnapshot,
 }
 
 fn int(n: u64) -> Value {
@@ -453,6 +477,13 @@ impl Snapshot {
             ("active".to_string(), int(self.srv_active)),
             ("drains".to_string(), int(self.srv_drains)),
             ("worker_panics".to_string(), int(self.srv_worker_panics)),
+            ("reactor_fds".to_string(), int(self.srv_reactor_fds)),
+            ("wakeups".to_string(), int(self.srv_wakeups)),
+            ("ready_batch".to_string(), self.srv_ready_batch.to_value()),
+            (
+                "inflight_depth".to_string(),
+                self.srv_inflight_depth.to_value(),
+            ),
         ]);
         Value::Obj(vec![
             ("format".to_string(), Value::str("annette-obs.v1")),
@@ -564,6 +595,33 @@ mod tests {
         assert_eq!(srv.req_usize("worker_panics").unwrap(), 2);
         // `other` must remain the trailing kind column.
         assert_eq!(KIND_NAMES[KIND_OTHER], "other");
+    }
+
+    #[test]
+    fn reactor_metrics_serialize_in_the_server_block() {
+        let r = Registry::new();
+        r.srv_reactor_fds.set(5);
+        r.srv_wakeups.add(3);
+        r.srv_ready_batch.record(4);
+        r.srv_ready_batch.record(1);
+        r.srv_inflight_depth.record(2);
+        let v = r.snapshot().to_value();
+        let srv = v.get("server").unwrap();
+        assert_eq!(srv.req_usize("reactor_fds").unwrap(), 5);
+        assert_eq!(srv.req_usize("wakeups").unwrap(), 3);
+        let batch = srv.get("ready_batch").unwrap();
+        assert_eq!(batch.req_usize("count").unwrap(), 2);
+        assert_eq!(batch.req_usize("sum").unwrap(), 5);
+        let depth = srv.get("inflight_depth").unwrap();
+        assert_eq!(depth.req_usize("count").unwrap(), 1);
+        // Reset zeroes the counter and histograms; the fd gauge is an
+        // instantaneous reading and survives.
+        r.reset();
+        let s = r.snapshot();
+        assert_eq!(s.srv_wakeups, 0);
+        assert_eq!(s.srv_ready_batch.count(), 0);
+        assert_eq!(s.srv_inflight_depth.count(), 0);
+        assert_eq!(s.srv_reactor_fds, 5);
     }
 
     #[test]

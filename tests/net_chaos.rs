@@ -91,6 +91,124 @@ fn socket_responses_are_byte_identical_to_in_process_handling() {
     assert!(report.drained);
 }
 
+/// One connection, many requests in a single write: the reactor must keep
+/// up to `max_inflight_per_conn` of them in the workers at once and still
+/// write every response back in input order, byte-identical to
+/// [`Service::handle`]. A deliberately tiny in-flight budget forces the
+/// pause/resume backpressure cycle several times inside the burst.
+fn pipelined_burst_roundtrip(backend: Option<&str>) {
+    let reference = Service::new(model().clone());
+    let mut cfg = config();
+    cfg.workers = 4;
+    cfg.max_inflight_per_conn = 2;
+    cfg.reactor_backend = backend.map(str::to_string);
+    let handle = Server::bind(Service::new(model().clone()), cfg)
+        .expect("bind")
+        .spawn();
+
+    // Three response shapes interleaved, so any reordering between
+    // neighbouring positions changes the bytes at that position.
+    let requests: Vec<String> = (0..24)
+        .map(|i| match i % 3 {
+            0 => estimate_request(),
+            1 => r#"{"op":"models"}"#.to_string(),
+            _ => r#"{"op":"health"}"#.to_string(),
+        })
+        .collect();
+    let mut batch = String::new();
+    for r in &requests {
+        batch.push_str(r);
+        batch.push('\n');
+    }
+    let mut c = FaultClient::connect(handle.addr());
+    c.send_raw(batch.as_bytes());
+    for (i, req) in requests.iter().enumerate() {
+        let resp = c.read_line().expect("a response for every burst line");
+        assert_eq!(
+            resp,
+            reference.handle(req),
+            "burst response {i} reordered or corrupted"
+        );
+    }
+    let report = handle.shutdown();
+    assert!(report.drained);
+}
+
+#[test]
+fn pipelined_burst_in_one_syscall_answers_in_order() {
+    let before = obs::global().snapshot();
+    pipelined_burst_roundtrip(None);
+    let after = obs::global().snapshot();
+    assert!(after.srv_wakeups > before.srv_wakeups);
+    assert!(after.srv_inflight_depth.count() > before.srv_inflight_depth.count());
+}
+
+#[test]
+fn pipelined_burst_on_the_poll_backend_answers_in_order() {
+    pipelined_burst_roundtrip(Some("poll"));
+}
+
+/// A client that pipelines a large burst and then stops reading. With a
+/// tiny output-buffer cap, the server must park that connection (reads
+/// paused, work withheld) instead of buffering responses unboundedly or
+/// killing it — and other connections must keep being served meanwhile.
+/// When the client finally drains, every response arrives, in order.
+#[test]
+fn stalled_reader_is_paused_without_stalling_other_connections() {
+    let mut cfg = config();
+    cfg.workers = 2;
+    cfg.max_conn_outbuf_bytes = 1024;
+    // Generous deadlines: the stall must be handled by backpressure, not
+    // by the write/read reapers.
+    cfg.write_timeout = Duration::from_secs(30);
+    cfg.read_timeout = Duration::from_secs(30);
+    let handle = Server::bind(Service::new(model().clone()), cfg)
+        .expect("bind")
+        .spawn();
+    let addr = handle.addr();
+
+    let reference = Service::new(model().clone());
+    let req = r#"{"op":"models"}"#;
+    let expected = reference.handle(req);
+    let n = 1500usize;
+    let mut batch = String::new();
+    for _ in 0..n {
+        batch.push_str(req);
+        batch.push('\n');
+    }
+    let mut stalled = FaultClient::connect(addr);
+    stalled.send_raw(batch.as_bytes());
+    // ... and stop reading. Responses exceed the 1 KiB output cap many
+    // times over, so the connection parks on backpressure.
+    std::thread::sleep(Duration::from_millis(300));
+
+    // Other connections are unaffected while the stalled one is parked.
+    let mut live = FaultClient::connect(addr);
+    let t0 = Instant::now();
+    assert_eq!(live.request("health"), "ok");
+    assert!(live.request(&estimate_request()).contains("\"ok\":true"));
+    assert!(
+        t0.elapsed() < Duration::from_secs(10),
+        "a stalled reader must not slow other connections"
+    );
+
+    // The parked connection still accepts writes (the kernel buffers
+    // them; the server reads them once the client drains).
+    stalled.send_raw(b"{\"op\":\"health\"}\n");
+
+    // Drain: all n+1 responses arrive in input order, none dropped.
+    for i in 0..n {
+        let resp = stalled
+            .read_line()
+            .unwrap_or_else(|| panic!("stalled connection lost response {i}"));
+        assert_eq!(resp, expected, "response {i} differs after backpressure");
+    }
+    let tail = stalled.read_line().expect("response to the post-stall request");
+    assert_eq!(tail, reference.handle(r#"{"op":"health"}"#));
+    let report = handle.shutdown();
+    assert!(report.drained);
+}
+
 #[test]
 fn plain_text_health_probe_bypasses_json() {
     let handle = Server::bind(Service::new(model().clone()), config())
@@ -150,10 +268,16 @@ fn oversized_line_gets_too_large_and_the_connection_survives() {
     let resp = c.request(r#"{"op":"models"}"#);
     assert!(resp.contains("\"ok\":true"), "got {resp:?}");
 
-    // The same limit also guards the in-process dispatch path: a line
-    // under the framer cap but over the service cap fails identically.
-    let resp = c.request(&format!(r#"{{"op":"models","pad":"{}"}}"#, "y".repeat(100)));
-    assert_eq!(error_kind(&resp).as_deref(), Some("too_large"));
+    // The same limit also guards the in-process dispatch gate — which a
+    // socket can never reach on its own, because `Server::bind` forces the
+    // framer cap and the service cap to the same value, so the framer
+    // always fires first. Prove the dispatch gate directly: a service
+    // whose cap sits below the line length fails with the same kind.
+    let line = format!(r#"{{"op":"models","pad":"{}"}}"#, "y".repeat(100));
+    let mut gate = Service::new(model().clone());
+    gate.set_max_request_bytes(line.len() - 1);
+    let msg = expect_error(&gate.handle(&line), "too_large");
+    assert!(msg.contains("ANNETTE_MAX_REQUEST_BYTES"), "got {msg:?}");
 
     handle.shutdown();
     let after = obs::global().snapshot();
