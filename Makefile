@@ -81,9 +81,12 @@ trace-demo: build
 	@echo "trace file: out/trace.json"
 
 # Long randomized property run (the nightly CI job). Tier-1 always runs the
-# 200-graph fixed-seed pass via `cargo test`.
+# 200-graph fixed-seed pass via `cargo test`. ANNETTE_PROP_SPECS scales the
+# device-spec fuzzing laws (random specs fitted end to end + mutation
+# rejection cases) alongside the graph stream.
 prop-extended:
 	ANNETTE_PROP_GRAPHS=$${ANNETTE_PROP_GRAPHS:-2000} \
+	ANNETTE_PROP_SPECS=$${ANNETTE_PROP_SPECS:-64} \
 	ANNETTE_PROP_SEED=$${ANNETTE_PROP_SEED:-$$(date +%s)} \
 	cargo test --release --test property_suite -- --nocapture
 

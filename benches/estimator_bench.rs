@@ -10,8 +10,12 @@
 //!   compiled graphs, allocation-free total-only fast path),
 //!
 //! plus the parallel batch service (`Service::serve_lines`) at 1/2/4 worker
-//! threads. Results are written to `BENCH_estimator.json` at the repo root —
-//! the perf trajectory future PRs regress against.
+//! threads and the registry-wide fleet workloads (`fleet.fit_all_20dev`,
+//! `fleet.latency_matrix_20dev`: campaign+fit for every registered DeviceSpec
+//! and a NASBench sweep across all of them). Results are written to
+//! `BENCH_estimator.json` at the repo root — the perf trajectory future PRs
+//! regress against (the `serve` key is owned by `examples/load_gen.rs` and
+//! carried across re-runs).
 //!
 //! ```sh
 //! make bench           # full run
@@ -23,10 +27,11 @@ use std::time::Instant;
 use annette::coordinator::orchestrator::run_campaign;
 use annette::coordinator::Service;
 use annette::estim::estimator::Estimator;
+use annette::fleet::Fleet;
 use annette::graph::serial::graph_to_value;
 use annette::graph::Graph;
 use annette::hw::device::Device;
-use annette::hw::dpu::DpuDevice;
+use annette::hw::spec::SpecDevice;
 use annette::json::Value;
 use annette::models::layer::ModelKind;
 use annette::models::platform::PlatformModel;
@@ -173,7 +178,7 @@ fn main() {
     };
 
     eprintln!("[bench] fitting platform model (ZCU102 DPU campaign) ...");
-    let dev = DpuDevice::zcu102();
+    let dev = SpecDevice::builtin("dpu-zcu102");
     let data = run_campaign(&dev, 2, 4);
     let model = PlatformModel::fit(&dev.spec(), &data);
     let est = Estimator::new(&model);
@@ -351,6 +356,82 @@ fn main() {
         batch_result.estimates_per_sec
     );
 
+    // --- Fleet scale: the full ≥20-device spec registry ---------------------
+    // `fit_all` benchmarks and fits every registered DeviceSpec (3 canonical
+    // + the synthetic variant fleet); the matrix workload then sweeps a
+    // NASBench sample across every fitted device in parallel. Rates are
+    // devices fitted per second and matrix cells per second respectively.
+    let fleet_passes = if smoke { 1 } else { 3 };
+    let fleet_result = {
+        let mut pass_mean_us: Vec<f64> = Vec::with_capacity(fleet_passes);
+        let mut fleet: Option<Fleet> = None;
+        let wall = Instant::now();
+        for _ in 0..fleet_passes {
+            let t0 = Instant::now();
+            let f = Fleet::fit_all(1).expect("fleet-wide campaign");
+            pass_mean_us.push(t0.elapsed().as_secs_f64() * 1e6 / f.len() as f64);
+            fleet = Some(f);
+        }
+        let elapsed = wall.elapsed().as_secs_f64();
+        let fleet_len = fleet.as_ref().map(|f| f.len()).unwrap_or(0);
+        pass_mean_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        (
+            fleet.expect("at least one fit_all pass"),
+            WorkloadResult {
+                workload: "fleet.fit_all_20dev".to_string(),
+                estimates_per_sec: (fleet_passes * fleet_len) as f64 / elapsed,
+                p50_us: percentile(&pass_mean_us, 0.50),
+                p99_us: percentile(&pass_mean_us, 0.99),
+                threads: 1,
+                threads_available: available_threads(),
+                calls: fleet_passes * fleet_len,
+            },
+        )
+    };
+    let (fleet, fit_all_result) = fleet_result;
+    eprintln!(
+        "[bench] fleet.fit_all_20dev: {} devices, {:.1} devices/s",
+        fleet.len(),
+        fit_all_result.estimates_per_sec
+    );
+
+    let mat_nets = zoo::nasbench::sample_networks(if smoke { 8 } else { 32 }, 7);
+    let mat_passes = if smoke { 2 } else { 10 };
+    let mat_threads = 4usize;
+    let matrix_result = {
+        let cells = mat_nets.len() * fleet.len();
+        let mut pass_mean_us: Vec<f64> = Vec::with_capacity(mat_passes);
+        let wall = Instant::now();
+        for _ in 0..mat_passes {
+            let t0 = Instant::now();
+            let matrix = fleet.latency_matrix(&mat_nets, ModelKind::Mixed, mat_threads);
+            let dt = t0.elapsed().as_secs_f64();
+            assert_eq!(matrix.len(), mat_nets.len());
+            assert!(
+                matrix.iter().flatten().all(|ms| ms.is_finite() && *ms > 0.0),
+                "latency matrix must be finite and positive"
+            );
+            pass_mean_us.push(dt * 1e6 / cells as f64);
+        }
+        let elapsed = wall.elapsed().as_secs_f64();
+        pass_mean_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        WorkloadResult {
+            workload: "fleet.latency_matrix_20dev".to_string(),
+            estimates_per_sec: (mat_passes * cells) as f64 / elapsed,
+            p50_us: percentile(&pass_mean_us, 0.50),
+            p99_us: percentile(&pass_mean_us, 0.99),
+            threads: mat_threads,
+            threads_available: available_threads(),
+            calls: mat_passes * cells,
+        }
+    };
+    eprintln!(
+        "[bench] fleet.latency_matrix_20dev: {} nets x {} devices, {:.0} cells/s",
+        mat_nets.len(),
+        fleet.len(),
+        matrix_result.estimates_per_sec
+    );
+
     results.push(base_nas);
     results.push(base_zoo);
     results.push(fast_nas);
@@ -360,6 +441,8 @@ fn main() {
     results.push(obs_on);
     results.extend(svc_results);
     results.push(batch_result);
+    results.push(fit_all_result);
+    results.push(matrix_result);
 
     // --- Telemetry snapshot --------------------------------------------------
     // Everything above ran with recording on, so the global registry now

@@ -39,11 +39,9 @@ fn print_front(label: &str, front: &[ParetoPoint], result: &annette::explore::Ex
 }
 
 fn main() {
-    println!(
-        "fitting the fleet ({} devices, in parallel) ...",
-        registry::entries().len()
-    );
-    let fleet = Fleet::fit_all(2).expect("fleet campaign");
+    let ids: Vec<&str> = registry::canonical().iter().map(|e| e.id).collect();
+    println!("fitting the canonical fleet ({} devices, in parallel) ...", ids.len());
+    let fleet = Fleet::fit(&ids, 2).expect("fleet campaign");
     let explorer = Explorer::for_fleet(NasBenchSpace, &fleet);
 
     // Unconstrained exploration: per-device fronts + the fleet-robust front.

@@ -1,7 +1,10 @@
-//! Fleet-wide estimation: fit a platform model for every registered device
+//! Fleet-wide estimation: fit a platform model for the canonical devices
 //! in parallel, print the 12-network × 3-device latency matrix with the
 //! predicted-best placement per network, and demo the fleet service
-//! protocol (`device` routing and `"fleet":true` requests).
+//! protocol (`device` routing and `"fleet":true` requests). The registry
+//! also carries ~20 synthetic spec variants (plus anything loaded from
+//! `ANNETTE_DEVICE_DIR`); `Fleet::fit_all` fits every one of them, but the
+//! canonical trio keeps this demo's table readable.
 //!
 //! ```sh
 //! cargo run --release --example fleet_compare
@@ -17,9 +20,14 @@ use annette::models::layer::ModelKind;
 use annette::zoo;
 
 fn main() {
-    println!("fitting the fleet ({} devices, in parallel) ...", registry::entries().len());
+    let ids: Vec<&str> = registry::canonical().iter().map(|e| e.id).collect();
+    println!(
+        "fitting the canonical fleet ({} of {} registered devices, in parallel) ...",
+        ids.len(),
+        registry::entries().len()
+    );
     let t0 = Instant::now();
-    let fleet = Fleet::fit_all(3).expect("fleet campaign");
+    let fleet = Fleet::fit(&ids, 3).expect("fleet campaign");
     println!(
         "fitted {} platform models in {:.1}s: {}",
         fleet.len(),

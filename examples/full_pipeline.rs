@@ -13,7 +13,7 @@ use annette::coordinator::orchestrator::{default_threads, run_campaign};
 use annette::estim::estimator::Estimator;
 use annette::graph::serial;
 use annette::hw::device::Device;
-use annette::hw::dpu::DpuDevice;
+use annette::hw::spec::SpecDevice;
 use annette::models::platform::PlatformModel;
 
 fn main() {
@@ -21,7 +21,7 @@ fn main() {
     std::fs::create_dir_all(&dir).unwrap();
 
     // ---- Benchmark phase -------------------------------------------------
-    let dev = DpuDevice::zcu102();
+    let dev = SpecDevice::builtin("dpu-zcu102");
     println!("[1/5] benchmark campaign on {} ...", dev.spec().name);
     let t0 = std::time::Instant::now();
     let bench = run_campaign(&dev, 5, default_threads());

@@ -51,7 +51,7 @@ use annette::coordinator::orchestrator::{default_threads, run_campaign};
 use annette::coordinator::{Server, ServerConfig, Service};
 use annette::graph::serial::graph_to_value;
 use annette::hw::device::Device;
-use annette::hw::dpu::DpuDevice;
+use annette::hw::spec::SpecDevice;
 use annette::json::Value;
 use annette::models::platform::PlatformModel;
 use annette::zoo::nasbench;
@@ -295,7 +295,7 @@ fn main() {
         Some(a) => a,
         None => {
             eprintln!("[load_gen] no --addr: starting in-process server");
-            let dev = DpuDevice::zcu102();
+            let dev = SpecDevice::builtin("dpu-zcu102");
             let data = run_campaign(&dev, 2, default_threads());
             let svc = Service::new(PlatformModel::fit(&dev.spec(), &data));
             let base = ServerConfig::default();

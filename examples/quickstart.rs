@@ -7,14 +7,14 @@
 
 use annette::coordinator::orchestrator::{default_threads, run_campaign};
 use annette::hw::device::Device;
-use annette::hw::dpu::DpuDevice;
+use annette::hw::spec::SpecDevice;
 use annette::models::layer::ModelKind;
 use annette::models::platform::PlatformModel;
 use annette::prelude::*;
 
 fn main() {
     // 1. The target device — the simulated ZCU102 DPU.
-    let dev = DpuDevice::zcu102();
+    let dev = SpecDevice::builtin("dpu-zcu102");
 
     // 2. Benchmark it (micro-kernel sweeps + multi-layer fusion probes) and
     //    fit the platform model: mapping models + per-layer-type roofline /

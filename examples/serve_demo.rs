@@ -14,12 +14,12 @@ use annette::coordinator::orchestrator::{default_threads, run_campaign};
 use annette::coordinator::Service;
 use annette::graph::serial::graph_to_value;
 use annette::hw::device::Device;
-use annette::hw::vpu::VpuDevice;
+use annette::hw::spec::SpecDevice;
 use annette::models::platform::PlatformModel;
 use annette::zoo::nasbench;
 
 fn main() {
-    let dev = VpuDevice::ncs2();
+    let dev = SpecDevice::builtin("vpu-ncs2");
     println!("fitting model for {} ...", dev.spec().name);
     let bench = run_campaign(&dev, 5, default_threads());
     let model = PlatformModel::fit(&dev.spec(), &bench);

@@ -15,7 +15,7 @@ use annette::coordinator::orchestrator::{default_threads, run_campaign};
 use annette::coordinator::Service;
 use annette::graph::serial::graph_to_value;
 use annette::hw::device::Device;
-use annette::hw::dpu::DpuDevice;
+use annette::hw::spec::SpecDevice;
 use annette::json::Value;
 use annette::models::platform::PlatformModel;
 use annette::obs;
@@ -26,7 +26,7 @@ fn main() {
     // so its output is always populated.
     obs::set_enabled(true);
 
-    let dev = DpuDevice::zcu102();
+    let dev = SpecDevice::builtin("dpu-zcu102");
     println!("fitting model for {} ...", dev.spec().name);
     let bench = run_campaign(&dev, 3, default_threads());
     let model = PlatformModel::fit(&dev.spec(), &bench);

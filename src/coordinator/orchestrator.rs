@@ -788,11 +788,11 @@ impl BenchData {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::hw::dpu::DpuDevice;
+    use crate::hw::spec::SpecDevice;
 
     #[test]
     fn campaign_is_deterministic_across_thread_counts() {
-        let dev = DpuDevice::zcu102();
+        let dev = SpecDevice::builtin("dpu-zcu102");
         let a = run_campaign(&dev, 2, 1);
         let b = run_campaign(&dev, 2, 7);
         assert_eq!(a.micro.records.len(), b.micro.records.len());
@@ -804,7 +804,7 @@ mod tests {
 
     #[test]
     fn campaign_covers_all_classes() {
-        let dev = DpuDevice::zcu102();
+        let dev = SpecDevice::builtin("dpu-zcu102");
         let data = run_campaign(&dev, 1, default_threads());
         for class in ["conv", "dwconv", "pool", "fc", "elem", "mem"] {
             assert!(
@@ -819,7 +819,7 @@ mod tests {
 
     #[test]
     fn dpu_probes_detect_conv_fusion() {
-        let dev = DpuDevice::zcu102();
+        let dev = SpecDevice::builtin("dpu-zcu102");
         let data = run_campaign(&dev, 3, default_threads());
         let fused: Vec<(&str, &str)> = data
             .mapping
@@ -835,7 +835,7 @@ mod tests {
 
     #[test]
     fn dpu_chain_and_elision_probes_match_the_hidden_mapping() {
-        let dev = DpuDevice::zcu102();
+        let dev = SpecDevice::builtin("dpu-zcu102");
         let data = run_campaign(&dev, 3, default_threads());
         // conv/dwconv/fc → bn → act all collapse on the DPU; pool and add
         // chains leave the bn standing and must NOT register as chains.
@@ -876,7 +876,7 @@ mod tests {
 
     #[test]
     fn bench_data_roundtrips_through_json() {
-        let dev = DpuDevice::zcu102();
+        let dev = SpecDevice::builtin("dpu-zcu102");
         let data = run_campaign(&dev, 1, 2);
         let v = data.to_value();
         let back = BenchData::from_value(&v).unwrap();
@@ -900,7 +900,7 @@ mod tests {
 
     #[test]
     fn v1_bench_documents_still_load_without_probe_extensions() {
-        let dev = DpuDevice::zcu102();
+        let dev = SpecDevice::builtin("dpu-zcu102");
         let data = run_campaign(&dev, 1, 2);
         // Rewrite the document as a v1 reader would have produced it.
         let text = data

@@ -899,20 +899,22 @@ mod tests {
     use crate::graph::serial::graph_to_value;
     use crate::graph::GraphBuilder;
     use crate::hw::device::Device;
-    use crate::hw::dpu::DpuDevice;
     use crate::hw::registry;
+    use crate::hw::spec::SpecDevice;
 
     fn service() -> Service {
-        let dev = DpuDevice::zcu102();
+        let dev = SpecDevice::builtin("dpu-zcu102");
         let data = run_campaign(&dev, 1, 4);
         Service::new(PlatformModel::fit(&dev.spec(), &data))
     }
 
     fn fleet_service() -> Service {
-        let targets = registry::entries()
-            .iter()
+        // The three canonical devices: the full 20+-variant fleet is
+        // exercised by tests/fleet_scale.rs, not every service test.
+        let targets = registry::canonical()
+            .into_iter()
             .map(|entry| {
-                let dev = (entry.build)();
+                let dev = entry.build();
                 let data = run_campaign(dev.as_ref(), 1, 4);
                 (entry.id.to_string(), PlatformModel::fit(&dev.spec(), &data))
             })
@@ -1471,7 +1473,7 @@ mod tests {
 
     #[test]
     fn multi_rejects_bad_target_sets() {
-        let dev = DpuDevice::zcu102();
+        let dev = SpecDevice::builtin("dpu-zcu102");
         let data = run_campaign(&dev, 1, 4);
         let model = PlatformModel::fit(&dev.spec(), &data);
         assert!(Service::multi(vec![]).is_err());

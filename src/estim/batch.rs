@@ -117,10 +117,10 @@ mod tests {
     use super::*;
     use crate::coordinator::orchestrator::run_campaign;
     use crate::hw::device::Device;
-    use crate::hw::dpu::DpuDevice;
+    use crate::hw::spec::SpecDevice;
 
     fn model() -> PlatformModel {
-        let dev = DpuDevice::zcu102();
+        let dev = SpecDevice::builtin("dpu-zcu102");
         let data = run_campaign(&dev, 1, 4);
         PlatformModel::fit(&dev.spec(), &data)
     }

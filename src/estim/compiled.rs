@@ -29,7 +29,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard};
 
 use crate::graph::{Graph, LayerClass, LayerKind, NUM_CLASSES};
-use crate::hw::device::{class_utils, DeviceSpec};
+use crate::hw::device::{class_utils, Datasheet};
 use crate::mapping::{self, MappingModel};
 use crate::models::layer::ModelKind;
 use crate::models::platform::PlatformModel;
@@ -81,7 +81,7 @@ pub struct CompiledModel {
     /// tables are identical by construction).
     id: u64,
     /// The device datasheet (needed for the analytical baselines).
-    pub spec: DeviceSpec,
+    pub spec: Datasheet,
     /// Dense per-class table indexed by [`LayerClass::index`].
     pub classes: [CompiledClass; NUM_CLASSES],
     /// The learned mapping model the graph-compile step rewrites units
@@ -615,10 +615,10 @@ mod tests {
     use crate::coordinator::orchestrator::run_campaign;
     use crate::graph::GraphBuilder;
     use crate::hw::device::Device;
-    use crate::hw::dpu::DpuDevice;
+    use crate::hw::spec::SpecDevice;
 
     fn fitted() -> PlatformModel {
-        let dev = DpuDevice::zcu102();
+        let dev = SpecDevice::builtin("dpu-zcu102");
         let data = run_campaign(&dev, 2, 4);
         PlatformModel::fit(&dev.spec(), &data)
     }

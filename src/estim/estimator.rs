@@ -66,7 +66,7 @@ impl Estimate {
 /// use annette::prelude::*;
 ///
 /// // Benchmark phase: profile the (simulated) device and fit its model.
-/// let dev = DpuDevice::zcu102();
+/// let dev = SpecDevice::builtin("dpu-zcu102");
 /// let bench = run_campaign(&dev, 1, 2);
 /// let model = PlatformModel::fit(&dev.spec(), &bench);
 ///
@@ -295,10 +295,10 @@ mod tests {
     use crate::coordinator::orchestrator::run_campaign;
     use crate::graph::GraphBuilder;
     use crate::hw::device::Device;
-    use crate::hw::dpu::DpuDevice;
+    use crate::hw::spec::SpecDevice;
 
     fn fitted() -> PlatformModel {
-        let dev = DpuDevice::zcu102();
+        let dev = SpecDevice::builtin("dpu-zcu102");
         let data = run_campaign(&dev, 3, 4);
         PlatformModel::fit(&dev.spec(), &data)
     }
@@ -316,7 +316,7 @@ mod tests {
     #[test]
     fn mixed_estimate_tracks_simulator_truth() {
         let model = fitted();
-        let dev = DpuDevice::zcu102();
+        let dev = SpecDevice::builtin("dpu-zcu102");
         let g = net();
         let est = Estimator::new(&model).estimate(&g);
         let truth = dev.profile(&g, 20, 0).total_ms();

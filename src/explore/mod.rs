@@ -191,7 +191,7 @@ impl ExploreResult {
 /// use annette::explore::{ExploreConfig, Explorer, NasBenchSpace};
 /// use annette::prelude::*;
 ///
-/// let dev = DpuDevice::zcu102();
+/// let dev = SpecDevice::builtin("dpu-zcu102");
 /// let bench = run_campaign(&dev, 1, 2);
 /// let model = PlatformModel::fit(&dev.spec(), &bench);
 /// let explorer = Explorer::for_device(NasBenchSpace, "dpu-zcu102", &model).unwrap();
@@ -479,10 +479,10 @@ mod tests {
     use super::*;
     use crate::coordinator::orchestrator::run_campaign;
     use crate::hw::device::Device;
-    use crate::hw::dpu::DpuDevice;
+    use crate::hw::spec::SpecDevice;
 
     fn dpu_model() -> PlatformModel {
-        let dev = DpuDevice::zcu102();
+        let dev = SpecDevice::builtin("dpu-zcu102");
         let bench = run_campaign(&dev, 1, 4);
         PlatformModel::fit(&dev.spec(), &bench)
     }

@@ -96,7 +96,7 @@ impl Fleet {
         let campaign_threads = (default_threads() / entries.len()).max(1);
         let members = fan_indexed(entries.len(), entries.len(), |i| {
             let entry = entries[i];
-            let device = (entry.build)();
+            let device = entry.build();
             let bench = run_campaign(device.as_ref(), runs, campaign_threads);
             let model = PlatformModel::fit(&device.spec(), &bench);
             FleetMember {
@@ -235,15 +235,18 @@ mod tests {
     use crate::zoo;
 
     #[test]
-    fn fit_all_covers_the_registry_and_fills_the_matrix() {
-        let fleet = Fleet::fit_all(1).unwrap();
-        assert_eq!(fleet.ids(), registry::ids());
-        assert_eq!(fleet.len(), 3);
+    fn fit_covers_the_canonical_trio_and_fills_the_matrix() {
+        // The canonical trio keeps this unit test fast; the full ≥20-device
+        // registry goes through `fit_all` in tests/fleet_scale.rs.
+        let ids: Vec<&str> = registry::canonical().iter().map(|e| e.id).collect();
+        let fleet = Fleet::fit(&ids, 1).unwrap();
+        assert_eq!(fleet.ids(), ids);
+        assert_eq!(fleet.len(), ids.len());
         let nets: Vec<Graph> = zoo::table2().into_iter().map(|e| e.graph).collect();
         let matrix = fleet.latency_matrix(&nets, ModelKind::Mixed, 4);
         assert_eq!(matrix.len(), 12, "12 networks");
         for (g, row) in nets.iter().zip(&matrix) {
-            assert_eq!(row.len(), 3, "3 devices");
+            assert_eq!(row.len(), ids.len(), "one column per canonical device");
             assert!(row.iter().all(|ms| *ms > 0.0), "{}: {row:?}", g.name);
             // The matrix row agrees bit-for-bit with per-network queries.
             let all = fleet.estimate_on_all(g, ModelKind::Mixed);
@@ -286,7 +289,7 @@ mod tests {
         // carry exactly the models a one-by-one fit produces.
         let fleet = Fleet::fit(&["dpu-zcu102", "vpu-ncs2"], 1).unwrap();
         for m in fleet.members() {
-            let device = (m.entry.build)();
+            let device = m.entry.build();
             let bench = run_campaign(device.as_ref(), 1, default_threads());
             let solo = PlatformModel::fit(&device.spec(), &bench);
             assert_eq!(solo.mapping, m.model.mapping, "{}", m.entry.id);

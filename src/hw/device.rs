@@ -7,9 +7,11 @@ use crate::json::Value;
 
 /// Public datasheet of a target. This is the only hardware information the
 /// analytical models (roofline, refined roofline) may use; everything else
-/// must be learned from benchmarks.
+/// must be learned from benchmarks. (The full declarative device format,
+/// hidden behavior included, is [`crate::hw::spec::DeviceSpec`]; its
+/// `datasheet` block is exactly this struct.)
 #[derive(Clone, Debug, PartialEq)]
-pub struct DeviceSpec {
+pub struct Datasheet {
     pub name: String,
     /// Peak arithmetic throughput in 10^9 ops/s.
     pub peak_gops: f64,
@@ -25,7 +27,7 @@ pub struct DeviceSpec {
     pub spatial_align: usize,
 }
 
-impl DeviceSpec {
+impl Datasheet {
     /// Ideal compute time in microseconds at full efficiency.
     pub fn ideal_compute_us(&self, flops: f64) -> f64 {
         flops / (self.peak_gops * 1e3)
@@ -53,8 +55,8 @@ impl DeviceSpec {
         ])
     }
 
-    pub fn from_value(v: &Value) -> Result<DeviceSpec> {
-        Ok(DeviceSpec {
+    pub fn from_value(v: &Value) -> Result<Datasheet> {
+        Ok(Datasheet {
             name: v.req_str("name")?.to_string(),
             peak_gops: v.req_f64("peak_gops")?,
             bandwidth_gbs: v.req_f64("bandwidth_gbs")?,
@@ -123,7 +125,7 @@ impl Profile {
 /// benchmark orchestrator can drive them from multiple worker threads.
 pub trait Device: Send + Sync {
     /// The public datasheet.
-    fn spec(&self) -> DeviceSpec;
+    fn spec(&self) -> Datasheet;
 
     /// Execute `graph` `runs` times and return mean per-layer timings.
     /// Deterministic for a fixed `(graph, runs, seed)` triple.

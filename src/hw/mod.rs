@@ -1,16 +1,13 @@
-//! Hardware targets: the [`device::Device`] abstraction, the simulated
-//! accelerators benchmarks run against, and the [`registry`] that names
-//! them for everything above this layer.
+//! Hardware targets: the [`device::Device`] abstraction, the declarative
+//! [`spec::DeviceSpec`] format with its generic [`spec::SpecDevice`]
+//! simulator, the frozen legacy [`sim::SimDevice`] reference engine, and
+//! the [`registry`] that names every target for the layers above.
 
 pub mod device;
-pub mod dpu;
 pub mod registry;
 pub mod sim;
-pub mod tpu;
-pub mod vpu;
+pub mod spec;
 
-pub use device::{Device, DeviceSpec, Profile};
-pub use dpu::DpuDevice;
+pub use device::{Datasheet, Device, Profile};
 pub use registry::DeviceEntry;
-pub use tpu::TpuDevice;
-pub use vpu::VpuDevice;
+pub use spec::{DeviceSpec, SpecDevice};

@@ -1,16 +1,42 @@
 //! The device registry: the single place that knows which accelerator
 //! targets exist and how to instantiate them.
 //!
-//! Everything above the `hw` layer — the benchmark/fit flows in `repro`,
-//! the [`crate::fleet::Fleet`], the examples — resolves devices through
-//! this table instead of matching on hardcoded device enums, so adding a
-//! fourth family is one new [`DeviceEntry`] line, not a repo-wide edit.
+//! Since the spec migration a device is **data**: every entry holds a
+//! validated [`DeviceSpec`] realized on demand by the generic
+//! [`SpecDevice`] simulator. The table is built once, on first use, from
+//! three sources, in order:
+//!
+//! 1. the three **canonical** paper devices ([`crate::hw::spec::canonical_specs`]),
+//! 2. twenty built-in synthetic **variants** sweeping array width,
+//!    bandwidth, spill, and depthwise friendliness
+//!    ([`crate::hw::spec::variant_specs`]),
+//! 3. **user** spec files (`*.json`, `annette-device.v1`) from the
+//!    directory named by the `ANNETTE_DEVICE_DIR` environment variable,
+//!    in filename order.
+//!
+//! `ANNETTE_DEVICE_DIR` is read once, at first registry access — set it
+//! before touching any device API. Files that fail to parse or validate
+//! never poison the table: they are skipped and reported through
+//! [`user_spec_errors`]; duplicate ids (against built-ins or each other)
+//! are rejected the same way.
+
+use std::path::Path;
+use std::sync::OnceLock;
 
 use crate::error::{Error, Result};
 use crate::hw::device::Device;
-use crate::hw::dpu::DpuDevice;
-use crate::hw::tpu::TpuDevice;
-use crate::hw::vpu::VpuDevice;
+use crate::hw::spec::{self, DeviceSpec, SpecDevice};
+
+/// Where a registry entry came from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Origin {
+    /// One of the three paper devices (DPU / VPU / TPU).
+    Canonical,
+    /// A built-in synthetic spec variant.
+    Variant,
+    /// Loaded from `ANNETTE_DEVICE_DIR`.
+    User,
+}
 
 /// One registered accelerator target.
 #[derive(Clone, Copy, Debug)]
@@ -19,59 +45,126 @@ pub struct DeviceEntry {
     pub id: &'static str,
     /// Human-readable name (the paper's, where the paper evaluates it).
     pub paper_name: &'static str,
-    /// Architecture family ("dpu", "vpu", "tpu").
+    /// Architecture family ("dpu", "vpu", "tpu", "sa", "vec", …).
     pub family: &'static str,
-    /// Instantiate a fresh simulated device.
-    pub build: fn() -> Box<dyn Device>,
+    /// The validated declarative spec this entry realizes.
+    pub spec: &'static DeviceSpec,
+    /// Which of the three sources produced the entry.
+    pub origin: Origin,
 }
 
-fn build_dpu() -> Box<dyn Device> {
-    Box::new(DpuDevice::zcu102())
+impl DeviceEntry {
+    /// Instantiate a fresh simulated device from the entry's spec.
+    pub fn build(&self) -> Box<dyn Device> {
+        Box::new(
+            SpecDevice::new(self.spec.clone()).expect("registry specs are validated at load"),
+        )
+    }
 }
 
-fn build_vpu() -> Box<dyn Device> {
-    Box::new(VpuDevice::ncs2())
+struct Table {
+    entries: Vec<DeviceEntry>,
+    user_errors: Vec<(String, String)>,
 }
 
-fn build_tpu() -> Box<dyn Device> {
-    Box::new(TpuDevice::edge())
-}
-
-/// Every built-in simulated accelerator, in canonical (fleet) order.
-pub static BUILTIN: &[DeviceEntry] = &[
+fn leak_entry(spec: DeviceSpec, origin: Origin) -> DeviceEntry {
+    let spec: &'static DeviceSpec = Box::leak(Box::new(spec));
     DeviceEntry {
-        id: "dpu-zcu102",
-        paper_name: "ZCU102 DPU (DNNDK)",
-        family: "dpu",
-        build: build_dpu,
-    },
-    DeviceEntry {
-        id: "vpu-ncs2",
-        paper_name: "Intel NCS2 (Myriad X VPU)",
-        family: "vpu",
-        build: build_vpu,
-    },
-    DeviceEntry {
-        id: "tpu-edge",
-        paper_name: "Edge-TPU-class systolic array",
-        family: "tpu",
-        build: build_tpu,
-    },
-];
+        id: spec.id.as_str(),
+        paper_name: spec.paper_name.as_str(),
+        family: spec.family.as_str(),
+        spec,
+        origin,
+    }
+}
 
-/// All registered entries, in canonical order.
+/// Load and validate every `*.json` spec file under `dir`, in filename
+/// order. Returns the valid specs plus `(filename, error)` pairs for the
+/// rest — a bad file never hides a good one.
+pub fn load_dir(dir: &Path) -> (Vec<DeviceSpec>, Vec<(String, String)>) {
+    let mut specs = Vec::new();
+    let mut errors = Vec::new();
+    let mut paths: Vec<std::path::PathBuf> = match std::fs::read_dir(dir) {
+        Ok(rd) => rd
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| p.extension().is_some_and(|x| x == "json"))
+            .collect(),
+        Err(e) => {
+            errors.push((dir.display().to_string(), format!("unreadable directory: {e}")));
+            return (specs, errors);
+        }
+    };
+    paths.sort();
+    for path in paths {
+        let name = path
+            .file_name()
+            .map(|n| n.to_string_lossy().into_owned())
+            .unwrap_or_else(|| path.display().to_string());
+        match DeviceSpec::load(&path) {
+            Ok(spec) => specs.push(spec),
+            Err(e) => errors.push((name, e.to_string())),
+        }
+    }
+    (specs, errors)
+}
+
+fn build_table() -> Table {
+    let mut entries: Vec<DeviceEntry> = Vec::new();
+    let mut user_errors = Vec::new();
+    for spec in spec::canonical_specs() {
+        entries.push(leak_entry(spec, Origin::Canonical));
+    }
+    for spec in spec::variant_specs() {
+        entries.push(leak_entry(spec, Origin::Variant));
+    }
+    if let Ok(dir) = std::env::var("ANNETTE_DEVICE_DIR") {
+        let (specs, mut errors) = load_dir(Path::new(&dir));
+        user_errors.append(&mut errors);
+        for spec in specs {
+            if entries.iter().any(|e| e.id == spec.id) {
+                user_errors.push((
+                    spec.id.clone(),
+                    format!("duplicate device id `{}` — entry skipped", spec.id),
+                ));
+                continue;
+            }
+            entries.push(leak_entry(spec, Origin::User));
+        }
+    }
+    Table { entries, user_errors }
+}
+
+fn table() -> &'static Table {
+    static TABLE: OnceLock<Table> = OnceLock::new();
+    TABLE.get_or_init(build_table)
+}
+
+/// All registered entries, in canonical order (canonical devices first,
+/// then built-in variants, then user specs in filename order).
 pub fn entries() -> &'static [DeviceEntry] {
-    BUILTIN
+    &table().entries
+}
+
+/// The three canonical paper devices (always the first entries).
+pub fn canonical() -> Vec<&'static DeviceEntry> {
+    entries().iter().filter(|e| e.origin == Origin::Canonical).collect()
+}
+
+/// `(filename, error)` pairs for every `ANNETTE_DEVICE_DIR` file that was
+/// skipped (parse/validation failure or duplicate id). Empty when every
+/// user spec loaded cleanly — or when no directory was configured.
+pub fn user_spec_errors() -> &'static [(String, String)] {
+    &table().user_errors
 }
 
 /// The ids of all registered devices, in canonical order.
 pub fn ids() -> Vec<&'static str> {
-    BUILTIN.iter().map(|e| e.id).collect()
+    entries().iter().map(|e| e.id).collect()
 }
 
 /// Look up an entry by id.
 pub fn get(id: &str) -> Option<&'static DeviceEntry> {
-    BUILTIN.iter().find(|e| e.id == id)
+    entries().iter().find(|e| e.id == id)
 }
 
 /// Look up an entry by id, with the canonical unknown-device error every
@@ -87,7 +180,7 @@ pub fn get_or_err(id: &str) -> Result<&'static DeviceEntry> {
 
 /// Instantiate the device registered under `id`.
 pub fn build(id: &str) -> Result<Box<dyn Device>> {
-    Ok((get_or_err(id)?.build)())
+    Ok(get_or_err(id)?.build())
 }
 
 #[cfg(test)]
@@ -95,13 +188,25 @@ mod tests {
     use super::*;
 
     #[test]
-    fn registry_lists_three_distinct_families() {
-        assert_eq!(entries().len(), 3);
-        let mut families: Vec<&str> = entries().iter().map(|e| e.family).collect();
-        families.dedup();
-        assert_eq!(families.len(), 3, "families must be distinct: {families:?}");
-        // Ids are unique and stable.
-        assert_eq!(ids(), vec!["dpu-zcu102", "vpu-ncs2", "tpu-edge"]);
+    fn registry_serves_canonical_devices_plus_a_variant_fleet() {
+        assert!(entries().len() >= 23, "fleet shrank: {}", entries().len());
+        let canon = canonical();
+        assert_eq!(
+            canon.iter().map(|e| e.id).collect::<Vec<_>>(),
+            vec!["dpu-zcu102", "vpu-ncs2", "tpu-edge"]
+        );
+        // Canonical entries lead the table, so index-based consumers keep
+        // their historical devices at the historical positions.
+        assert_eq!(ids()[..3], ["dpu-zcu102", "vpu-ncs2", "tpu-edge"]);
+        let variants = entries().iter().filter(|e| e.origin == Origin::Variant).count();
+        assert!(variants >= 20, "only {variants} built-in variants");
+        // Ids are unique.
+        let mut seen = std::collections::HashSet::new();
+        for e in entries() {
+            assert!(seen.insert(e.id), "duplicate id {}", e.id);
+            assert_eq!(e.spec.id, e.id);
+            assert_eq!(e.spec.family, e.family);
+        }
     }
 
     #[test]
@@ -119,17 +224,43 @@ mod tests {
 
     #[test]
     fn specs_are_distinct_across_the_fleet() {
-        let specs: Vec<_> = entries().iter().map(|e| (e.build)().spec()).collect();
-        for (i, a) in specs.iter().enumerate() {
-            for b in &specs[i + 1..] {
-                assert_ne!(a.name, b.name);
-                assert!(
-                    a.channel_align != b.channel_align || a.peak_gops != b.peak_gops,
-                    "{} and {} look like the same silicon",
-                    a.name,
-                    b.name
+        for (i, a) in entries().iter().enumerate() {
+            for b in &entries()[i + 1..] {
+                assert_ne!(a.spec.datasheet.name, b.spec.datasheet.name);
+                assert_ne!(
+                    a.spec, b.spec,
+                    "{} and {} are the same silicon",
+                    a.id, b.id
                 );
             }
         }
+    }
+
+    #[test]
+    fn load_dir_separates_good_specs_from_bad_files() {
+        let dir = std::env::temp_dir().join("annette-registry-load-dir-test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut good = spec::dpu_zcu102();
+        good.id = "user-dpu".to_string();
+        good.save(dir.join("a_good.json")).unwrap();
+        std::fs::write(dir.join("b_broken.json"), "{not json").unwrap();
+        let mut invalid = spec::tpu_edge();
+        invalid.id = "user-bad".to_string();
+        invalid.noise_sigma = -1.0;
+        // Bypass save-side checking: write the raw document.
+        std::fs::write(dir.join("c_invalid.json"), invalid.to_value().to_string()).unwrap();
+        std::fs::write(dir.join("ignored.txt"), "not a spec").unwrap();
+        let (specs, errors) = load_dir(&dir);
+        assert_eq!(specs.len(), 1, "{errors:?}");
+        assert_eq!(specs[0].id, "user-dpu");
+        assert_eq!(errors.len(), 2, "{errors:?}");
+        assert!(errors.iter().any(|(f, _)| f == "b_broken.json"));
+        assert!(errors
+            .iter()
+            .any(|(f, e)| f == "c_invalid.json" && e.contains("invalid")));
+        // A missing directory reports one error and zero specs.
+        let (none, errs) = load_dir(&dir.join("absent"));
+        assert!(none.is_empty() && errs.len() == 1);
     }
 }

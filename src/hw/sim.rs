@@ -1,10 +1,15 @@
-//! Deterministic latency simulator backing the virtual devices.
+//! The legacy handwritten latency simulator, kept as the **frozen bit-exact
+//! reference** for the spec migration.
 //!
-//! The simulator plays the role of real silicon: it has *hidden* per-class
-//! efficiencies, overheads, and fusion behavior that the estimation models
-//! never see directly — they can only learn them through benchmarks, exactly
-//! as ANNETTE's benchmark phase does on physical hardware. Only the
-//! [`DeviceSpec`] datasheet is public.
+//! Production devices are realized from declarative specs by
+//! [`crate::hw::spec::SpecDevice`]; this module preserves the original
+//! hardcoded engine (and the original DPU/VPU/TPU constants, as
+//! [`SimDevice::legacy_dpu`] / [`SimDevice::legacy_vpu`] /
+//! [`SimDevice::legacy_tpu`]) so `tests/spec_migration.rs` can prove, bit
+//! for bit, that the spec-realized devices reproduce it — profiles,
+//! campaign data, fitted models, and estimates. Do not "improve" the
+//! arithmetic here: its only job is to stay identical to what the retired
+//! `dpu.rs`/`vpu.rs`/`tpu.rs` wrappers computed.
 //!
 //! Per execution-unit latency model (microseconds):
 //!
@@ -26,7 +31,7 @@
 //! real accelerator cliffs.
 
 use crate::graph::{Graph, LayerClass};
-use crate::hw::device::{class_utils, Device, DeviceSpec, LayerTiming, Profile};
+use crate::hw::device::{class_utils, Datasheet, Device, LayerTiming, Profile};
 use crate::mapping::{self, MappingModel, MappingRule};
 use crate::rng::{Rng, PHI};
 
@@ -54,9 +59,9 @@ pub struct SpillModel {
     pub mem_penalty: f64,
 }
 
-/// A simulated accelerator.
+/// A simulated accelerator (legacy handwritten engine).
 pub struct SimDevice {
-    pub spec: DeviceSpec,
+    pub spec: Datasheet,
     pub params: SimParams,
     pub fused: Vec<FusedPair>,
     /// Present on devices whose weights normally stay on-chip.
@@ -69,7 +74,7 @@ pub struct SimDevice {
 
 impl SimDevice {
     pub fn new(
-        spec: DeviceSpec,
+        spec: Datasheet,
         params: SimParams,
         fused: Vec<FusedPair>,
         spill: Option<SpillModel>,
@@ -81,6 +86,107 @@ impl SimDevice {
             spill,
             mapping: std::sync::OnceLock::new(),
         }
+    }
+
+    /// The retired `DpuDevice::zcu102` constants: wide int8 PE array
+    /// (16×16 channels × 8 pixels), aggressive conv→BN/activation fusion,
+    /// moderate per-layer dispatch cost. Migration-gate reference only.
+    pub fn legacy_dpu() -> SimDevice {
+        SimDevice::new(
+            Datasheet {
+                name: "ZCU102-DPU-sim".to_string(),
+                peak_gops: 2400.0,
+                bandwidth_gbs: 19.2,
+                bytes_per_elem: 1.0,
+                channel_align: 16,
+                input_align: 16,
+                spatial_align: 8,
+            },
+            // Order: [conv, dwconv, pool, fc, elem, mem]
+            SimParams {
+                base_eff: [0.82, 0.30, 0.55, 0.60, 0.35, 0.90],
+                mem_eff: [0.60, 0.50, 0.85, 0.80, 0.85, 0.90],
+                overhead_us: [35.0, 35.0, 25.0, 30.0, 18.0, 12.0],
+                noise_sigma: 0.01,
+            },
+            vec![
+                (LayerClass::Conv, "batchnorm"),
+                (LayerClass::Conv, "act"),
+                (LayerClass::DwConv, "batchnorm"),
+                (LayerClass::DwConv, "act"),
+                (LayerClass::Fc, "batchnorm"),
+                (LayerClass::Fc, "act"),
+                (LayerClass::Elem, "act"),
+            ],
+            None,
+        )
+    }
+
+    /// The retired `VpuDevice::ncs2` constants: narrower fp16 SHAVE vector
+    /// units, high per-layer dispatch overhead (USB-attached runtime),
+    /// conv-centric fusion only. Migration-gate reference only.
+    pub fn legacy_vpu() -> SimDevice {
+        SimDevice::new(
+            Datasheet {
+                name: "NCS2-VPU-sim".to_string(),
+                peak_gops: 1000.0,
+                bandwidth_gbs: 10.0,
+                bytes_per_elem: 2.0,
+                channel_align: 8,
+                input_align: 1,
+                spatial_align: 4,
+            },
+            SimParams {
+                base_eff: [0.65, 0.50, 0.50, 0.55, 0.40, 0.85],
+                mem_eff: [0.70, 0.55, 0.80, 0.85, 0.80, 0.90],
+                overhead_us: [150.0, 140.0, 90.0, 110.0, 60.0, 40.0],
+                noise_sigma: 0.015,
+            },
+            vec![
+                (LayerClass::Conv, "batchnorm"),
+                (LayerClass::Conv, "act"),
+                (LayerClass::DwConv, "batchnorm"),
+                (LayerClass::DwConv, "act"),
+                (LayerClass::Fc, "act"),
+            ],
+            None,
+        )
+    }
+
+    /// The retired `TpuDevice::edge` constants: 64×64 weight-stationary int8
+    /// systolic array, low dispatch overhead, compiler-folded conv/fc
+    /// fusion, 8 MiB parameter buffer with DRAM spill beyond it.
+    /// Migration-gate reference only.
+    pub fn legacy_tpu() -> SimDevice {
+        SimDevice::new(
+            Datasheet {
+                name: "EdgeTPU-SA-sim".to_string(),
+                peak_gops: 4000.0,
+                bandwidth_gbs: 25.6,
+                bytes_per_elem: 1.0,
+                channel_align: 64,
+                input_align: 64,
+                spatial_align: 1,
+            },
+            SimParams {
+                base_eff: [0.92, 0.12, 0.40, 0.70, 0.25, 0.85],
+                mem_eff: [0.78, 0.50, 0.80, 0.85, 0.75, 0.92],
+                overhead_us: [15.0, 20.0, 12.0, 14.0, 8.0, 6.0],
+                noise_sigma: 0.008,
+            },
+            vec![
+                (LayerClass::Conv, "batchnorm"),
+                (LayerClass::Conv, "act"),
+                (LayerClass::DwConv, "batchnorm"),
+                (LayerClass::DwConv, "act"),
+                (LayerClass::Fc, "batchnorm"),
+                (LayerClass::Fc, "act"),
+            ],
+            Some(SpillModel {
+                buffer_bytes: crate::hw::spec::TPU_BUFFER_BYTES,
+                mem_penalty: 3.0,
+            }),
+        )
     }
 
     /// The device's *hidden* mapping model — the ground truth the benchmark
@@ -136,7 +242,7 @@ impl SimDevice {
 }
 
 impl Device for SimDevice {
-    fn spec(&self) -> DeviceSpec {
+    fn spec(&self) -> Datasheet {
         self.spec.clone()
     }
 
@@ -177,7 +283,6 @@ impl Device for SimDevice {
 mod tests {
     use super::*;
     use crate::graph::GraphBuilder;
-    use crate::hw::dpu::DpuDevice;
 
     fn net() -> Graph {
         let mut b = GraphBuilder::new("t");
@@ -189,7 +294,7 @@ mod tests {
 
     #[test]
     fn profile_is_deterministic() {
-        let dev = DpuDevice::zcu102();
+        let dev = SimDevice::legacy_dpu();
         let a = dev.profile(&net(), 5, 99).total_ms();
         let b = dev.profile(&net(), 5, 99).total_ms();
         assert_eq!(a, b);
@@ -199,7 +304,7 @@ mod tests {
 
     #[test]
     fn fused_layers_cost_nothing() {
-        let dev = DpuDevice::zcu102();
+        let dev = SimDevice::legacy_dpu();
         let p = dev.profile(&net(), 3, 0);
         // bn (2) and relu (3) fold into the conv (1)
         assert_eq!(p.layers[2].ms, 0.0);
@@ -210,7 +315,6 @@ mod tests {
 
     #[test]
     fn spill_penalizes_only_over_buffer_weights() {
-        use crate::hw::tpu::TpuDevice;
         // A conv whose weights fit the buffer, and one that overflows it.
         let small = {
             let mut b = GraphBuilder::new("small");
@@ -224,8 +328,8 @@ mod tests {
             b.conv(i, 1024, 3, 1); // 9.4 MB of int8 weights > 8 MiB buffer
             b.finish().unwrap()
         };
-        let with = TpuDevice::edge();
-        let mut without = TpuDevice::edge().into_sim();
+        let with = SimDevice::legacy_tpu();
+        let mut without = SimDevice::legacy_tpu();
         without.spill = None;
         assert_eq!(
             with.profile(&small, 1, 3).total_ms(),
@@ -240,7 +344,7 @@ mod tests {
 
     #[test]
     fn more_runs_reduce_noise() {
-        let dev = DpuDevice::zcu102();
+        let dev = SimDevice::legacy_vpu();
         let few: Vec<f64> = (0..20)
             .map(|s| dev.profile(&net(), 1, s).total_ms())
             .collect();

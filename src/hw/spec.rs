@@ -1,0 +1,1049 @@
+//! Declarative device specs: an accelerator as **data**, not code.
+//!
+//! A [`DeviceSpec`] captures everything the hidden simulators used to
+//! hard-code — datasheet numbers, per-class efficiency curves and dispatch
+//! overheads, measurement noise, fusion/chain/elision capabilities, and the
+//! optional on-chip parameter-buffer spill model — in one validated,
+//! serializable document (`annette-device.v1`). One generic [`SpecDevice`]
+//! realizes any valid spec as a [`Device`], reproducing the legacy
+//! [`crate::hw::sim::SimDevice`] arithmetic bit for bit when the curves are
+//! flat (the migration suite `tests/spec_migration.rs` proves this for the
+//! three canonical targets).
+//!
+//! The registry ([`crate::hw::registry`]) builds its whole fleet from specs:
+//! the three canonical paper devices ([`canonical_specs`]), a score of
+//! synthetic variants sweeping array width, bandwidth, spill, and depthwise
+//! friendliness ([`variant_specs`]), plus any user spec files found under
+//! `ANNETTE_DEVICE_DIR`.
+//!
+//! Validation is strict and total: a spec that is `NaN`-tainted, negative
+//! where it must be positive, empty where it must not be, or malformed in
+//! shape is rejected with [`Error::Invalid`] (`error_kind: "invalid"`) —
+//! never a panic — so untrusted spec documents can be loaded safely.
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::graph::{Graph, LayerClass};
+use crate::hw::device::{class_utils, Datasheet, Device, LayerTiming, Profile};
+use crate::json::Value;
+use crate::mapping::{self, MappingModel, MappingRule};
+use crate::rng::{Rng, PHI};
+
+/// Serialization format tag of a [`DeviceSpec`] document.
+pub const FORMAT: &str = "annette-device.v1";
+
+/// Layer-class names in [`LayerClass::index`] order; the `classes` object of
+/// an `annette-device.v1` document must carry exactly these six keys.
+pub const CLASS_NAMES: [&str; 6] = ["conv", "dwconv", "pool", "fc", "elem", "mem"];
+
+/// A piecewise-constant efficiency curve over the output-channel count:
+/// ordered `(min_cout, value)` steps, the first at `min_cout = 0`. A
+/// single-point curve is a constant — exactly the legacy per-class scalar.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Curve {
+    pub points: Vec<(usize, f64)>,
+}
+
+impl Curve {
+    /// The constant curve `value`, everywhere.
+    pub fn flat(value: f64) -> Curve {
+        Curve { points: vec![(0, value)] }
+    }
+
+    /// The step value in effect at `cout`. Valid curves start at threshold 0,
+    /// so every `cout` is covered.
+    pub fn eval(&self, cout: usize) -> f64 {
+        let mut v = self.points.first().map_or(1.0, |p| p.1);
+        for &(min_cout, value) in &self.points {
+            if cout >= min_cout {
+                v = value;
+            } else {
+                break;
+            }
+        }
+        v
+    }
+
+    fn to_value(&self) -> Value {
+        Value::Arr(
+            self.points
+                .iter()
+                .map(|&(min_cout, value)| {
+                    Value::Arr(vec![Value::int(min_cout), Value::num(value)])
+                })
+                .collect(),
+        )
+    }
+
+    fn from_value(id: &str, class: &str, which: &str, v: &Value) -> Result<Curve> {
+        let arr = v.as_arr().ok_or_else(|| {
+            invalid(id, format!("classes.{class}.{which} is not an array"))
+        })?;
+        let mut points = Vec::with_capacity(arr.len());
+        for p in arr {
+            let pair = p.as_arr().ok_or_else(|| {
+                invalid(id, format!("classes.{class}.{which} point is not a pair"))
+            })?;
+            if pair.len() != 2 {
+                return Err(invalid(
+                    id,
+                    format!("classes.{class}.{which} point is not a [min_cout, value] pair"),
+                ));
+            }
+            let min_cout = pair[0].as_usize().ok_or_else(|| {
+                invalid(id, format!("classes.{class}.{which} threshold is not an integer"))
+            })?;
+            let value = pair[1].as_f64().ok_or_else(|| {
+                invalid(id, format!("classes.{class}.{which} value is not a number"))
+            })?;
+            points.push((min_cout, value));
+        }
+        Ok(Curve { points })
+    }
+
+    fn validate(&self, id: &str, class: &str, which: &str) -> Result<()> {
+        if self.points.is_empty() {
+            return Err(invalid(id, format!("classes.{class}.{which} curve is empty")));
+        }
+        if self.points[0].0 != 0 {
+            return Err(invalid(
+                id,
+                format!("classes.{class}.{which} curve must start at min_cout 0"),
+            ));
+        }
+        for w in self.points.windows(2) {
+            if w[1].0 <= w[0].0 {
+                return Err(invalid(
+                    id,
+                    format!("classes.{class}.{which} thresholds must strictly ascend"),
+                ));
+            }
+        }
+        for &(_, value) in &self.points {
+            if !(value.is_finite() && value > 0.0) {
+                return Err(invalid(
+                    id,
+                    format!("classes.{class}.{which} values must be finite and positive"),
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Hidden per-class silicon behavior: dispatch overhead plus compute- and
+/// memory-efficiency curves.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClassSpec {
+    pub overhead_us: f64,
+    pub base_eff: Curve,
+    pub mem_eff: Curve,
+}
+
+/// Declarative on-chip parameter-buffer spill model (weight-stationary
+/// devices): units whose weights exceed `buffer_bytes` re-stream them from
+/// DRAM with an extra `mem_penalty ×` memory-time term.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SpillSpec {
+    pub buffer_bytes: f64,
+    pub mem_penalty: f64,
+}
+
+/// A complete declarative accelerator: everything [`SpecDevice`] needs to
+/// act as a benchmark target, including the hidden parts the estimation
+/// models are only allowed to learn through campaigns.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeviceSpec {
+    /// Registry id and artifact-directory slug ("dpu-zcu102").
+    pub id: String,
+    /// Architecture family ("dpu", "vpu", "tpu", "sa", "vec", …).
+    pub family: String,
+    /// Human-readable name (the paper's, where the paper evaluates it).
+    pub paper_name: String,
+    /// The public datasheet — the only part analytical models may read.
+    pub datasheet: Datasheet,
+    /// Multiplicative Gaussian measurement-noise sigma per run.
+    pub noise_sigma: f64,
+    /// Per-class behavior, indexed by [`LayerClass::index`].
+    pub classes: [ClassSpec; 6],
+    /// Pairwise fold capability: (producer class, consumer fusion key).
+    pub fusion: Vec<(LayerClass, String)>,
+    /// Multi-op chain capability: (producer class, exact consumer sequence).
+    pub chains: Vec<(LayerClass, Vec<String>)>,
+    /// Operators the device's compiler removes entirely (op names).
+    pub elide: Vec<String>,
+    /// Present on devices whose weights normally stay on-chip.
+    pub spill: Option<SpillSpec>,
+}
+
+fn invalid(id: &str, msg: String) -> Error {
+    if id.is_empty() {
+        Error::Invalid(format!("device spec: {msg}"))
+    } else {
+        Error::Invalid(format!("device spec `{id}`: {msg}"))
+    }
+}
+
+fn field<'a>(id: &str, v: &'a Value, key: &str) -> Result<&'a Value> {
+    v.get(key).ok_or_else(|| invalid(id, format!("missing field `{key}`")))
+}
+
+fn field_str(id: &str, v: &Value, key: &str) -> Result<String> {
+    field(id, v, key)?
+        .as_str()
+        .map(str::to_string)
+        .ok_or_else(|| invalid(id, format!("field `{key}` is not a string")))
+}
+
+fn field_f64(id: &str, v: &Value, key: &str) -> Result<f64> {
+    field(id, v, key)?
+        .as_f64()
+        .ok_or_else(|| invalid(id, format!("field `{key}` is not a number")))
+}
+
+fn field_usize(id: &str, v: &Value, key: &str) -> Result<usize> {
+    field(id, v, key)?
+        .as_usize()
+        .ok_or_else(|| invalid(id, format!("field `{key}` is not a non-negative integer")))
+}
+
+fn class_from_name(id: &str, name: &str) -> Result<LayerClass> {
+    match LayerClass::parse(name) {
+        Some(LayerClass::None) | None => {
+            Err(invalid(id, format!("unknown producer class `{name}`")))
+        }
+        Some(c) => Ok(c),
+    }
+}
+
+impl DeviceSpec {
+    /// Check every structural and numeric constraint of the format. All
+    /// violations are [`Error::Invalid`].
+    pub fn validate(&self) -> Result<()> {
+        let id = &self.id;
+        if id.is_empty() {
+            return Err(invalid("", "empty id".to_string()));
+        }
+        let ds = &self.datasheet;
+        if ds.name.is_empty() {
+            return Err(invalid(id, "empty datasheet name".to_string()));
+        }
+        for (key, value) in [
+            ("peak_gops", ds.peak_gops),
+            ("bandwidth_gbs", ds.bandwidth_gbs),
+            ("bytes_per_elem", ds.bytes_per_elem),
+        ] {
+            if !(value.is_finite() && value > 0.0) {
+                return Err(invalid(
+                    id,
+                    format!("datasheet.{key} must be finite and positive (got {value})"),
+                ));
+            }
+        }
+        for (key, value) in [
+            ("channel_align", ds.channel_align),
+            ("input_align", ds.input_align),
+            ("spatial_align", ds.spatial_align),
+        ] {
+            if value == 0 {
+                return Err(invalid(id, format!("datasheet.{key} must be at least 1")));
+            }
+        }
+        if !(self.noise_sigma.is_finite() && self.noise_sigma >= 0.0) {
+            return Err(invalid(
+                id,
+                format!("noise_sigma must be finite and non-negative (got {})", self.noise_sigma),
+            ));
+        }
+        for (ci, cls) in self.classes.iter().enumerate() {
+            let name = CLASS_NAMES[ci];
+            if !(cls.overhead_us.is_finite() && cls.overhead_us >= 0.0) {
+                return Err(invalid(
+                    id,
+                    format!("classes.{name}.overhead_us must be finite and non-negative"),
+                ));
+            }
+            cls.base_eff.validate(id, name, "base_eff")?;
+            cls.mem_eff.validate(id, name, "mem_eff")?;
+        }
+        for (producer, consumer) in &self.fusion {
+            if *producer == LayerClass::None {
+                return Err(invalid(id, "fusion producer class `none`".to_string()));
+            }
+            if consumer.is_empty() {
+                return Err(invalid(id, "empty fusion consumer".to_string()));
+            }
+        }
+        for (producer, consumers) in &self.chains {
+            if *producer == LayerClass::None {
+                return Err(invalid(id, "chain producer class `none`".to_string()));
+            }
+            if consumers.is_empty() || consumers.iter().any(String::is_empty) {
+                return Err(invalid(id, "chain with empty consumer list or name".to_string()));
+            }
+        }
+        if self.elide.iter().any(String::is_empty) {
+            return Err(invalid(id, "empty elide op name".to_string()));
+        }
+        if let Some(sp) = &self.spill {
+            if !(sp.buffer_bytes.is_finite() && sp.buffer_bytes > 0.0) {
+                return Err(invalid(
+                    id,
+                    "spill.buffer_bytes must be finite and positive".to_string(),
+                ));
+            }
+            if !(sp.mem_penalty.is_finite() && sp.mem_penalty >= 0.0) {
+                return Err(invalid(
+                    id,
+                    "spill.mem_penalty must be finite and non-negative".to_string(),
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Serialize as an `annette-device.v1` document.
+    pub fn to_value(&self) -> Value {
+        let classes = Value::Obj(
+            CLASS_NAMES
+                .iter()
+                .zip(&self.classes)
+                .map(|(name, cls)| {
+                    (
+                        name.to_string(),
+                        Value::Obj(vec![
+                            ("overhead_us".to_string(), Value::num(cls.overhead_us)),
+                            ("base_eff".to_string(), cls.base_eff.to_value()),
+                            ("mem_eff".to_string(), cls.mem_eff.to_value()),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        let fusion = Value::Arr(
+            self.fusion
+                .iter()
+                .map(|(p, c)| {
+                    Value::Obj(vec![
+                        ("producer".to_string(), Value::str(p.as_str())),
+                        ("consumer".to_string(), Value::str(c.clone())),
+                    ])
+                })
+                .collect(),
+        );
+        let chains = Value::Arr(
+            self.chains
+                .iter()
+                .map(|(p, cs)| {
+                    Value::Obj(vec![
+                        ("producer".to_string(), Value::str(p.as_str())),
+                        (
+                            "consumers".to_string(),
+                            Value::Arr(cs.iter().map(|c| Value::str(c.clone())).collect()),
+                        ),
+                    ])
+                })
+                .collect(),
+        );
+        let mut fields = vec![
+            ("format".to_string(), Value::str(FORMAT)),
+            ("id".to_string(), Value::str(self.id.clone())),
+            ("family".to_string(), Value::str(self.family.clone())),
+            ("paper_name".to_string(), Value::str(self.paper_name.clone())),
+            ("datasheet".to_string(), self.datasheet.to_value()),
+            ("noise_sigma".to_string(), Value::num(self.noise_sigma)),
+            ("classes".to_string(), classes),
+            ("fusion".to_string(), fusion),
+            ("chains".to_string(), chains),
+            (
+                "elide".to_string(),
+                Value::Arr(self.elide.iter().map(|op| Value::str(op.clone())).collect()),
+            ),
+        ];
+        if let Some(sp) = &self.spill {
+            fields.push((
+                "spill".to_string(),
+                Value::Obj(vec![
+                    ("buffer_bytes".to_string(), Value::num(sp.buffer_bytes)),
+                    ("mem_penalty".to_string(), Value::num(sp.mem_penalty)),
+                ]),
+            ));
+        }
+        Value::Obj(fields)
+    }
+
+    /// Parse and fully validate an `annette-device.v1` document. Every
+    /// schema or constraint violation is [`Error::Invalid`]; this never
+    /// panics, whatever the shape of `v`.
+    pub fn from_value(v: &Value) -> Result<DeviceSpec> {
+        // Best-effort id first, so every later error names the spec.
+        let id = v.get("id").and_then(Value::as_str).unwrap_or("").to_string();
+        let format = field_str(&id, v, "format")?;
+        if format != FORMAT {
+            return Err(invalid(
+                &id,
+                format!("unsupported format `{format}` (expected `{FORMAT}`)"),
+            ));
+        }
+        if id.is_empty() {
+            // Either absent or genuinely empty — re-check for a precise error.
+            field_str("", v, "id")?;
+            return Err(invalid("", "empty id".to_string()));
+        }
+        let family = field_str(&id, v, "family")?;
+        let paper_name = field_str(&id, v, "paper_name")?;
+        let dsv = field(&id, v, "datasheet")?;
+        let datasheet = Datasheet {
+            name: field_str(&id, dsv, "name")?,
+            peak_gops: field_f64(&id, dsv, "peak_gops")?,
+            bandwidth_gbs: field_f64(&id, dsv, "bandwidth_gbs")?,
+            bytes_per_elem: field_f64(&id, dsv, "bytes_per_elem")?,
+            channel_align: field_usize(&id, dsv, "channel_align")?,
+            input_align: field_usize(&id, dsv, "input_align")?,
+            spatial_align: field_usize(&id, dsv, "spatial_align")?,
+        };
+        let noise_sigma = field_f64(&id, v, "noise_sigma")?;
+        let cv = field(&id, v, "classes")?;
+        let mut classes = Vec::with_capacity(6);
+        for name in CLASS_NAMES {
+            let c = field(&id, cv, name)
+                .map_err(|_| invalid(&id, format!("classes is missing class `{name}`")))?;
+            classes.push(ClassSpec {
+                overhead_us: field_f64(&id, c, "overhead_us")?,
+                base_eff: Curve::from_value(&id, name, "base_eff", field(&id, c, "base_eff")?)?,
+                mem_eff: Curve::from_value(&id, name, "mem_eff", field(&id, c, "mem_eff")?)?,
+            });
+        }
+        let classes: [ClassSpec; 6] = match classes.try_into() {
+            Ok(a) => a,
+            Err(_) => unreachable!("exactly six classes were collected"),
+        };
+        let mut fusion = Vec::new();
+        for f in arr_field(&id, v, "fusion")? {
+            let producer = class_from_name(&id, &field_str(&id, f, "producer")?)?;
+            fusion.push((producer, field_str(&id, f, "consumer")?));
+        }
+        let mut chains = Vec::new();
+        for ch in arr_field(&id, v, "chains")? {
+            let producer = class_from_name(&id, &field_str(&id, ch, "producer")?)?;
+            let consumers = field(&id, ch, "consumers")?
+                .as_arr()
+                .ok_or_else(|| invalid(&id, "chain `consumers` is not an array".to_string()))?
+                .iter()
+                .map(|c| {
+                    c.as_str()
+                        .map(str::to_string)
+                        .ok_or_else(|| invalid(&id, "chain consumer is not a string".to_string()))
+                })
+                .collect::<Result<Vec<String>>>()?;
+            chains.push((producer, consumers));
+        }
+        let elide = field(&id, v, "elide")?
+            .as_arr()
+            .ok_or_else(|| invalid(&id, "field `elide` is not an array".to_string()))?
+            .iter()
+            .map(|op| {
+                op.as_str()
+                    .map(str::to_string)
+                    .ok_or_else(|| invalid(&id, "elide op is not a string".to_string()))
+            })
+            .collect::<Result<Vec<String>>>()?;
+        let spill = match v.get("spill") {
+            None | Some(Value::Null) => None,
+            Some(sp) => Some(SpillSpec {
+                buffer_bytes: field_f64(&id, sp, "buffer_bytes")?,
+                mem_penalty: field_f64(&id, sp, "mem_penalty")?,
+            }),
+        };
+        let spec = DeviceSpec {
+            id,
+            family,
+            paper_name,
+            datasheet,
+            noise_sigma,
+            classes,
+            fusion,
+            chains,
+            elide,
+            spill,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Load and validate a spec file ([`Error::Io`] on read failure,
+    /// [`Error::Json`] on malformed text, [`Error::Invalid`] on schema or
+    /// constraint violations).
+    pub fn load(path: impl AsRef<Path>) -> Result<DeviceSpec> {
+        let text = std::fs::read_to_string(path)?;
+        DeviceSpec::from_value(&Value::parse(&text)?)
+    }
+
+    /// Persist as pretty-enough single-line JSON.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        std::fs::write(path, self.to_value().to_string())?;
+        Ok(())
+    }
+}
+
+fn arr_field<'a>(id: &str, v: &'a Value, key: &str) -> Result<&'a [Value]> {
+    field(id, v, key)?
+        .as_arr()
+        .ok_or_else(|| invalid(id, format!("field `{key}` is not an array")))
+}
+
+/// One generic simulator realizing any valid [`DeviceSpec`]. With flat
+/// (single-point) efficiency curves its per-unit arithmetic is exactly the
+/// legacy `SimDevice` formula, term for term and in the same order, so the
+/// canonical specs reproduce the handwritten devices bit for bit.
+pub struct SpecDevice {
+    spec: DeviceSpec,
+    mapping: std::sync::OnceLock<MappingModel>,
+}
+
+impl SpecDevice {
+    /// Validate `spec` and realize it.
+    pub fn new(spec: DeviceSpec) -> Result<SpecDevice> {
+        spec.validate()?;
+        Ok(SpecDevice {
+            spec,
+            mapping: std::sync::OnceLock::new(),
+        })
+    }
+
+    /// The built-in (canonical or variant) spec registered under `id`,
+    /// realized. Panics on an unknown id — this is a convenience for tests,
+    /// examples, and benches, which name ids statically.
+    pub fn builtin(id: &str) -> SpecDevice {
+        let spec = canonical_specs()
+            .into_iter()
+            .chain(variant_specs())
+            .find(|s| s.id == id)
+            .unwrap_or_else(|| panic!("unknown built-in device spec `{id}`"));
+        SpecDevice::new(spec).expect("built-in specs are valid by construction")
+    }
+
+    /// The full declarative spec, hidden silicon behavior included.
+    pub fn full_spec(&self) -> &DeviceSpec {
+        &self.spec
+    }
+
+    /// The device's *hidden* mapping model — fusion pairs, chains, and
+    /// elisions from the spec, in rule order, applied through the same
+    /// [`crate::mapping::apply`] pass the estimation side uses.
+    fn mapping(&self) -> &MappingModel {
+        self.mapping.get_or_init(|| {
+            let mut rules: Vec<MappingRule> = self
+                .spec
+                .fusion
+                .iter()
+                .map(|(p, c)| MappingRule::Fuse {
+                    producer: p.as_str().to_string(),
+                    consumer: c.clone(),
+                })
+                .collect();
+            for (p, cs) in &self.spec.chains {
+                rules.push(MappingRule::Chain {
+                    producer: p.as_str().to_string(),
+                    consumers: cs.clone(),
+                });
+            }
+            for op in &self.spec.elide {
+                rules.push(MappingRule::Elide { op: op.clone() });
+            }
+            MappingModel { rules }
+        })
+    }
+
+    /// Noise-free unit latency in microseconds (the `SimDevice` formula with
+    /// curve-evaluated efficiencies).
+    fn unit_time_us(&self, lay: &crate::graph::Layer) -> f64 {
+        let class = lay.class();
+        if class == LayerClass::None {
+            return 0.0;
+        }
+        let ci = class.index();
+        let (cout, cin, wout) = lay.mapping_features();
+        let ds = &self.spec.datasheet;
+        let u = class_utils(
+            class,
+            cout,
+            cin,
+            wout,
+            ds.channel_align,
+            ds.input_align,
+            ds.spatial_align,
+        );
+        let compute = ds.ideal_compute_us(lay.flops());
+        let mem = ds.ideal_mem_us(ds.layer_bytes(lay));
+        let cls = &self.spec.classes[ci];
+        let mut t = cls.overhead_us
+            + compute / (cls.base_eff.eval(cout) * u)
+            + mem / cls.mem_eff.eval(cout);
+        if let Some(sp) = &self.spec.spill {
+            let wbytes = ds.bytes_per_elem * lay.weight_elems();
+            if wbytes > sp.buffer_bytes {
+                t += sp.mem_penalty * ds.ideal_mem_us(wbytes);
+            }
+        }
+        t
+    }
+}
+
+impl Device for SpecDevice {
+    fn spec(&self) -> Datasheet {
+        self.spec.datasheet.clone()
+    }
+
+    fn profile(&self, graph: &Graph, runs: usize, seed: u64) -> Profile {
+        let runs = runs.max(1);
+        let mapped = mapping::apply(self.mapping(), graph);
+        let mut layers = Vec::with_capacity(graph.layers.len());
+        for lay in &graph.layers {
+            let fused = mapped.is_fused(lay.id);
+            if fused || mapped.is_elided(lay.id) {
+                layers.push(LayerTiming {
+                    layer_id: lay.id,
+                    name: lay.name.clone(),
+                    ms: 0.0,
+                    fused_into: if fused { Some(mapped.root_of[lay.id]) } else { None },
+                });
+                continue;
+            }
+            let t = self.unit_time_us(lay);
+            let mut rng = Rng::new(seed.wrapping_add((lay.id as u64).wrapping_mul(PHI)));
+            let mut acc = 0.0;
+            for _ in 0..runs {
+                let m = t * (1.0 + self.spec.noise_sigma * rng.normal());
+                acc += m.max(0.2 * t);
+            }
+            layers.push(LayerTiming {
+                layer_id: lay.id,
+                name: lay.name.clone(),
+                ms: acc / runs as f64 / 1000.0,
+                fused_into: None,
+            });
+        }
+        Profile { layers }
+    }
+}
+
+fn classes_flat(overhead_us: [f64; 6], base_eff: [f64; 6], mem_eff: [f64; 6]) -> [ClassSpec; 6] {
+    std::array::from_fn(|i| ClassSpec {
+        overhead_us: overhead_us[i],
+        base_eff: Curve::flat(base_eff[i]),
+        mem_eff: Curve::flat(mem_eff[i]),
+    })
+}
+
+fn pairs(list: &[(LayerClass, &str)]) -> Vec<(LayerClass, String)> {
+    list.iter().map(|&(p, c)| (p, c.to_string())).collect()
+}
+
+/// The ZCU102 DPU as a spec: the exact constants of the retired handwritten
+/// simulator (`DpuDevice::zcu102`), flat curves, no spill.
+pub fn dpu_zcu102() -> DeviceSpec {
+    DeviceSpec {
+        id: "dpu-zcu102".to_string(),
+        family: "dpu".to_string(),
+        paper_name: "ZCU102 DPU (DNNDK)".to_string(),
+        datasheet: Datasheet {
+            name: "ZCU102-DPU-sim".to_string(),
+            peak_gops: 2400.0,
+            bandwidth_gbs: 19.2,
+            bytes_per_elem: 1.0,
+            channel_align: 16,
+            input_align: 16,
+            spatial_align: 8,
+        },
+        noise_sigma: 0.01,
+        // Order: [conv, dwconv, pool, fc, elem, mem]
+        classes: classes_flat(
+            [35.0, 35.0, 25.0, 30.0, 18.0, 12.0],
+            [0.82, 0.30, 0.55, 0.60, 0.35, 0.90],
+            [0.60, 0.50, 0.85, 0.80, 0.85, 0.90],
+        ),
+        fusion: pairs(&[
+            (LayerClass::Conv, "batchnorm"),
+            (LayerClass::Conv, "act"),
+            (LayerClass::DwConv, "batchnorm"),
+            (LayerClass::DwConv, "act"),
+            (LayerClass::Fc, "batchnorm"),
+            (LayerClass::Fc, "act"),
+            (LayerClass::Elem, "act"),
+        ]),
+        chains: Vec::new(),
+        elide: vec!["flatten".to_string()],
+        spill: None,
+    }
+}
+
+/// The NCS2 VPU as a spec: the exact constants of `VpuDevice::ncs2`.
+pub fn vpu_ncs2() -> DeviceSpec {
+    DeviceSpec {
+        id: "vpu-ncs2".to_string(),
+        family: "vpu".to_string(),
+        paper_name: "Intel NCS2 (Myriad X VPU)".to_string(),
+        datasheet: Datasheet {
+            name: "NCS2-VPU-sim".to_string(),
+            peak_gops: 1000.0,
+            bandwidth_gbs: 10.0,
+            bytes_per_elem: 2.0,
+            channel_align: 8,
+            input_align: 1,
+            spatial_align: 4,
+        },
+        noise_sigma: 0.015,
+        classes: classes_flat(
+            [150.0, 140.0, 90.0, 110.0, 60.0, 40.0],
+            [0.65, 0.50, 0.50, 0.55, 0.40, 0.85],
+            [0.70, 0.55, 0.80, 0.85, 0.80, 0.90],
+        ),
+        fusion: pairs(&[
+            (LayerClass::Conv, "batchnorm"),
+            (LayerClass::Conv, "act"),
+            (LayerClass::DwConv, "batchnorm"),
+            (LayerClass::DwConv, "act"),
+            (LayerClass::Fc, "act"),
+        ]),
+        chains: Vec::new(),
+        elide: vec!["flatten".to_string()],
+        spill: None,
+    }
+}
+
+/// Bytes of on-chip parameter buffer before the Edge-TPU spec spills
+/// weights to DRAM.
+pub const TPU_BUFFER_BYTES: f64 = 8.0 * 1024.0 * 1024.0;
+
+/// The Edge-TPU-class systolic array as a spec: the exact constants of
+/// `TpuDevice::edge`, including the 8 MiB spill model.
+pub fn tpu_edge() -> DeviceSpec {
+    DeviceSpec {
+        id: "tpu-edge".to_string(),
+        family: "tpu".to_string(),
+        paper_name: "Edge-TPU-class systolic array".to_string(),
+        datasheet: Datasheet {
+            name: "EdgeTPU-SA-sim".to_string(),
+            peak_gops: 4000.0,
+            bandwidth_gbs: 25.6,
+            bytes_per_elem: 1.0,
+            channel_align: 64,
+            input_align: 64,
+            spatial_align: 1,
+        },
+        noise_sigma: 0.008,
+        classes: classes_flat(
+            [15.0, 20.0, 12.0, 14.0, 8.0, 6.0],
+            [0.92, 0.12, 0.40, 0.70, 0.25, 0.85],
+            [0.78, 0.50, 0.80, 0.85, 0.75, 0.92],
+        ),
+        fusion: pairs(&[
+            (LayerClass::Conv, "batchnorm"),
+            (LayerClass::Conv, "act"),
+            (LayerClass::DwConv, "batchnorm"),
+            (LayerClass::DwConv, "act"),
+            (LayerClass::Fc, "batchnorm"),
+            (LayerClass::Fc, "act"),
+        ]),
+        chains: Vec::new(),
+        elide: vec!["flatten".to_string()],
+        spill: Some(SpillSpec {
+            buffer_bytes: TPU_BUFFER_BYTES,
+            mem_penalty: 3.0,
+        }),
+    }
+}
+
+/// The three paper devices, in canonical fleet order.
+pub fn canonical_specs() -> Vec<DeviceSpec> {
+    vec![dpu_zcu102(), vpu_ncs2(), tpu_edge()]
+}
+
+/// A synthetic weight-stationary systolic array: dwconv-hostile, stepped
+/// conv efficiency (the array only fills up at wide channel counts), int8.
+fn systolic_variant(array: usize, id: &str, bandwidth_gbs: f64, spill: bool) -> DeviceSpec {
+    let a = array as f64;
+    let mut spec = DeviceSpec {
+        id: id.to_string(),
+        family: "sa".to_string(),
+        paper_name: format!("Synthetic {array}x{array} systolic array, {bandwidth_gbs} GB/s"),
+        datasheet: Datasheet {
+            name: format!("{id}-sim"),
+            peak_gops: 4800.0 * (a * a) / (64.0 * 64.0),
+            bandwidth_gbs,
+            bytes_per_elem: 1.0,
+            channel_align: array,
+            input_align: array,
+            spatial_align: 1,
+        },
+        noise_sigma: 0.008,
+        classes: classes_flat(
+            [12.0 + a / 8.0, 18.0 + a / 8.0, 12.0, 14.0, 8.0, 6.0],
+            [0.70, 0.10, 0.40, 0.70, 0.25, 0.85],
+            [0.78, 0.50, 0.80, 0.85, 0.75, 0.92],
+        ),
+        fusion: pairs(&[
+            (LayerClass::Conv, "batchnorm"),
+            (LayerClass::Conv, "act"),
+            (LayerClass::DwConv, "batchnorm"),
+            (LayerClass::DwConv, "act"),
+            (LayerClass::Fc, "batchnorm"),
+            (LayerClass::Fc, "act"),
+        ]),
+        chains: Vec::new(),
+        elide: vec!["flatten".to_string()],
+        spill: spill.then_some(SpillSpec {
+            buffer_bytes: TPU_BUFFER_BYTES,
+            mem_penalty: 3.0,
+        }),
+    };
+    // The array only reaches peak conv efficiency once the output channels
+    // cover it — a stepped utilization cliff on top of the alignment one.
+    spec.classes[0].base_eff = Curve {
+        points: vec![(0, 0.70), (array / 2, 0.85), (array, 0.93)],
+    };
+    spec
+}
+
+/// A synthetic SHAVE-style fp16 vector device: dwconv-friendly, high
+/// dispatch overhead, no spill.
+fn vector_variant(align: usize, id: &str, bandwidth_gbs: f64) -> DeviceSpec {
+    let mut spec = DeviceSpec {
+        id: id.to_string(),
+        family: "vec".to_string(),
+        paper_name: format!("Synthetic {align}-wide vector unit, {bandwidth_gbs} GB/s"),
+        datasheet: Datasheet {
+            name: format!("{id}-sim"),
+            peak_gops: 125.0 * align as f64,
+            bandwidth_gbs,
+            bytes_per_elem: 2.0,
+            channel_align: align,
+            input_align: 1,
+            spatial_align: 4,
+        },
+        noise_sigma: 0.012,
+        classes: classes_flat(
+            [120.0, 115.0, 80.0, 95.0, 55.0, 35.0],
+            [0.55, 0.52, 0.50, 0.55, 0.40, 0.85],
+            [0.70, 0.60, 0.80, 0.85, 0.80, 0.90],
+        ),
+        fusion: pairs(&[
+            (LayerClass::Conv, "batchnorm"),
+            (LayerClass::Conv, "act"),
+            (LayerClass::DwConv, "batchnorm"),
+            (LayerClass::DwConv, "act"),
+            (LayerClass::Fc, "act"),
+        ]),
+        chains: Vec::new(),
+        elide: vec!["flatten".to_string()],
+        spill: None,
+    };
+    spec.classes[0].base_eff = Curve {
+        points: vec![(0, 0.55), (align, 0.68)],
+    };
+    spec
+}
+
+/// A synthetic DPU-style int8 device at a different array width.
+fn dpu_variant(align: usize, id: &str, peak_gops: f64, bandwidth_gbs: f64) -> DeviceSpec {
+    DeviceSpec {
+        id: id.to_string(),
+        family: "dpu".to_string(),
+        paper_name: format!("Synthetic {align}x{align} DPU, {bandwidth_gbs} GB/s"),
+        datasheet: Datasheet {
+            name: format!("{id}-sim"),
+            peak_gops,
+            bandwidth_gbs,
+            bytes_per_elem: 1.0,
+            channel_align: align,
+            input_align: align,
+            spatial_align: 8,
+        },
+        noise_sigma: 0.01,
+        classes: classes_flat(
+            [35.0, 35.0, 25.0, 30.0, 18.0, 12.0],
+            [0.82, 0.30, 0.55, 0.60, 0.35, 0.90],
+            [0.60, 0.50, 0.85, 0.80, 0.85, 0.90],
+        ),
+        fusion: pairs(&[
+            (LayerClass::Conv, "batchnorm"),
+            (LayerClass::Conv, "act"),
+            (LayerClass::DwConv, "batchnorm"),
+            (LayerClass::DwConv, "act"),
+            (LayerClass::Fc, "batchnorm"),
+            (LayerClass::Fc, "act"),
+            (LayerClass::Elem, "act"),
+        ]),
+        chains: Vec::new(),
+        elide: vec!["flatten".to_string()],
+        spill: None,
+    }
+}
+
+/// Twenty synthetic spec variants sweeping array width (32/64/128),
+/// bandwidth, spill on/off, and depthwise friendliness — the fleet-scale
+/// workload for `Fleet::fit_all`, latency matrices, and explore.
+pub fn variant_specs() -> Vec<DeviceSpec> {
+    let mut out = Vec::new();
+    for &array in &[32usize, 64, 128] {
+        for &(tag, bw) in &[("bw12", 12.8), ("bw25", 25.6), ("bw51", 51.2)] {
+            out.push(systolic_variant(array, &format!("sa{array}-{tag}"), bw, true));
+        }
+        out.push(systolic_variant(array, &format!("sa{array}-nospill"), 25.6, false));
+    }
+    for &(align, tag, bw) in &[
+        (8usize, "bw10", 10.0),
+        (8, "bw20", 20.0),
+        (16, "bw20", 20.0),
+        (16, "bw40", 40.0),
+        (32, "bw40", 40.0),
+    ] {
+        out.push(vector_variant(align, &format!("vec{align}-{tag}"), bw));
+    }
+    out.push(dpu_variant(8, "dpu8-bw9", 600.0, 9.6));
+    out.push(dpu_variant(16, "dpu16-bw28", 3600.0, 28.8));
+    out.push(dpu_variant(32, "dpu32-bw38", 9600.0, 38.4));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    fn net() -> Graph {
+        let mut b = GraphBuilder::new("t");
+        let i = b.input(28, 28, 16);
+        let x = b.conv_bn_relu(i, 32, 3, 1);
+        b.classifier(x, 10);
+        b.finish().unwrap()
+    }
+
+    #[test]
+    fn curves_evaluate_as_step_functions() {
+        let c = Curve {
+            points: vec![(0, 0.5), (16, 0.8), (64, 0.95)],
+        };
+        assert_eq!(c.eval(0), 0.5);
+        assert_eq!(c.eval(15), 0.5);
+        assert_eq!(c.eval(16), 0.8);
+        assert_eq!(c.eval(63), 0.8);
+        assert_eq!(c.eval(64), 0.95);
+        assert_eq!(c.eval(10_000), 0.95);
+        assert_eq!(Curve::flat(0.3).eval(7), 0.3);
+    }
+
+    #[test]
+    fn builtin_specs_validate_and_round_trip() {
+        for spec in canonical_specs().into_iter().chain(variant_specs()) {
+            spec.validate().unwrap_or_else(|e| panic!("{}: {e}", spec.id));
+            let back = DeviceSpec::from_value(&spec.to_value())
+                .unwrap_or_else(|e| panic!("{}: round trip failed: {e}", spec.id));
+            assert_eq!(back, spec, "{} drifted across serialization", spec.id);
+        }
+        assert_eq!(variant_specs().len(), 20);
+    }
+
+    #[test]
+    fn spec_profiles_are_deterministic() {
+        let dev = SpecDevice::builtin("dpu-zcu102");
+        let a = dev.profile(&net(), 5, 99).total_ms();
+        let b = dev.profile(&net(), 5, 99).total_ms();
+        assert_eq!(a.to_bits(), b.to_bits());
+        let c = dev.profile(&net(), 5, 100).total_ms();
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn fused_layers_cost_nothing() {
+        let dev = SpecDevice::builtin("tpu-edge");
+        let p = dev.profile(&net(), 3, 0);
+        // bn (2) and relu (3) fold into the conv (1).
+        assert_eq!(p.layers[2].ms, 0.0);
+        assert_eq!(p.layers[2].fused_into, Some(1));
+        assert_eq!(p.layers[3].fused_into, Some(1));
+        assert!(p.layers[1].ms > 0.0);
+    }
+
+    #[test]
+    fn stepped_curves_change_wide_layer_latency() {
+        // sa64 rewards 64-channel convs with a higher efficiency step than
+        // 32-channel ones; the flat-curve arithmetic would scale linearly.
+        let dev = SpecDevice::builtin("sa64-bw25");
+        let narrow = {
+            let mut b = GraphBuilder::new("narrow");
+            let i = b.input(14, 14, 64);
+            b.conv(i, 32, 3, 1);
+            b.finish().unwrap()
+        };
+        let wide = {
+            let mut b = GraphBuilder::new("wide");
+            let i = b.input(14, 14, 64);
+            b.conv(i, 64, 3, 1);
+            b.finish().unwrap()
+        };
+        let t_narrow = dev.profile(&narrow, 1, 7).total_ms();
+        let t_wide = dev.profile(&wide, 1, 7).total_ms();
+        // Twice the flops at 0.85→0.93 efficiency and a full-width array:
+        // the wide conv must cost less than 2× the narrow one.
+        assert!(t_wide < 2.0 * t_narrow, "wide {t_wide} vs narrow {t_narrow}");
+    }
+
+    #[test]
+    fn invalid_specs_are_rejected_with_invalid_kind() {
+        let mut nan = dpu_zcu102();
+        nan.noise_sigma = f64::NAN;
+        let mut negative = dpu_zcu102();
+        negative.datasheet.peak_gops = -1.0;
+        let mut empty_curve = dpu_zcu102();
+        empty_curve.classes[0].base_eff = Curve { points: Vec::new() };
+        let mut unsorted = dpu_zcu102();
+        unsorted.classes[1].mem_eff = Curve {
+            points: vec![(0, 0.5), (8, 0.6), (8, 0.7)],
+        };
+        let mut zero_align = dpu_zcu102();
+        zero_align.datasheet.channel_align = 0;
+        let mut no_id = dpu_zcu102();
+        no_id.id.clear();
+        for (what, spec) in [
+            ("nan sigma", nan),
+            ("negative peak", negative),
+            ("empty curve", empty_curve),
+            ("unsorted curve", unsorted),
+            ("zero align", zero_align),
+            ("empty id", no_id),
+        ] {
+            let err = spec.validate().expect_err(what);
+            assert_eq!(err.kind(), "invalid", "{what}: wrong kind: {err}");
+            assert!(SpecDevice::new(spec.clone()).is_err(), "{what}: SpecDevice accepted it");
+        }
+    }
+
+    #[test]
+    fn from_value_rejects_malformed_documents_with_invalid_kind() {
+        let good = dpu_zcu102().to_value().to_string();
+        for (what, text) in [
+            ("bumped format", good.replace("annette-device.v1", "annette-device.v9")),
+            ("missing class", good.replace("\"pool\"", "\"poodle\"")),
+            ("string peak", good.replace("\"peak_gops\":2400", "\"peak_gops\":\"fast\"")),
+            ("unknown producer", good.replace("\"producer\":\"conv\"", "\"producer\":\"warp\"")),
+        ] {
+            let v = Value::parse(&text).expect(what);
+            let err = DeviceSpec::from_value(&v).expect_err(what);
+            assert_eq!(err.kind(), "invalid", "{what}: wrong kind: {err}");
+        }
+    }
+
+    #[test]
+    fn spec_files_load_and_save() {
+        let dir = std::env::temp_dir().join("annette-spec-io-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("tpu.json");
+        tpu_edge().save(&path).unwrap();
+        let back = DeviceSpec::load(&path).unwrap();
+        assert_eq!(back, tpu_edge());
+        assert!(DeviceSpec::load(dir.join("absent.json")).is_err());
+    }
+}

@@ -8,8 +8,12 @@
 //!
 //! 1. **Benchmark phase** — [`coordinator::orchestrator::run_campaign`]
 //!    sweeps micro-kernel and multi-layer benchmarks on a [`hw::Device`]
-//!    resolved through the [`hw::registry`] (simulated ZCU102 DPU, NCS2
-//!    VPU, and an Edge-TPU-class systolic array), and
+//!    resolved through the [`hw::registry`]. Devices are **data**: a
+//!    declarative [`hw::spec::DeviceSpec`] (`annette-device.v1`) realized
+//!    by the generic [`hw::spec::SpecDevice`] simulator — the canonical
+//!    ZCU102 DPU, NCS2 VPU, and Edge-TPU-class systolic array ship as
+//!    specs alongside twenty synthetic variants, and `ANNETTE_DEVICE_DIR`
+//!    adds user spec files to the fleet. Then
 //!    [`models::PlatformModel::fit`] generates the stacked platform model:
 //!    a [`mapping::MappingModel`] of graph-rewrite rules (pairwise fusion,
 //!    multi-op chains, elision — learned from dedicated probes) plus
@@ -93,11 +97,9 @@ pub mod prelude {
     };
     pub use crate::fleet::{DeviceLatency, Fleet, FleetMember};
     pub use crate::graph::{Graph, GraphBuilder, Layer, LayerClass, LayerKind, Shape};
-    pub use crate::hw::device::{Device, DeviceSpec, Profile};
-    pub use crate::hw::dpu::DpuDevice;
+    pub use crate::hw::device::{Datasheet, Device, Profile};
     pub use crate::hw::registry::{self, DeviceEntry};
-    pub use crate::hw::tpu::TpuDevice;
-    pub use crate::hw::vpu::VpuDevice;
+    pub use crate::hw::spec::{DeviceSpec, SpecDevice};
     pub use crate::mapping::{MappedGraph, MappedUnit, MappingModel, MappingRule};
     pub use crate::metrics::{mae, mape, mape_defined, spearman_rho};
     pub use crate::models::layer::ModelKind;

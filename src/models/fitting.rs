@@ -14,7 +14,7 @@
 //! mixed families.
 
 use crate::graph::LayerClass;
-use crate::hw::device::{class_utils, DeviceSpec};
+use crate::hw::device::{class_utils, Datasheet};
 
 use crate::coordinator::orchestrator::MicroRecord;
 
@@ -166,7 +166,7 @@ fn align_grid(class: LayerClass) -> Vec<(usize, usize, usize)> {
 }
 
 /// Fit one layer class from its micro-kernel records.
-pub fn fit_class(spec: &DeviceSpec, records: &[&MicroRecord], class_name: &str) -> ClassModel {
+pub fn fit_class(spec: &Datasheet, records: &[&MicroRecord], class_name: &str) -> ClassModel {
     let class = class_of(class_name);
     let ys: Vec<f64> = records.iter().map(|r| r.us).collect();
     let raw: Vec<[f64; 3]> = records

@@ -8,7 +8,7 @@ use std::path::Path;
 use crate::coordinator::orchestrator::BenchData;
 use crate::error::{Error, Result};
 use crate::graph::{LayerClass, LayerKind};
-use crate::hw::device::DeviceSpec;
+use crate::hw::device::Datasheet;
 use crate::json::Value;
 use crate::mapping::{MappingModel, MappingRule};
 use crate::models::fitting::{fit_class, ClassModel};
@@ -22,7 +22,7 @@ pub const FORMAT_V1: &str = "annette-model.v1";
 /// A fitted platform model for one device.
 #[derive(Clone, Debug)]
 pub struct PlatformModel {
-    pub spec: DeviceSpec,
+    pub spec: Datasheet,
     /// The learned mapping model: graph-rewrite rules
     /// ([`crate::mapping::apply`] consumes them) extracted from the
     /// campaign's pairwise, chain, and elision probes.
@@ -36,7 +36,7 @@ impl PlatformModel {
     /// generator): group micro records per class, fit mapping + layer models,
     /// and adopt the rewrite rules the probes discovered — pairwise fusion
     /// first (the degenerate table), then multi-op chains, then elisions.
-    pub fn fit(spec: &DeviceSpec, data: &BenchData) -> PlatformModel {
+    pub fn fit(spec: &Datasheet, data: &BenchData) -> PlatformModel {
         let mut class_names: Vec<&str> = Vec::new();
         for r in &data.micro.records {
             if !class_names.contains(&r.class.as_str()) {
@@ -159,7 +159,7 @@ impl PlatformModel {
                 )))
             }
         };
-        let spec = DeviceSpec::from_value(v.req("spec")?)?;
+        let spec = Datasheet::from_value(v.req("spec")?)?;
         let mut classes = Vec::new();
         for cv in v.req_arr("classes")? {
             let coeffs = |key: &str| -> Result<[f64; 3]> {
@@ -207,11 +207,11 @@ mod tests {
     use super::*;
     use crate::coordinator::orchestrator::run_campaign;
     use crate::hw::device::Device;
-    use crate::hw::dpu::DpuDevice;
+    use crate::hw::spec::SpecDevice;
 
     #[test]
     fn fit_detects_dpu_alignment_and_fusion() {
-        let dev = DpuDevice::zcu102();
+        let dev = SpecDevice::builtin("dpu-zcu102");
         let data = run_campaign(&dev, 3, 4);
         let model = PlatformModel::fit(&dev.spec(), &data);
         let conv = model.class_model(LayerClass::Conv).expect("conv model");
@@ -240,7 +240,7 @@ mod tests {
 
     #[test]
     fn model_json_roundtrip_preserves_coefficients() {
-        let dev = DpuDevice::zcu102();
+        let dev = SpecDevice::builtin("dpu-zcu102");
         let data = run_campaign(&dev, 2, 4);
         let model = PlatformModel::fit(&dev.spec(), &data);
         let back = PlatformModel::from_value(&model.to_value()).unwrap();

@@ -28,7 +28,7 @@ pub fn fit_device(
     out_dir: Option<&Path>,
 ) -> Result<FittedDevice> {
     let entry = registry::get_or_err(device_id)?;
-    let device = (entry.build)();
+    let device = entry.build();
     let bench = run_campaign(device.as_ref(), runs, default_threads());
     let model = PlatformModel::fit(&device.spec(), &bench);
     if let Some(dir) = out_dir {

@@ -8,8 +8,7 @@ use annette::coordinator::orchestrator::run_campaign;
 use annette::estim::estimator::Estimator;
 use annette::graph::Graph;
 use annette::hw::device::Device;
-use annette::hw::dpu::DpuDevice;
-use annette::hw::vpu::VpuDevice;
+use annette::hw::spec::SpecDevice;
 use annette::models::layer::ModelKind;
 use annette::models::platform::PlatformModel;
 use annette::zoo;
@@ -65,7 +64,7 @@ fn check_equivalence(model: &PlatformModel, nets: &[Graph]) {
 
 #[test]
 fn compiled_path_is_bit_exact_on_dpu() {
-    let dev = DpuDevice::zcu102();
+    let dev = SpecDevice::builtin("dpu-zcu102");
     let data = run_campaign(&dev, 2, 4);
     let model = PlatformModel::fit(&dev.spec(), &data);
     let mut nets: Vec<Graph> = zoo::table2().into_iter().map(|e| e.graph).collect();
@@ -75,7 +74,7 @@ fn compiled_path_is_bit_exact_on_dpu() {
 
 #[test]
 fn compiled_path_is_bit_exact_on_vpu() {
-    let dev = VpuDevice::ncs2();
+    let dev = SpecDevice::builtin("vpu-ncs2");
     let data = run_campaign(&dev, 2, 4);
     let model = PlatformModel::fit(&dev.spec(), &data);
     let nets = zoo::nasbench::sample_networks(24, 7);
@@ -86,7 +85,7 @@ fn compiled_path_is_bit_exact_on_vpu() {
 fn relabeled_graphs_share_compilation_but_keep_their_names() {
     // Layer labels are excluded from the structural fingerprint; a relabeled
     // copy must hit the same cache slot yet report its own unit names.
-    let dev = DpuDevice::zcu102();
+    let dev = SpecDevice::builtin("dpu-zcu102");
     let data = run_campaign(&dev, 1, 4);
     let model = PlatformModel::fit(&dev.spec(), &data);
     let est = Estimator::new(&model);
@@ -110,7 +109,7 @@ fn relabeled_graphs_share_compilation_but_keep_their_names() {
 fn cache_survives_interleaved_distinct_graphs() {
     // Alternating estimates over many distinct graphs must keep returning
     // the right compilation for each (fingerprint keying, not last-seen).
-    let dev = DpuDevice::zcu102();
+    let dev = SpecDevice::builtin("dpu-zcu102");
     let data = run_campaign(&dev, 1, 4);
     let model = PlatformModel::fit(&dev.spec(), &data);
     let est = Estimator::new(&model);

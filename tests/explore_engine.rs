@@ -1,7 +1,7 @@
 //! Integration tests for the design-space exploration engine: seeded
 //! reproducibility of the NASBench sampler (the foundation the explorer's
 //! determinism rests on), determinism of `Explorer::run` itself, and budget
-//! feasibility of the returned fronts on all three registry devices.
+//! feasibility of the returned fronts on the canonical registry devices.
 
 use annette::coordinator::orchestrator::run_campaign;
 use annette::explore::{dominates, CostProxy, ExploreConfig, Explorer, NasBenchSpace, SearchSpace};
@@ -96,10 +96,13 @@ fn explorer_run_is_deterministic_under_a_fixed_seed() {
 }
 
 #[test]
-fn fronts_respect_budgets_on_every_registry_device() {
-    let fleet = Fleet::fit_all(1).unwrap();
+fn fronts_respect_budgets_on_every_canonical_device() {
+    // Canonical trio only: fitting the full 20-variant registry here would
+    // dominate the suite's runtime and is covered by tests/fleet_scale.rs.
+    let ids: Vec<&str> = registry::canonical().iter().map(|e| e.id).collect();
+    let fleet = Fleet::fit(&ids, 1).unwrap();
     let explorer = Explorer::for_fleet(NasBenchSpace, &fleet);
-    assert_eq!(explorer.targets(), registry::ids());
+    assert_eq!(explorer.targets(), ids);
     assert_eq!(explorer.space().name(), "nasbench");
 
     // First pass without budgets establishes what latencies are reachable.
@@ -111,7 +114,7 @@ fn fronts_respect_budgets_on_every_registry_device() {
         ..ExploreConfig::default()
     };
     let free = explorer.run(&cfg).unwrap();
-    assert_eq!(free.per_device.len(), 3);
+    assert_eq!(free.per_device.len(), ids.len());
 
     // Anchor the budgets to one concrete candidate — the best worst-case
     // member of the unconstrained robust front — at twice its per-device
@@ -169,7 +172,7 @@ fn fronts_respect_budgets_on_every_registry_device() {
     // An unmeetable budget (nothing runs in a femtosecond) empties every
     // front instead of erroring: infeasibility is an answer, not a failure.
     let impossible: Vec<(String, f64)> =
-        registry::ids().iter().map(|id| (id.to_string(), 1e-12)).collect();
+        ids.iter().map(|id| (id.to_string(), 1e-12)).collect();
     let empty = explorer
         .run(&ExploreConfig { budgets_ms: impossible, ..cfg })
         .unwrap();

@@ -1,0 +1,172 @@
+//! Fleet-scale integration tests: the registry's full spec-defined fleet
+//! (3 canonical devices + ≥20 synthetic variants) flows through
+//! `Fleet::fit_all`, latency matrices, best-device selection, the fleet
+//! service, and the explore op — deterministically, whatever the thread
+//! count. The expensive part (benchmarking and fitting every registered
+//! device) runs once per process through a shared fixture.
+
+use std::sync::OnceLock;
+
+use annette::fleet::Fleet;
+use annette::graph::serial::graph_to_value;
+use annette::graph::Graph;
+use annette::hw::registry;
+use annette::json::Value;
+use annette::models::layer::ModelKind;
+use annette::zoo;
+
+static FLEET: OnceLock<Fleet> = OnceLock::new();
+
+/// Every registered device, benchmarked and fitted once per test process.
+fn fleet() -> &'static Fleet {
+    FLEET.get_or_init(|| Fleet::fit_all(1).expect("fleet-wide campaign"))
+}
+
+/// A small mixed workload: two zoo networks plus a NASBench sample.
+fn nets() -> Vec<Graph> {
+    let mut nets: Vec<Graph> = zoo::table2()
+        .into_iter()
+        .take(2)
+        .map(|e| e.graph)
+        .collect();
+    nets.extend(zoo::nasbench::sample_networks(5, 42));
+    nets
+}
+
+#[test]
+fn fit_all_covers_every_registered_spec_device() {
+    let fleet = fleet();
+    assert!(fleet.len() >= 23, "fleet shrank to {} devices", fleet.len());
+    assert_eq!(fleet.ids(), registry::ids());
+    let variants = fleet
+        .ids()
+        .iter()
+        .filter(|id| registry::get(id).unwrap().origin == registry::Origin::Variant)
+        .count();
+    assert!(variants >= 20, "only {variants} spec variants in the fleet");
+    // Every member carries a model fitted from its own campaign.
+    for m in fleet.members() {
+        assert_eq!(m.bench.device, m.device.spec().name, "{}", m.entry.id);
+        assert!(!m.model.classes.is_empty(), "{}: empty model", m.entry.id);
+    }
+}
+
+#[test]
+fn latency_matrix_has_fleet_shape_and_is_thread_count_invariant() {
+    let fleet = fleet();
+    let nets = nets();
+    let serial = fleet.latency_matrix(&nets, ModelKind::Mixed, 1);
+    assert_eq!(serial.len(), nets.len());
+    for (g, row) in nets.iter().zip(&serial) {
+        assert_eq!(row.len(), fleet.len(), "{}: one column per device", g.name);
+        for (id, ms) in fleet.ids().iter().zip(row) {
+            assert!(ms.is_finite() && *ms > 0.0, "{} on {id}: {ms}");
+        }
+    }
+    for threads in [3usize, 8, 16] {
+        let par = fleet.latency_matrix(&nets, ModelKind::Mixed, threads);
+        for (a, b) in serial.iter().zip(&par) {
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.to_bits(), y.to_bits(), "threads={threads}");
+            }
+        }
+    }
+}
+
+#[test]
+fn best_device_is_the_argmin_of_estimate_on_all() {
+    let fleet = fleet();
+    for g in &nets() {
+        let all = fleet.estimate_on_all(g, ModelKind::Mixed);
+        assert_eq!(all.len(), fleet.len());
+        let best = fleet.best_device(g, ModelKind::Mixed);
+        let min = all.iter().map(|d| d.total_ms).fold(f64::INFINITY, f64::min);
+        assert_eq!(best.total_ms.to_bits(), min.to_bits(), "{}", g.name);
+        // First-wins tie break: the reported device is the first at the min.
+        let first = all.iter().find(|d| d.total_ms.to_bits() == min.to_bits()).unwrap();
+        assert_eq!(best.device, first.device, "{}", g.name);
+    }
+}
+
+#[test]
+fn service_models_op_lists_every_device_id() {
+    let svc = fleet().to_service();
+    let resp = Value::parse(&svc.handle(r#"{"op":"models"}"#)).unwrap();
+    assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(true));
+    let devices: Vec<&str> = resp
+        .req_arr("devices")
+        .unwrap()
+        .iter()
+        .map(|v| v.as_str().unwrap())
+        .collect();
+    assert_eq!(devices, registry::ids(), "served devices must be the whole registry");
+    assert_eq!(resp.req_str("device").unwrap(), "dpu-zcu102", "default device");
+}
+
+#[test]
+fn estimate_batch_round_trips_through_the_fleet_service() {
+    let fleet = fleet();
+    let svc = fleet.to_service();
+    let nets = nets();
+    let docs: Vec<String> = nets.iter().map(|g| graph_to_value(g).to_string()).collect();
+    // Fleet-routed batch: one request, per-device totals for every entry —
+    // well under the ESTIMATE_BATCH_MAX cap.
+    let req = format!(
+        r#"{{"op":"estimate_batch","kind":"mixed","fleet":true,"graphs":[{}]}}"#,
+        docs.join(",")
+    );
+    let resp = Value::parse(&svc.handle(&req)).unwrap();
+    assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(true));
+    assert_eq!(resp.req_usize("count").unwrap(), nets.len());
+    let results = resp.req_arr("results").unwrap();
+    assert_eq!(results.len(), nets.len());
+    for (g, entry) in nets.iter().zip(results) {
+        let per_device = entry.req_arr("fleet").unwrap();
+        assert_eq!(per_device.len(), fleet.len(), "{}", g.name);
+        // The wire answer equals the library answer bit for bit, device by
+        // device, and `best` is the same first-wins argmin.
+        let lib = fleet.estimate_on_all(g, ModelKind::Mixed);
+        for (wire, lat) in per_device.iter().zip(&lib) {
+            assert_eq!(wire.req_str("device").unwrap(), lat.device, "{}", g.name);
+            assert_eq!(
+                wire.req_f64("total_ms").unwrap().to_bits(),
+                lat.total_ms.to_bits(),
+                "{} on {}",
+                g.name,
+                lat.device
+            );
+        }
+        let best = fleet.best_device(g, ModelKind::Mixed);
+        let wire_best = entry.get("best").unwrap();
+        assert_eq!(wire_best.req_str("device").unwrap(), best.device, "{}", g.name);
+    }
+}
+
+#[test]
+fn explore_round_trips_on_a_variant_device_deterministically() {
+    let fleet = fleet();
+    let svc = fleet.to_service();
+    // Route to a synthetic variant (not a canonical device) to prove the
+    // whole spec fleet is explorable; stay far below the explore caps.
+    let variant = fleet
+        .ids()
+        .into_iter()
+        .find(|id| registry::get(id).unwrap().origin == registry::Origin::Variant)
+        .expect("fleet carries variants");
+    let req = format!(
+        "{{\"op\":\"explore\",\"device\":\"{variant}\",\"candidates\":8,\
+         \"generations\":1,\"children\":4,\"seed\":11}}"
+    );
+    let first = svc.handle(&req);
+    let resp = Value::parse(&first).unwrap();
+    assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(true), "{first}");
+    assert_eq!(resp.req_str("device").unwrap(), variant);
+    let front = resp.req_arr("front").unwrap();
+    assert!(!front.is_empty(), "explore returned an empty front");
+    for m in front {
+        assert!(m.req_f64("latency_ms").unwrap() > 0.0);
+        assert!(m.req_f64("cost").unwrap() > 0.0);
+    }
+    // Byte-identical on repeat: fronts are reproducible from the request.
+    assert_eq!(svc.handle(&req), first, "explore response is not deterministic");
+}

@@ -8,7 +8,8 @@
 //! through `Value::parse(..).to_string()`), so the fixtures themselves can
 //! stay pretty-printed.
 
-use annette::hw::device::DeviceSpec;
+use annette::hw::device::Datasheet;
+use annette::hw::spec::{self as devspec, DeviceSpec};
 use annette::json::Value;
 use annette::mapping::{MappingModel, MappingRule, FORMAT as MAPPING_FORMAT};
 use annette::models::platform::{PlatformModel, FORMAT as MODEL_FORMAT};
@@ -17,6 +18,7 @@ const MODEL_GOLDEN_V1: &str = include_str!("golden/platform_model.v1.json");
 const MODEL_GOLDEN: &str = include_str!("golden/platform_model.v2.json");
 const MAPPING_GOLDEN: &str = include_str!("golden/mapping_rules.v1.json");
 const SPEC_GOLDEN: &str = include_str!("golden/device_spec.v1.json");
+const DEVICE_SPEC_GOLDEN: &str = include_str!("golden/device_spec_dpu.v1.json");
 
 /// Compare two canonical JSON strings; on mismatch, panic with the first
 /// divergence and surrounding context from both sides.
@@ -148,7 +150,7 @@ fn mapping_rules_golden_file_still_loads_and_round_trips() {
 #[test]
 fn device_spec_golden_file_still_loads_and_round_trips() {
     let v = Value::parse(SPEC_GOLDEN).unwrap();
-    let spec = DeviceSpec::from_value(&v)
+    let spec = Datasheet::from_value(&v)
         .expect("the checked-in device-spec fixture no longer loads — schema drifted");
     assert_eq!(spec.name, "golden-spec");
     assert_eq!(spec.peak_gops, 4000.0);
@@ -158,7 +160,7 @@ fn device_spec_golden_file_still_loads_and_round_trips() {
         (spec.channel_align, spec.input_align, spec.spatial_align),
         (64, 64, 1)
     );
-    assert_canonical_eq(&spec.to_value().to_string(), &canonical(SPEC_GOLDEN), "DeviceSpec");
+    assert_canonical_eq(&spec.to_value().to_string(), &canonical(SPEC_GOLDEN), "Datasheet");
 }
 
 #[test]
@@ -192,4 +194,46 @@ fn golden_model_survives_a_disk_round_trip() {
         assert_eq!(a.mixed, b.mixed);
         assert_eq!(a.stat, b.stat);
     }
+}
+
+#[test]
+fn device_spec_v1_golden_file_still_loads_and_round_trips() {
+    let v = Value::parse(DEVICE_SPEC_GOLDEN).unwrap();
+    let spec = DeviceSpec::from_value(&v)
+        .expect("the checked-in annette-device.v1 fixture no longer loads — schema drifted");
+    assert_eq!(spec.id, "dpu-zcu102");
+    assert_eq!(spec.family, "dpu");
+    assert_eq!(spec.datasheet.name, "ZCU102-DPU-sim");
+    assert_eq!(spec.datasheet.peak_gops, 2400.0);
+    assert_eq!(spec.noise_sigma, 0.01);
+    assert_eq!(spec.classes[0].overhead_us, 35.0);
+    assert_eq!(spec.classes[0].base_eff.eval(999), 0.82);
+    assert_eq!(spec.classes[5].mem_eff.eval(0), 0.9);
+    assert_eq!(spec.fusion.len(), 7);
+    assert!(spec.chains.is_empty());
+    assert_eq!(spec.elide, vec!["flatten".to_string()]);
+    assert!(spec.spill.is_none());
+    // Load → save reproduces the canonical golden text byte for byte.
+    assert_canonical_eq(
+        &spec.to_value().to_string(),
+        &canonical(DEVICE_SPEC_GOLDEN),
+        "DeviceSpec",
+    );
+}
+
+#[test]
+fn canonical_dpu_spec_has_not_drifted_from_the_golden_file() {
+    // The fixture *is* the shipped canonical spec: any constant change in
+    // `hw::spec::dpu_zcu102` (or any serialization change) fails here before
+    // it silently invalidates every persisted user spec and fitted model.
+    assert_canonical_eq(
+        &devspec::dpu_zcu102().to_value().to_string(),
+        &canonical(DEVICE_SPEC_GOLDEN),
+        "canonical dpu-zcu102 spec",
+    );
+    // The version string is pinned; bumped documents are rejected.
+    assert_eq!(devspec::FORMAT, "annette-device.v1");
+    let bumped = DEVICE_SPEC_GOLDEN.replace("annette-device.v1", "annette-device.v2");
+    let err = DeviceSpec::from_value(&Value::parse(&bumped).unwrap()).unwrap_err();
+    assert_eq!(err.kind(), "invalid");
 }

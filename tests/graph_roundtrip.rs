@@ -5,14 +5,14 @@ use annette::coordinator::orchestrator::run_campaign;
 use annette::estim::estimator::Estimator;
 use annette::graph::serial;
 use annette::hw::device::Device;
-use annette::hw::dpu::DpuDevice;
+use annette::hw::spec::SpecDevice;
 use annette::models::layer::ModelKind;
 use annette::models::platform::PlatformModel;
 use annette::zoo;
 
 #[test]
 fn random_graphs_roundtrip_bit_identically() {
-    let dev = DpuDevice::zcu102();
+    let dev = SpecDevice::builtin("dpu-zcu102");
     let data = run_campaign(&dev, 1, 4);
     let model = PlatformModel::fit(&dev.spec(), &data);
     let est = Estimator::new(&model);

@@ -60,12 +60,13 @@ fn conv_bn_act_chain_folds_into_a_single_unit_on_the_dpu() {
 }
 
 #[test]
-fn learned_rules_degenerate_to_the_pairwise_table_on_every_device() {
+fn learned_rules_degenerate_to_the_pairwise_table_on_canonical_devices() {
     // On the simulated devices every learned chain is implied by the learned
     // pairs and every elided op is already IR-uncosted, so a model reduced
     // to its pairwise table must produce bit-identical estimates — this is
     // the "fits stay numerically identical to pre-refactor" guarantee.
-    for id in registry::ids() {
+    for entry in registry::canonical() {
+        let id = entry.id;
         let fitted = fit_device(id, 1, None).expect("campaign");
         let pairwise = PlatformModel {
             spec: fitted.model.spec.clone(),
@@ -104,7 +105,8 @@ fn estimator_units_match_simulator_ground_truth_fusion() {
     // Single source of mapping truth, learned end to end: the unit structure
     // the estimator predicts equals the fusion the simulator actually
     // performed (same layers fused into the same roots).
-    for id in registry::ids() {
+    for entry in registry::canonical() {
+        let id = entry.id;
         let fitted = fit_device(id, 3, None).expect("campaign");
         let g = zoo::mobilenet::mobilenet_v1(224, 1000);
         let profile = fitted.device.profile(&g, 1, 7);

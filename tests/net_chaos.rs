@@ -18,7 +18,7 @@ use annette::coordinator::orchestrator::run_campaign;
 use annette::coordinator::{Server, ServerConfig, Service};
 use annette::graph::serial::graph_to_value;
 use annette::hw::device::Device;
-use annette::hw::dpu::DpuDevice;
+use annette::hw::spec::SpecDevice;
 use annette::models::platform::PlatformModel;
 use annette::obs;
 use annette::zoo::nasbench;
@@ -29,7 +29,7 @@ use net_util::{error_kind, expect_error, FaultClient};
 fn model() -> &'static PlatformModel {
     static MODEL: OnceLock<PlatformModel> = OnceLock::new();
     MODEL.get_or_init(|| {
-        let dev = DpuDevice::zcu102();
+        let dev = SpecDevice::builtin("dpu-zcu102");
         let data = run_campaign(&dev, 1, 4);
         PlatformModel::fit(&dev.spec(), &data)
     })

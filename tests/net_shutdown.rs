@@ -18,7 +18,7 @@ use annette::coordinator::orchestrator::run_campaign;
 use annette::coordinator::{Server, ServerConfig, Service};
 use annette::graph::serial::graph_to_value;
 use annette::hw::device::Device;
-use annette::hw::dpu::DpuDevice;
+use annette::hw::spec::SpecDevice;
 use annette::json::Value;
 use annette::models::platform::PlatformModel;
 use annette::obs;
@@ -37,7 +37,7 @@ fn graceful_drain_completes_in_flight_work_and_flushes_telemetry() {
         "trace sink must be unresolved at test start (single test per binary)"
     );
 
-    let dev = DpuDevice::zcu102();
+    let dev = SpecDevice::builtin("dpu-zcu102");
     let data = run_campaign(&dev, 1, 4);
     let svc = Service::new(PlatformModel::fit(&dev.spec(), &data));
 

@@ -8,7 +8,7 @@ use annette::coordinator::orchestrator::run_campaign;
 use annette::coordinator::Service;
 use annette::graph::serial::graph_to_value;
 use annette::hw::device::Device;
-use annette::hw::dpu::DpuDevice;
+use annette::hw::spec::SpecDevice;
 use annette::json::Value;
 use annette::models::platform::PlatformModel;
 use annette::obs;
@@ -26,7 +26,7 @@ fn annette_obs_off_disables_all_recording() {
     assert_eq!(sw.elapsed_us(), None);
 
     // Full pipeline traffic: campaign, compile, cache, fan-out, service.
-    let dev = DpuDevice::zcu102();
+    let dev = SpecDevice::builtin("dpu-zcu102");
     let data = run_campaign(&dev, 1, 4);
     let svc = Service::new(PlatformModel::fit(&dev.spec(), &data));
     let net = graph_to_value(&zoo::nasbench::sample_networks(1, 5)[0]).to_string();

@@ -7,7 +7,7 @@ use annette::coordinator::orchestrator::run_campaign;
 use annette::coordinator::Service;
 use annette::graph::serial::graph_to_value;
 use annette::hw::device::Device;
-use annette::hw::dpu::DpuDevice;
+use annette::hw::spec::SpecDevice;
 use annette::json::Value;
 use annette::models::platform::PlatformModel;
 use annette::obs;
@@ -27,7 +27,7 @@ fn tracing_produces_a_loadable_file_without_changing_responses() {
     );
     assert!(obs::trace::active());
 
-    let dev = DpuDevice::zcu102();
+    let dev = SpecDevice::builtin("dpu-zcu102");
     let data = run_campaign(&dev, 1, 4);
     let svc = Service::new(PlatformModel::fit(&dev.spec(), &data));
 

@@ -6,14 +6,14 @@ use annette::coordinator::orchestrator::run_campaign;
 use annette::coordinator::Service;
 use annette::graph::serial::graph_to_value;
 use annette::hw::device::Device;
-use annette::hw::dpu::DpuDevice;
+use annette::hw::spec::SpecDevice;
 use annette::hw::registry;
 use annette::json::Value;
 use annette::models::platform::PlatformModel;
 use annette::zoo;
 
 fn service() -> Service {
-    let dev = DpuDevice::zcu102();
+    let dev = SpecDevice::builtin("dpu-zcu102");
     let data = run_campaign(&dev, 1, 4);
     Service::new(PlatformModel::fit(&dev.spec(), &data))
 }
@@ -185,7 +185,7 @@ fn verbose_units_report_fused_member_ids_and_elided_layers() {
     // A verbose response must expose the mapped unit structure — the fused
     // member *layer ids* per unit (not just a count) and the elided layers —
     // and they must agree exactly with the Estimator's own Estimate.
-    let dev = DpuDevice::zcu102();
+    let dev = SpecDevice::builtin("dpu-zcu102");
     let data = run_campaign(&dev, 1, 4);
     let model = PlatformModel::fit(&dev.spec(), &data);
     let svc = Service::new(model.clone());

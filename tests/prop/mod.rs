@@ -1,5 +1,7 @@
 //! Zero-dependency property-test harness: a seeded generator of randomized
 //! *valid* network graphs built on [`annette::rng::Rng`], plus a shrinker.
+//! The [`specs`] submodule extends the harness to device specs: random
+//! valid `DeviceSpec`s and a mutation pass producing invalid documents.
 //!
 //! Generation walks a random op sequence through [`GraphBuilder`], which
 //! guarantees shape consistency by construction; every emitted graph passes
@@ -8,6 +10,8 @@
 //! graph (producers always precede consumers, and validation never requires
 //! outputs to be consumed), so a failing case shrinks by scanning prefixes
 //! from the shortest up and reporting the first one that still fails.
+
+pub mod specs;
 
 use annette::graph::{Act, Graph, GraphBuilder};
 use annette::rng::{Rng, PHI};

@@ -1,0 +1,212 @@
+//! Seeded generator of randomized **valid-by-construction** device specs,
+//! plus a mutation pass that corrupts a valid document into a specific
+//! schema/constraint violation. Together they drive the spec-fuzzing laws
+//! in `tests/property_suite.rs`: every generated spec must fit end-to-end
+//! (finite error, thread-count-invariant campaigns), every mutated document
+//! must be rejected deterministically with `error_kind: "invalid"` — never
+//! a panic.
+
+use annette::graph::LayerClass;
+use annette::hw::device::Datasheet;
+use annette::hw::spec::{ClassSpec, Curve, DeviceSpec, SpillSpec};
+use annette::json::Value;
+use annette::rng::{Rng, PHI};
+
+fn random_curve(rng: &mut Rng) -> Curve {
+    let steps = rng.range(1, 4);
+    let mut points = Vec::with_capacity(steps);
+    let mut threshold = 0usize;
+    let mut value = 0.05 + 0.9 * rng.uniform();
+    for _ in 0..steps {
+        points.push((threshold, value));
+        threshold += rng.range(4, 64);
+        // Efficiency grows with width on most silicon, but the format does
+        // not require monotone values — only ascending thresholds.
+        value = (value * (0.8 + 0.4 * rng.uniform())).clamp(0.05, 0.95);
+    }
+    Curve { points }
+}
+
+fn random_class(rng: &mut Rng) -> ClassSpec {
+    ClassSpec {
+        overhead_us: 5.0 + 195.0 * rng.uniform(),
+        base_eff: random_curve(rng),
+        mem_eff: random_curve(rng),
+    }
+}
+
+/// Deterministically generate valid spec `index` of the stream identified
+/// by `seed`. Sweeps datasheet magnitudes, alignments, curve shapes, noise,
+/// fusion capability subsets, chains, and the optional spill model.
+pub fn random_spec(seed: u64, index: usize) -> DeviceSpec {
+    let mut rng = Rng::new(seed ^ ((index as u64 + 1).wrapping_mul(PHI)));
+    let align = *rng.pick(&[1usize, 8, 16, 32, 64]);
+    let mut fusion: Vec<(LayerClass, String)> = Vec::new();
+    for &(p, c) in &[
+        (LayerClass::Conv, "batchnorm"),
+        (LayerClass::Conv, "act"),
+        (LayerClass::DwConv, "batchnorm"),
+        (LayerClass::DwConv, "act"),
+        (LayerClass::Fc, "batchnorm"),
+        (LayerClass::Fc, "act"),
+        (LayerClass::Elem, "act"),
+    ] {
+        if rng.range(0, 3) > 0 {
+            fusion.push((p, c.to_string()));
+        }
+    }
+    let chains = if rng.range(0, 2) == 0 {
+        vec![(LayerClass::Conv, vec!["batchnorm".to_string(), "act".to_string()])]
+    } else {
+        Vec::new()
+    };
+    let mut elide = vec!["flatten".to_string()];
+    if rng.range(0, 3) == 0 {
+        elide.push("softmax".to_string());
+    }
+    DeviceSpec {
+        id: format!("fuzz-{index:04}"),
+        family: rng.pick(&["sa", "vec", "dpu", "npu"]).to_string(),
+        paper_name: format!("Fuzzed device #{index}"),
+        datasheet: Datasheet {
+            name: format!("fuzz-{index:04}-sim"),
+            peak_gops: 100.0 + 9900.0 * rng.uniform(),
+            bandwidth_gbs: 5.0 + 55.0 * rng.uniform(),
+            bytes_per_elem: *rng.pick(&[1.0f64, 2.0]),
+            channel_align: align,
+            input_align: *rng.pick(&[1usize, align.max(1)]),
+            spatial_align: *rng.pick(&[1usize, 4, 8]),
+        },
+        noise_sigma: 0.03 * rng.uniform(),
+        classes: std::array::from_fn(|_| random_class(&mut rng)),
+        fusion,
+        chains,
+        elide,
+        spill: (rng.range(0, 2) == 0).then(|| SpillSpec {
+            buffer_bytes: (1.0 + 15.0 * rng.uniform()) * 1024.0 * 1024.0,
+            mem_penalty: 4.0 * rng.uniform(),
+        }),
+    }
+}
+
+fn set(v: &mut Value, key: &str, new: Value) {
+    if let Value::Obj(fields) = v {
+        for (k, val) in fields.iter_mut() {
+            if k == key {
+                *val = new;
+                return;
+            }
+        }
+        fields.push((key.to_string(), new));
+    }
+}
+
+fn remove(v: &mut Value, key: &str) {
+    if let Value::Obj(fields) = v {
+        fields.retain(|(k, _)| k != key);
+    }
+}
+
+fn with_class<F: FnOnce(&mut Value)>(doc: &mut Value, class: &str, f: F) {
+    if let Value::Obj(fields) = doc {
+        for (k, v) in fields.iter_mut() {
+            if k == "classes" {
+                if let Value::Obj(classes) = v {
+                    for (name, cls) in classes.iter_mut() {
+                        if name == class {
+                            f(cls);
+                            return;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Corrupt `spec`'s serialized document into one of the format's rejection
+/// cases, chosen by `seed`. Returns a human-readable description of the
+/// injected fault plus the malformed document. Every returned document must
+/// fail `DeviceSpec::from_value` with `error_kind: "invalid"`.
+pub fn mutate_invalid(spec: &DeviceSpec, seed: u64) -> (&'static str, Value) {
+    let mut doc = spec.to_value();
+    let mut rng = Rng::new(seed.wrapping_mul(PHI) ^ 0xBAD5_BEEF);
+    let which = rng.range(0, 12);
+    let what = match which {
+        0 => {
+            set(&mut doc, "format", Value::str("annette-device.v9"));
+            "unsupported format version"
+        }
+        1 => {
+            remove(&mut doc, *rng.pick(&["datasheet", "classes", "fusion", "elide"]));
+            "missing required top-level field"
+        }
+        2 => {
+            set(&mut doc, "noise_sigma", Value::str("quiet"));
+            "noise_sigma with a non-numeric type"
+        }
+        3 => {
+            set(&mut doc, "noise_sigma", Value::Num(-0.25));
+            "negative noise_sigma"
+        }
+        4 => {
+            set(&mut doc, "id", Value::str(""));
+            "empty id"
+        }
+        5 => {
+            with_class(&mut doc, "conv", |c| set(c, "base_eff", Value::Arr(Vec::new())));
+            "empty efficiency curve"
+        }
+        6 => {
+            with_class(&mut doc, "dwconv", |c| {
+                let pts = vec![
+                    Value::Arr(vec![Value::int(0), Value::num(0.5)]),
+                    Value::Arr(vec![Value::int(8), Value::num(0.6)]),
+                    Value::Arr(vec![Value::int(8), Value::num(0.7)]),
+                ];
+                set(c, "mem_eff", Value::Arr(pts));
+            });
+            "non-ascending curve thresholds"
+        }
+        7 => {
+            with_class(&mut doc, "pool", |c| {
+                let pts = vec![Value::Arr(vec![Value::int(0), Value::num(-0.4)])];
+                set(c, "base_eff", Value::Arr(pts));
+            });
+            "non-positive curve value"
+        }
+        8 => {
+            if let Some(ds) = doc.get("datasheet") {
+                let mut ds = ds.clone();
+                set(&mut ds, "channel_align", Value::int(0));
+                set(&mut doc, "datasheet", ds);
+            }
+            "zero channel alignment"
+        }
+        9 => {
+            if let Some(ds) = doc.get("datasheet") {
+                let mut ds = ds.clone();
+                set(&mut ds, "peak_gops", Value::Num(-2400.0));
+                set(&mut doc, "datasheet", ds);
+            }
+            "negative peak_gops"
+        }
+        10 => {
+            let bogus = Value::Arr(vec![Value::Obj(vec![
+                ("producer".to_string(), Value::str("warpdrive")),
+                ("consumer".to_string(), Value::str("act")),
+            ])]);
+            set(&mut doc, "fusion", bogus);
+            "unknown fusion producer class"
+        }
+        _ => {
+            let bogus = Value::Obj(vec![
+                ("buffer_bytes".to_string(), Value::Num(-1.0)),
+                ("mem_penalty".to_string(), Value::Num(3.0)),
+            ]);
+            set(&mut doc, "spill", bogus);
+            "negative spill buffer"
+        }
+    };
+    (what, doc)
+}

@@ -19,6 +19,13 @@
 //! Tier-1 runs 200 seeded graphs per device. The nightly CI job raises the
 //! count and randomizes the seed via environment variables:
 //! `ANNETTE_PROP_GRAPHS` (count) and `ANNETTE_PROP_SEED` (stream seed).
+//!
+//! The suite also fuzzes the **device-spec layer** (`prop::specs`): random
+//! valid `annette-device.v1` specs must fit end-to-end (finite error,
+//! campaigns invariant to the worker-thread count), and documents corrupted
+//! by the mutation pass must be rejected deterministically with
+//! `error_kind: "invalid"` — never a panic. `ANNETTE_PROP_SPECS` scales the
+//! number of fuzzed specs in the nightly job.
 
 mod prop;
 
@@ -31,6 +38,7 @@ use annette::models::layer::ModelKind;
 use annette::models::platform::PlatformModel;
 
 const DEFAULT_GRAPHS_PER_DEVICE: usize = 200;
+const DEFAULT_FUZZED_SPECS: usize = 6;
 const DEFAULT_SEED: u64 = 0xA11E77E;
 
 fn env_u64(name: &str, default: u64) -> u64 {
@@ -146,11 +154,14 @@ fn check_graph(est: &Estimator, g: &Graph) -> Option<String> {
 }
 
 #[test]
-fn properties_hold_on_every_registry_device() {
+fn properties_hold_on_every_canonical_device() {
+    // The canonical trio covers all three simulator personalities (spill,
+    // fusion sets, alignment); the 20-variant fleet is exercised by
+    // tests/fleet_scale.rs and the spec-fuzzing laws below.
     let n = env_u64("ANNETTE_PROP_GRAPHS", DEFAULT_GRAPHS_PER_DEVICE as u64) as usize;
     let seed = env_u64("ANNETTE_PROP_SEED", DEFAULT_SEED);
-    for entry in registry::entries() {
-        let device = (entry.build)();
+    for entry in registry::canonical() {
+        let device = entry.build();
         let bench = run_campaign(device.as_ref(), 1, 4);
         let model = PlatformModel::fit(&device.spec(), &bench);
         let est = Estimator::new(&model);
@@ -286,5 +297,71 @@ fn every_prefix_of_a_generated_graph_is_valid() {
         let text = serial::graph_to_value(&p).to_string();
         let back = serial::graph_from_value(&Value::parse(&text).unwrap()).unwrap();
         assert_eq!(p, back);
+    }
+}
+
+#[test]
+fn random_valid_specs_fit_end_to_end_with_finite_error() {
+    use annette::hw::spec::SpecDevice;
+    use annette::metrics::mape;
+    use annette::zoo;
+
+    let n = env_u64("ANNETTE_PROP_SPECS", DEFAULT_FUZZED_SPECS as u64) as usize;
+    let seed = env_u64("ANNETTE_PROP_SEED", DEFAULT_SEED);
+    let nets = zoo::table2();
+    for i in 0..n {
+        let spec = prop::specs::random_spec(seed, i);
+        spec.validate()
+            .unwrap_or_else(|e| panic!("generated spec #{i} (seed {seed:#x}) invalid: {e}"));
+        let dev = SpecDevice::new(spec).expect("validated spec must realize");
+
+        // Law 1: the whole stack runs on an arbitrary valid spec — campaign,
+        // fit, estimate — and the fitted model's zoo error is finite.
+        let bench = run_campaign(&dev, 1, 4);
+        let model = PlatformModel::fit(&annette::hw::device::Device::spec(&dev), &bench);
+        let est = Estimator::new(&model);
+        let truth: Vec<f64> = nets
+            .iter()
+            .map(|e| annette::hw::device::Device::profile(&dev, &e.graph, 5, 7).total_ms())
+            .collect();
+        let preds: Vec<f64> = nets
+            .iter()
+            .map(|e| est.estimate_with(&e.graph, ModelKind::Mixed).total_ms())
+            .collect();
+        assert!(truth.iter().all(|t| t.is_finite() && *t > 0.0), "spec #{i}: bogus truth");
+        let err = mape(&preds, &truth);
+        assert!(err.is_finite(), "spec #{i} (seed {seed:#x}): MAPE is {err}");
+
+        // Law 2: campaigns are invariant to the worker-thread count, so the
+        // fitted model (and everything downstream) is too.
+        let serial = run_campaign(&dev, 1, 1);
+        assert_eq!(
+            serial.to_value().to_string(),
+            bench.to_value().to_string(),
+            "spec #{i} (seed {seed:#x}): campaign differs between 1 and 4 threads"
+        );
+    }
+}
+
+#[test]
+fn mutated_invalid_specs_are_rejected_deterministically_and_never_panic() {
+    use annette::hw::spec::DeviceSpec;
+
+    let n = (env_u64("ANNETTE_PROP_SPECS", DEFAULT_FUZZED_SPECS as u64) as usize) * 6;
+    let seed = env_u64("ANNETTE_PROP_SEED", DEFAULT_SEED);
+    for i in 0..n {
+        let spec = prop::specs::random_spec(seed ^ 0xBAD, i);
+        let (what, doc) = prop::specs::mutate_invalid(&spec, seed.wrapping_add(i as u64));
+        let attempt = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            DeviceSpec::from_value(&doc)
+        }));
+        let result = attempt.unwrap_or_else(|_| {
+            panic!("case #{i} ({what}): from_value panicked on an invalid document")
+        });
+        let err = result.expect_err(what);
+        assert_eq!(err.kind(), "invalid", "case #{i} ({what}): wrong kind: {err}");
+        // Rejection is deterministic: same document, same error, every time.
+        let again = DeviceSpec::from_value(&doc).expect_err(what);
+        assert_eq!(err.to_string(), again.to_string(), "case #{i} ({what})");
     }
 }

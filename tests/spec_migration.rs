@@ -1,0 +1,177 @@
+//! The spec-migration gate: the declarative, spec-realized devices must be
+//! **bit-identical** to the retired handwritten simulators before (and
+//! after) the old code paths go away. The frozen references live in
+//! `hw::sim` (`SimDevice::legacy_dpu` / `legacy_vpu` / `legacy_tpu`, the
+//! exact constants of the deleted `dpu.rs` / `vpu.rs` / `tpu.rs`); the
+//! candidates are the canonical `annette-device.v1` specs realized by
+//! `SpecDevice`. Equality is checked at every stacking level:
+//!
+//! 1. datasheets,
+//! 2. raw probe profiles (per-layer f64 bits + fusion attribution) across
+//!    the zoo and a randomized property-graph stream,
+//! 3. whole campaign `BenchData` documents (canonical-text diff),
+//! 4. fitted `PlatformModel` files (canonical-text diff),
+//! 5. estimates for all four model families across the zoo and 200
+//!    property graphs.
+//!
+//! Passing this suite is the deletion gate: while it is green, replacing a
+//! handwritten device with its spec cannot have changed a single answer.
+
+// Only `random_graph` is used here; the shrinker stays with property_suite.
+#[allow(dead_code)]
+mod prop;
+
+use annette::coordinator::orchestrator::run_campaign;
+use annette::estim::estimator::Estimator;
+use annette::graph::Graph;
+use annette::hw::device::Device;
+use annette::hw::sim::SimDevice;
+use annette::hw::spec::SpecDevice;
+use annette::models::layer::ModelKind;
+use annette::models::platform::PlatformModel;
+use annette::zoo;
+
+/// Property-graph stream reserved for the migration suite (disjoint from
+/// the property_suite default so failures don't alias).
+const MIGRATION_SEED: u64 = 0x5EC_D1FF;
+
+/// The three canonical spec/legacy pairs, registry id first.
+fn pairs() -> Vec<(&'static str, SpecDevice, SimDevice)> {
+    vec![
+        ("dpu-zcu102", SpecDevice::builtin("dpu-zcu102"), SimDevice::legacy_dpu()),
+        ("vpu-ncs2", SpecDevice::builtin("vpu-ncs2"), SimDevice::legacy_vpu()),
+        ("tpu-edge", SpecDevice::builtin("tpu-edge"), SimDevice::legacy_tpu()),
+    ]
+}
+
+fn zoo_nets() -> Vec<Graph> {
+    zoo::table2().into_iter().map(|e| e.graph).collect()
+}
+
+fn prop_nets(n: usize) -> Vec<Graph> {
+    (0..n).map(|i| prop::random_graph(MIGRATION_SEED, i)).collect()
+}
+
+#[test]
+fn datasheets_are_identical() {
+    for (id, spec_dev, legacy) in pairs() {
+        assert_eq!(spec_dev.spec(), legacy.spec(), "{id}: datasheet drifted");
+    }
+}
+
+#[test]
+fn probe_profiles_are_bit_identical() {
+    let mut nets = zoo_nets();
+    nets.extend(prop_nets(60));
+    for (id, spec_dev, legacy) in pairs() {
+        for (gi, g) in nets.iter().enumerate() {
+            // Both the single-run noisy regime campaigns use and a
+            // multi-run averaged one, under two different seed streams.
+            for (runs, seed) in [(1usize, 7u64), (5, 0xFEED + gi as u64)] {
+                let a = spec_dev.profile(g, runs, seed);
+                let b = legacy.profile(g, runs, seed);
+                assert_eq!(a.layers.len(), b.layers.len(), "{id}/{}", g.name);
+                for (la, lb) in a.layers.iter().zip(&b.layers) {
+                    assert_eq!(la.layer_id, lb.layer_id, "{id}/{}", g.name);
+                    assert_eq!(
+                        la.ms.to_bits(),
+                        lb.ms.to_bits(),
+                        "{id}/{} layer {} ({runs} runs, seed {seed}): \
+                         spec {} ms vs legacy {} ms",
+                        g.name,
+                        la.layer_id,
+                        la.ms,
+                        lb.ms
+                    );
+                    assert_eq!(la.fused_into, lb.fused_into, "{id}/{} fusion attribution", g.name);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn campaign_bench_data_is_bit_identical() {
+    for (id, spec_dev, legacy) in pairs() {
+        let a = run_campaign(&spec_dev, 1, 4);
+        let b = run_campaign(&legacy, 1, 4);
+        // Canonical-text diff of the whole persisted document: micro
+        // records, fusion/chain/elision probes, device name — everything.
+        assert_eq!(
+            a.to_value().to_string(),
+            b.to_value().to_string(),
+            "{id}: campaign BenchData diverged"
+        );
+    }
+}
+
+#[test]
+fn fitted_models_are_bit_identical_files() {
+    let dir = std::env::temp_dir().join("annette-spec-migration-test");
+    std::fs::create_dir_all(&dir).unwrap();
+    for (id, spec_dev, legacy) in pairs() {
+        let ma = PlatformModel::fit(&spec_dev.spec(), &run_campaign(&spec_dev, 2, 4));
+        let mb = PlatformModel::fit(&legacy.spec(), &run_campaign(&legacy, 2, 4));
+        assert_eq!(
+            ma.to_value().to_string(),
+            mb.to_value().to_string(),
+            "{id}: fitted PlatformModel diverged"
+        );
+        // Same equality through real files: what lands on disk for the
+        // spec-fitted model is byte-for-byte what the legacy fit produced.
+        let pa = dir.join(format!("{id}-spec.json"));
+        let pb = dir.join(format!("{id}-legacy.json"));
+        ma.save(&pa).unwrap();
+        mb.save(&pb).unwrap();
+        assert_eq!(
+            std::fs::read(&pa).unwrap(),
+            std::fs::read(&pb).unwrap(),
+            "{id}: persisted model files differ"
+        );
+    }
+}
+
+#[test]
+fn estimates_are_bit_identical_on_zoo_and_property_graphs() {
+    let mut nets = zoo_nets();
+    nets.extend(prop_nets(200));
+    for (id, spec_dev, legacy) in pairs() {
+        let ma = PlatformModel::fit(&spec_dev.spec(), &run_campaign(&spec_dev, 1, 4));
+        let mb = PlatformModel::fit(&legacy.spec(), &run_campaign(&legacy, 1, 4));
+        let ea = Estimator::new(&ma);
+        let eb = Estimator::new(&mb);
+        for g in &nets {
+            for kind in ModelKind::ALL {
+                let a = ea.estimate_with(g, kind);
+                let b = eb.estimate_with(g, kind);
+                assert_eq!(
+                    a.total_ms().to_bits(),
+                    b.total_ms().to_bits(),
+                    "{id}/{}/{kind:?}: totals diverged",
+                    g.name
+                );
+                assert_eq!(a.units.len(), b.units.len(), "{id}/{}/{kind:?}", g.name);
+                for (ua, ub) in a.units.iter().zip(&b.units) {
+                    assert_eq!(ua.root, ub.root, "{id}/{}/{kind:?}", g.name);
+                    assert_eq!(ua.members, ub.members, "{id}/{}/{kind:?}", g.name);
+                    assert_eq!(ua.ms.to_bits(), ub.ms.to_bits(), "{id}/{}/{kind:?}", g.name);
+                }
+                assert_eq!(a.elided, b.elided, "{id}/{}/{kind:?}", g.name);
+            }
+        }
+    }
+}
+
+#[test]
+fn handwritten_device_modules_stay_deleted() {
+    // The gate cuts both ways: once the spec devices are proven
+    // bit-identical, the handwritten modules must not come back.
+    let hw = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("src/hw");
+    for retired in ["dpu.rs", "vpu.rs", "tpu.rs"] {
+        assert!(
+            !hw.join(retired).exists(),
+            "src/hw/{retired} re-appeared — devices are specs now; extend \
+             hw::spec instead and keep the migration gate green"
+        );
+    }
+}

@@ -11,14 +11,14 @@ use annette::estim::compiled::{CompiledModel, GraphCache, GRAPH_CACHE_SHARDS};
 use annette::estim::estimator::Estimator;
 use annette::graph::Graph;
 use annette::hw::device::Device;
-use annette::hw::dpu::DpuDevice;
+use annette::hw::spec::SpecDevice;
 use annette::hw::registry;
 use annette::models::layer::ModelKind;
 use annette::models::platform::PlatformModel;
 use annette::zoo;
 
 fn model() -> PlatformModel {
-    let dev = DpuDevice::zcu102();
+    let dev = SpecDevice::builtin("dpu-zcu102");
     let data = run_campaign(&dev, 1, 4);
     PlatformModel::fit(&dev.spec(), &data)
 }
@@ -130,7 +130,7 @@ fn cross_model_recompiles_survive_sharding() {
         .iter()
         .take(2)
         .map(|entry| {
-            let dev = (entry.build)();
+            let dev = entry.build();
             let data = run_campaign(dev.as_ref(), 1, 4);
             CompiledModel::compile(&PlatformModel::fit(&dev.spec(), &data))
         })
